@@ -1,0 +1,125 @@
+"""Benchmark harness: one function per paper table/figure + roofline driver.
+
+Default run = the paper-reproduction suite (simulator-based, real small-model
+training) + kernel microbenches + policy-generation cost.  Dry-run/roofline
+cells are produced by ``python -m repro.launch.dryrun --all`` (hours of XLA
+compiles) and read back here from artifacts/ when present.
+
+Prints ``name,us_per_call,derived`` CSV per the harness contract.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+sys.path.insert(0, str(ROOT))
+
+
+def bench_kernels():
+    """Microbench the three Pallas kernels (interpret) vs their oracles."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ref
+    from repro.kernels.flash_attention import flash_attention
+    from repro.kernels.gossip_mix import gossip_mix
+    from repro.kernels.rwkv_scan import rwkv_scan
+
+    rows = {}
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    q = jax.random.normal(ks[0], (1, 256, 4, 64))
+    k = jax.random.normal(ks[1], (1, 256, 2, 64))
+    v = jax.random.normal(ks[2], (1, 256, 2, 64))
+    r = jax.random.normal(ks[0], (1, 128, 2, 32)) * 0.5
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (1, 128, 2, 32)) + 2.0)
+    u = jax.random.normal(ks[4], (2, 32)) * 0.1
+    x = jax.random.normal(ks[0], (65536,))
+    cases = (
+        ("flash_attention_ref", lambda: ref.reference_attention(q, k, v)),
+        ("flash_attention_interp", lambda: flash_attention(q, k, v, interpret=True)),
+        ("rwkv_ref", lambda: ref.reference_rwkv(r, r, r, w, u)),
+        ("rwkv_interp", lambda: rwkv_scan(r, r, r, w, u, chunk=32, interpret=True)),
+        ("gossip_mix_ref", lambda: ref.reference_gossip_mix(x, x, x, 0.3)),
+        ("gossip_mix_interp", lambda: gossip_mix(x, x, x, jnp.float32(0.3), interpret=True)),
+    )
+    for name, fn in cases:
+        jax.block_until_ready(fn())  # warm/compile
+        t0 = time.time()
+        jax.block_until_ready(fn())
+        rows[name] = (time.time() - t0) * 1e6
+        print(f"{name},{rows[name]:.0f},interpret-mode-correctness-path")
+    return rows
+
+
+def bench_roofline_summary():
+    """Summarize dry-run artifacts (if present) into roofline terms."""
+    from repro.analysis.roofline import from_record
+    from repro.configs.base import SHAPES
+
+    path = ROOT / "artifacts" / "dryrun" / "records.jsonl"
+    if not path.exists():
+        print("roofline/none,0,run `python -m repro.launch.dryrun --all --out "
+              "artifacts/dryrun/records.jsonl` first")
+        return {}
+    rows = {}
+    with open(path) as f:
+        for line in f:
+            rec = json.loads(line)
+            if not rec.get("ok"):
+                continue
+            r = from_record(rec, SHAPES[rec["shape"]])
+            key = f"{rec['mesh']}/{rec['arch']}/{rec['shape']}"
+            rows[key] = dict(
+                compute_s=r.compute_s, memory_s=r.memory_s,
+                collective_s=r.collective_s, dominant=r.dominant,
+                useful_ratio=r.useful_ratio, fraction=r.roofline_fraction,
+            )
+            print(f"roofline/{key},0,"
+                  f"c={r.compute_s:.2e}s_m={r.memory_s:.2e}s_x={r.collective_s:.2e}s_"
+                  f"dom={r.dominant}_frac={r.roofline_fraction:.3f}")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--suite", default="all",
+                    choices=["all", "paper", "kernels", "roofline", "quick"])
+    ap.add_argument("--events", type=int, default=4000)
+    args = ap.parse_args()
+
+    from benchmarks import paper_tables as pt
+
+    out = {}
+    if args.suite in ("all", "kernels", "quick"):
+        out["kernels"] = bench_kernels()
+    if args.suite in ("all", "paper"):
+        out["policy_generation"] = pt.bench_policy_generation()
+        out["epoch_time_hetero"] = pt.bench_epoch_time(hetero=True)
+        out["epoch_time_homog"] = pt.bench_epoch_time(hetero=False)
+        out["ablation_fig7"] = pt.bench_ablation_fig7()
+        out["convergence"] = pt.bench_convergence(events=args.events)
+        out["convergence_hom"] = pt.bench_convergence_homogeneous(events=args.events)
+        out["scalability"] = pt.bench_scalability()
+        out["accuracy"] = pt.bench_accuracy_tables(events=args.events)
+        out["noniid"] = pt.bench_noniid(events=args.events)
+        out["nonuniform"] = pt.bench_nonuniform_sizes()
+        out["ps_baseline"] = pt.bench_ps_baseline(events=args.events)
+        out["monitor_ext"] = pt.bench_monitor_extension(events=args.events)
+    if args.suite in ("all", "roofline", "quick"):
+        out["roofline"] = bench_roofline_summary()
+
+    art = ROOT / "artifacts"
+    art.mkdir(exist_ok=True)
+    with open(art / "bench_results.json", "w") as f:
+        json.dump(out, f, indent=1, default=str)
+    print(f"\nwrote artifacts/bench_results.json ({len(out)} suites)")
+
+
+if __name__ == "__main__":
+    main()

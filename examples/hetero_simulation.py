@@ -1,0 +1,78 @@
+"""Reproduce the paper's Fig. 2 scenario: dynamic heterogeneous links.
+
+A link that is fast at T1 becomes slow at T2 (the SAPS-PSGD failure mode,
+paper §I).  NetMax's Monitor re-detects and re-routes; a static policy
+(frozen after the first refresh) does not.
+
+    PYTHONPATH=src python examples/hetero_simulation.py
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np
+
+from repro.core.monitor import NetworkMonitor
+from repro.core.nettime import homogeneous_times
+
+
+def main():
+    M = 6
+    alpha = 0.1
+    mon = NetworkMonitor(M, alpha=alpha, K=8, R=8)
+
+    # T1: link (2,3) is fast, link (0,1) slow.
+    T1 = homogeneous_times(M, 0.02)
+    T1[0, 1] = T1[1, 0] = 0.5
+    mon.collect({i: T1[i] for i in range(M)})
+    p1 = mon.step()
+    print("T1: slow link (0,1)")
+    print(f"  P[0,1] = {p1.P[0,1]:.4f}  (vs fast mean {p1.P[0,2:].mean():.4f})")
+    print(f"  lambda2={p1.lambda2:.4f}  T_conv={p1.T_convergence:.3f}s")
+
+    # T2: the network CHANGES — (0,1) recovers, (2,3) degrades 25x.
+    T2 = homogeneous_times(M, 0.02)
+    T2[2, 3] = T2[3, 2] = 0.5
+    mon.collect({i: T2[i] for i in range(M)})
+    p2 = mon.step()
+    print("\nT2: slow link moved to (2,3) — Monitor re-detects:")
+    print(f"  P[0,1] = {p2.P[0,1]:.4f}  (recovered link re-used)")
+    print(f"  P[2,3] = {p2.P[2,3]:.4f}  (newly slow link de-preferred)")
+    print(f"  lambda2={p2.lambda2:.4f}  T_conv={p2.T_convergence:.3f}s")
+
+    # A static policy (SAPS-style, frozen from T1) evaluated on T2:
+    from repro.core import consensus, theory
+
+    d = np.ones((M, M)) - np.eye(M)
+    t_static = theory.convergence_time(
+        theory.global_step_time(p1.P, T2, d),
+        theory.lambda2(consensus.build_Y(p1.P, alpha, p1.rho, d, T=T2)),
+        1e-2,
+    )
+    import numpy as _np
+
+    print("\nModeled convergence time on the T2 network:")
+    if _np.isfinite(t_static):
+        print(f"  frozen-T1 policy: {t_static:.3f}s")
+        print(f"  re-optimized:     {p2.T_convergence:.3f}s "
+              f"({t_static / p2.T_convergence:.2f}x faster by adapting)")
+    else:
+        print("  frozen-T1 policy: NOT CONVERGENT under the T2 times "
+              "(lambda >= 1: the stale policy no longer equalizes worker "
+              "progress - the SAPS-PSGD failure mode)")
+        print(f"  re-optimized:     {p2.T_convergence:.3f}s")
+
+    # Worker failure: worker 5 stops reporting.
+    print("\nWorker 5 dies (3 missed reports) — policy reroutes:")
+    for _ in range(3):
+        mon.collect({i: T2[i] for i in range(M) if i != 5})
+    p3 = mon.step()
+    print(f"  live workers: {mon.live_workers.tolist()}")
+    print(f"  column P[:,5] = {np.round(p3.P[:, 5], 4).tolist()} (all zero)")
+    print(f"  survivors still converge: lambda2={p3.lambda2:.4f} < 1")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Assemble EXPERIMENTS.md from artifacts (dry-run records, bench results)."""
+
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.analysis.roofline import from_record  # noqa: E402
+from repro.configs.base import SHAPES  # noqa: E402
+
+
+def load_records(path):
+    recs = {}
+    for line in open(path):
+        r = json.loads(line)
+        recs[(r["mesh"], r["arch"], r["shape"], r.get("opt", ""))] = r
+    return recs
+
+
+def roofline_rows(recs, mesh):
+    rows = []
+    for (m, a, s, o), r in sorted(recs.items()):
+        if m != mesh or o:
+            continue
+        if r.get("skipped"):
+            rows.append(f"| {a} | {s} | — | — | — | skip | — | — |")
+            continue
+        if not r["ok"]:
+            rows.append(f"| {a} | {s} | FAILED | | | | | |")
+            continue
+        rl = from_record(r, SHAPES[s])
+        rows.append(
+            f"| {a} | {s} | {rl.compute_s:.2e} | {rl.memory_s:.2e} | "
+            f"{rl.collective_s:.2e} | {rl.dominant} | {rl.useful_ratio:.3f} | "
+            f"{rl.roofline_fraction:.4f} |"
+        )
+    return rows
+
+
+def dryrun_rows(recs, mesh):
+    rows = []
+    for (m, a, s, o), r in sorted(recs.items()):
+        if m != mesh or o or not r.get("ok"):
+            continue
+        mem = r.get("memory_analysis", {})
+        temp = mem.get("temp_size_in_bytes", 0) / 1e9
+        arg = mem.get("argument_size_in_bytes", 0) / 1e9
+        coll = ", ".join(
+            f"{k.split('-')[-1] if False else k}:{v:.2e}"
+            for k, v in sorted(r["collective_bytes_per_device"].items())
+        )
+        rows.append(
+            f"| {a} | {s} | {r['program']} | {r.get('M','')} | "
+            f"{r['t_compile_s']:.0f}s | {arg:.2f} | {temp:.2f} | {coll} |"
+        )
+    return rows
+
+
+def main():
+    recs = load_records(ROOT / "artifacts/dryrun/records.jsonl")
+    hdr_roof = ("| arch | shape | compute s | memory s | collective s | dominant | "
+                "6ND/HLO | roofline frac |\n|---|---|---|---|---|---|---|---|")
+    hdr_dry = ("| arch | shape | program | M | compile | args GB/dev | temp GB/dev | "
+               "collective bytes/dev |\n|---|---|---|---|---|---|---|---|")
+    out = {
+        "ROOF16": "\n".join([hdr_roof] + roofline_rows(recs, "16x16")),
+        "ROOF512": "\n".join([hdr_roof] + roofline_rows(recs, "2x16x16")),
+        "DRY16": "\n".join([hdr_dry] + dryrun_rows(recs, "16x16")),
+        "DRY512": "\n".join([hdr_dry] + dryrun_rows(recs, "2x16x16")),
+    }
+    for k, v in out.items():
+        (ROOT / f"artifacts/{k}.md").write_text(v)
+        print(f"wrote artifacts/{k}.md ({v.count(chr(10))} lines)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""§Perf report: baseline vs hillclimb variants for the three chosen cells.
+
+For each record in records_opt.jsonl, prints the three roofline terms and
+deltas vs the matching baseline; also computes the "Pallas projection" for
+the memory term: HBM traffic with attention-internal carry round-trips
+removed (the Pallas flash kernel keeps online-softmax state in VMEM; its
+HBM traffic is just the q/k/v/o streams, which are already counted at the
+scan boundary fusions).
+"""
+
+import gzip
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.analysis.breakdown import Breakdown  # noqa: E402
+from repro.analysis.roofline import HBM_BW, LINK_BW, PEAK_FLOPS  # noqa: E402
+
+
+def attn_internal_bytes(hlo_path: Path) -> tuple[float, float]:
+    """(total bytes, bytes inside chunked_attention scopes) per device."""
+    bd = Breakdown(gzip.open(hlo_path, "rt").read())
+    total = bd.entry_cost().bytes_accessed
+    tops = bd.top(100000)
+    attn = sum(
+        c.value for c in tops["bytes"] if "chunked_attention" in c.scope
+    )
+    return total, attn
+
+
+def load(path):
+    recs = []
+    if Path(path).exists():
+        for line in open(path):
+            recs.append(json.loads(line))
+    return recs
+
+
+def fmt(rec, base=None):
+    c = rec["hlo_flops_per_device"] / PEAK_FLOPS
+    m = rec["hlo_bytes_per_device"] / HBM_BW
+    x = sum(rec["collective_bytes_per_device"].values()) / LINK_BW
+    bound = max(c, m, x)
+    out = (f"  compute={c:8.3f}s  memory={m:8.3f}s  collective={x:8.3f}s  "
+           f"bound={bound:8.3f}s")
+    if base is not None:
+        bc = base["hlo_flops_per_device"] / PEAK_FLOPS
+        bm = base["hlo_bytes_per_device"] / HBM_BW
+        bx = sum(base["collective_bytes_per_device"].values()) / LINK_BW
+        bb = max(bc, bm, bx)
+        out += (f"   Δcompute={100*(c-bc)/bc:+6.1f}%  Δmem={100*(m-bm)/bm:+6.1f}%  "
+                f"Δcoll={100*(x-bx)/max(bx,1e-12):+6.1f}%  Δbound={100*(bound-bb)/bb:+6.1f}%")
+    return out
+
+
+def main():
+    opt = load(ROOT / "artifacts/dryrun/records_opt.jsonl")
+    baselines = {}
+    for r in opt:
+        if r.get("ok") and not r.get("opt") and r.get("gossip") == "ppermute":
+            baselines[(r["arch"], r["shape"])] = r
+    print("== §Perf hillclimb results ==")
+    for r in opt:
+        if not r.get("ok"):
+            if not r.get("skipped"):
+                print(f"FAILED {r['arch']}/{r['shape']} opt={r.get('opt')}: "
+                      f"{r.get('error', '')[:80]}")
+            continue
+        base = baselines.get((r["arch"], r["shape"]))
+        tag = r.get("opt") or f"gossip={r['gossip']}"
+        is_base = base is r
+        print(f"\n{r['arch']}/{r['shape']} [{tag}]{' (baseline)' if is_base else ''}")
+        print(fmt(r, None if is_base else base))
+        if "temp_size_in_bytes" in r.get("memory_analysis", {}):
+            print(f"  temp memory/device: {r['memory_analysis']['temp_size_in_bytes']/1e9:.2f} GB")
+
+    # Pallas projection on the three baseline cells
+    print("\n== Pallas flash-kernel memory projection (attention-internal "
+          "carry traffic held in VMEM) ==")
+    for arch, shape in [("tinyllama-1.1b", "train_4k"), ("stablelm-12b", "train_4k"),
+                        ("llama4-maverick-400b-a17b", "train_4k")]:
+        for name in (f"16x16_{arch}_{shape}_padheads.hlo.gz", f"16x16_{arch}_{shape}.hlo.gz"):
+            p = ROOT / "artifacts/dryrun" / name
+            if p.exists():
+                total, attn = attn_internal_bytes(p)
+                print(f"{arch}/{shape} [{name.split('_')[-1][:-7] or 'base'}]: "
+                      f"memory {total/HBM_BW:.2f}s -> {(total-attn)/HBM_BW:.2f}s "
+                      f"({100*attn/total:.0f}% was attention-internal)")
+                break
+
+
+if __name__ == "__main__":
+    main()

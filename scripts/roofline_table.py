@@ -1,0 +1,59 @@
+"""Render the EXPERIMENTS.md roofline table from dry-run records."""
+
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.analysis.roofline import fix_suggestion, from_record  # noqa: E402
+from repro.configs.base import SHAPES  # noqa: E402
+
+
+def load(mesh_filter=None):
+    recs = {}
+    for line in open(ROOT / "artifacts/dryrun/records.jsonl"):
+        r = json.loads(line)
+        if mesh_filter and r["mesh"] != mesh_filter:
+            continue
+        recs[(r["mesh"], r["arch"], r["shape"])] = r
+    return recs
+
+
+def main(mesh="16x16"):
+    recs = load(mesh)
+    rows = []
+    for (m, a, s), r in sorted(recs.items()):
+        if r.get("skipped"):
+            rows.append((a, s, None, r.get("reason", "skipped")))
+            continue
+        if not r["ok"]:
+            rows.append((a, s, None, "FAILED"))
+            continue
+        rl = from_record(r, SHAPES[s])
+        rows.append((a, s, rl, r))
+    print(f"| arch | shape | compute s | memory s | collective s | dominant | "
+          f"useful 6ND/HLO | roofline frac | fix |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    hill = []
+    for a, s, rl, extra in rows:
+        if rl is None:
+            print(f"| {a} | {s} | — | — | — | skipped | — | — | {extra} |")
+            continue
+        fix = fix_suggestion(rl)
+        print(f"| {a} | {s} | {rl.compute_s:.2e} | {rl.memory_s:.2e} | "
+              f"{rl.collective_s:.2e} | {rl.dominant} | {rl.useful_ratio:.3f} | "
+              f"{rl.roofline_fraction:.4f} | {fix.split(':')[0]} |")
+        hill.append((rl.roofline_fraction, rl.collective_s / max(rl.bound_time, 1e-12), a, s, rl.dominant))
+    hill.sort()
+    print("\nWorst roofline fractions:")
+    for f, cr, a, s, dom in hill[:6]:
+        print(f"  {f:.4f}  {a}/{s} (dom={dom}, coll-share={cr:.2f})")
+    print("\nMost collective-bound:")
+    for f, cr, a, s, dom in sorted(hill, key=lambda t: -t[1])[:6]:
+        print(f"  coll-share={cr:.2f}  frac={f:.4f}  {a}/{s}")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

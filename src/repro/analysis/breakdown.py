@@ -1,0 +1,111 @@
+"""Per-op cost breakdown from optimized HLO — the dry-run "profiler".
+
+No wall-clock exists on CPU, so §Perf iterations read this instead: top
+contributors to FLOPs / HBM bytes / collective bytes, each scaled by the
+enclosing while-loop trip counts, tagged with the op_name metadata (which
+carries jax scopes like 'train_step/while/body/...attention...').
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+
+from repro.analysis.hlo import (
+    HloCostModel,
+    _shape_elems_bytes,
+)
+
+
+@dataclass
+class Contributor:
+    kind: str  # flops | bytes | collective
+    value: float
+    opcode: str
+    scope: str
+    shape: str
+
+
+_META_RE = re.compile(r'op_name="([^"]+)"')
+
+
+class Breakdown(HloCostModel):
+    def top(self, n: int = 15):
+        """Returns dict(kind -> [Contributor]) for the entry computation."""
+        contributions: list[Contributor] = []
+
+        def walk(comp_name: str, scale: float, count_bytes: bool = True):
+            comp = self.comps.get(comp_name)
+            if comp is None:
+                return
+            for op in comp.ops:
+                oc = op.opcode
+                meta = _META_RE.search(op.rest)
+                scope = meta.group(1) if meta else ""
+                if oc == "while":
+                    body = re.search(r"body=%?([\w.\-]+)", op.rest)
+                    cond = re.search(r"condition=%?([\w.\-]+)", op.rest)
+                    tm = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', op.rest)
+                    trips = float(tm.group(1)) if tm else (
+                        self._trip_count(cond.group(1)) or 1.0 if cond else 1.0
+                    )
+                    if body:
+                        walk(body.group(1), scale * trips, count_bytes)
+                elif oc in ("fusion", "call", "async-start"):
+                    cm = re.search(r"calls=%?([\w.\-]+)", op.rest)
+                    if cm:
+                        walk(cm.group(1), scale, count_bytes and oc != "fusion")
+                    if oc == "fusion" and count_bytes:
+                        b = self._fusion_bytes(op, comp) * scale
+                        contributions.append(
+                            Contributor("bytes", b, oc, scope, op.type_str[:48])
+                        )
+                elif any(oc.startswith(c) for c in (
+                    "all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute",
+                )):
+                    if oc.endswith("-done"):
+                        continue
+                    b = 0.0
+                    for o in op.operands:
+                        _, ob = _shape_elems_bytes(comp.var_types.get(o, ""))
+                        b += ob
+                    contributions.append(
+                        Contributor("collective", b * scale, oc, scope, op.type_str[:48])
+                    )
+                elif oc == "dot":
+                    f = self._dot_flops(op, comp) * scale
+                    contributions.append(
+                        Contributor("flops", f, oc, scope, op.type_str[:48])
+                    )
+                    if count_bytes:
+                        contributions.append(
+                            Contributor("bytes", self._op_bytes(op, comp) * scale, oc,
+                                        scope, op.type_str[:48])
+                        )
+                else:
+                    b = self._op_bytes(op, comp) * scale if count_bytes else 0.0
+                    if b:
+                        contributions.append(
+                            Contributor("bytes", b, oc, scope, op.type_str[:48])
+                        )
+
+        walk(self.entry, 1.0)
+        out = {}
+        for kind in ("flops", "bytes", "collective"):
+            rows = [c for c in contributions if c.kind == kind]
+            rows.sort(key=lambda c: -c.value)
+            out[kind] = rows[:n]
+        return out
+
+
+def print_breakdown(compiled_or_text, n: int = 12) -> None:
+    text = compiled_or_text if isinstance(compiled_or_text, str) else compiled_or_text.as_text()
+    bd = Breakdown(text)
+    tops = bd.top(n)
+    for kind, rows in tops.items():
+        total = sum(r.value for r in rows)
+        print(f"\n== top {kind} (sum of top-{n}: {total:.3e}) ==")
+        for r in rows:
+            scope = r.scope.split("/")[-1][:60] if r.scope else "?"
+            print(f"  {r.value:12.3e}  {r.opcode:22s} {r.shape:40s} {scope}")

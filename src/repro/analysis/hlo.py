@@ -1,0 +1,427 @@
+"""HLO cost model: FLOPs / HBM bytes / collective bytes from optimized HLO.
+
+Why not ``compiled.cost_analysis()``?  XLA counts while-loop bodies ONCE, so
+scanned models (layers, KV chunks, recurrences) are undercounted by the trip
+count.  This parser walks ``compiled.as_text()`` (the post-SPMD per-device
+module), multiplies loop bodies by their trip counts (parsed from the loop
+condition's compare-against-constant), recurses through fusions/calls, and
+accounts:
+
+  * flops: dot (2*out*contract), elementwise/reduce (1/elem), conv (approx)
+  * bytes: operand+output at materialization boundaries (fusion level),
+    with dynamic-slice reads counted at slice size (scan weight slicing)
+  * collective bytes by opcode (all-gather / all-reduce / reduce-scatter /
+    all-to-all / collective-permute), operand-summed per the roofline spec
+
+Numbers are PER DEVICE (the module is the partitioned per-device program).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+    "opaque": 0,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_HEAD_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+
+def _parse_op_line(line: str):
+    """Split an HLO op line into (name, type_str, opcode, rest) or None.
+
+    Handles tuple types containing /*index=N*/ comments by balanced-paren
+    scanning instead of a single regex.
+    """
+    m = _OP_HEAD_RE.match(line)
+    if not m:
+        return None
+    name = m.group(1)
+    i = m.end()
+    n = len(line)
+    if i < n and line[i] == "(":  # tuple type: scan to matching paren
+        depth = 0
+        j = i
+        while j < n:
+            if line[j] == "(":
+                depth += 1
+            elif line[j] == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            j += 1
+        type_str = line[i : j + 1]
+        k = j + 1
+    else:
+        j = line.find(" ", i)
+        if j < 0:
+            return None
+        type_str = line[i:j]
+        k = j
+    rest = line[k:].lstrip()
+    om = re.match(r"([\w\-]+)\(", rest)
+    if not om:
+        return None
+    return name, type_str, om.group(1), rest[om.end() :]
+
+
+def _shape_elems_bytes(type_str: str) -> tuple[float, float]:
+    """(elements, bytes) of a possibly-tuple HLO type string."""
+    elems = bts = 0.0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1.0
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems += n
+        bts += n * _DTYPE_BYTES[dt]
+    return elems, bts
+
+
+@dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str  # operand list + attributes (raw tail of the line)
+    operands: list = field(default_factory=list)  # var names
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: list = field(default_factory=list)
+    var_types: dict = field(default_factory=dict)  # var name -> type str
+    param_vars: dict = field(default_factory=dict)  # param index -> var name
+
+
+@dataclass
+class CostReport:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collective_bytes: dict = field(default_factory=dict)  # opcode -> bytes
+    collective_count: dict = field(default_factory=dict)
+    unknown_trip_loops: int = 0
+
+    def scaled(self, k: float) -> "CostReport":
+        return CostReport(
+            self.flops * k,
+            self.bytes_accessed * k,
+            {o: b * k for o, b in self.collective_bytes.items()},
+            {o: c * k for o, c in self.collective_count.items()},
+            self.unknown_trip_loops,
+        )
+
+    def add(self, other: "CostReport") -> None:
+        self.flops += other.flops
+        self.bytes_accessed += other.bytes_accessed
+        for o, b in other.collective_bytes.items():
+            self.collective_bytes[o] = self.collective_bytes.get(o, 0.0) + b
+        for o, c in other.collective_count.items():
+            self.collective_count[o] = self.collective_count.get(o, 0.0) + c
+        self.unknown_trip_loops += other.unknown_trip_loops
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+_ZERO_COST_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "copy-start",
+    "copy-done", "opt-barrier",
+}
+_VIEW_OPS = {"bitcast", "get-tuple-element", "tuple", "parameter", "constant",
+             "reshape", "copy", "transpose", "broadcast", "iota"}
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.comps: dict[str, Computation] = {}
+        self.entry: str | None = None
+        self._parse(hlo_text)
+        self._memo: dict[str, CostReport] = {}
+
+    # ------------------------------------------------------------------ parse
+    def _parse(self, text: str) -> None:
+        cur: Computation | None = None
+        for line in text.splitlines():
+            if cur is None:
+                m = _COMP_RE.match(line)
+                if m and line.rstrip().endswith("{"):
+                    cur = Computation(m.group(1))
+                    if line.startswith("ENTRY"):
+                        self.entry = cur.name
+                    continue
+            else:
+                if line.startswith("}"):
+                    self.comps[cur.name] = cur
+                    cur = None
+                    continue
+                parsed = _parse_op_line(line)
+                if parsed is None:
+                    continue
+                name, tstr, opcode, rest = parsed
+                op = Op(name, tstr, opcode, rest)
+                # operand variable names: %foo tokens before any attr section
+                args_part = rest.split("), ")[0] if "), " in rest else rest
+                op.operands = re.findall(r"%([\w.\-]+)", args_part)
+                cur.ops.append(op)
+                cur.var_types[name] = tstr
+                if opcode == "parameter":
+                    pm = re.match(r"(\d+)\)", rest)
+                    if pm:
+                        cur.param_vars[int(pm.group(1))] = name
+
+    # ------------------------------------------------------------- trip count
+    def _trip_count(self, cond_name: str) -> float | None:
+        cond = self.comps.get(cond_name)
+        if cond is None:
+            return None
+        consts: dict[str, int] = {}
+        for op in cond.ops:
+            if op.opcode == "constant":
+                cm = re.match(r"([\-\d]+)\)", op.rest)
+                if cm:
+                    consts[op.name] = int(cm.group(1))
+        # direct compare in the condition
+        for op in cond.ops:
+            if op.opcode == "compare" and "direction=LT" in op.rest:
+                for o in op.operands:
+                    if o in consts:
+                        return float(consts[o])
+        # fused compare: the constant is an operand of a fusion that calls a
+        # computation containing the compare.
+        for op in cond.ops:
+            if op.opcode == "fusion":
+                for o in op.operands:
+                    if o in consts:
+                        return float(consts[o])
+        return None
+
+    # ------------------------------------------------------------------ flops
+    def _dot_flops(self, op: Op, comp: Computation) -> float:
+        out_elems, _ = _shape_elems_bytes(op.type_str)
+        m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+        contract = 1.0
+        if m and op.operands:
+            lhs_type = comp.var_types.get(op.operands[0], "")
+            sm = _SHAPE_RE.search(lhs_type)
+            if sm and sm.group(2):
+                dims = [int(d) for d in sm.group(2).split(",")]
+                for ci in m.group(1).split(","):
+                    if ci != "" and int(ci) < len(dims):
+                        contract *= dims[int(ci)]
+        return 2.0 * out_elems * contract
+
+    def _conv_flops(self, op: Op, comp: Computation) -> float:
+        out_elems, _ = _shape_elems_bytes(op.type_str)
+        if len(op.operands) >= 2:
+            k_type = comp.var_types.get(op.operands[1], "")
+            k_elems, _ = _shape_elems_bytes(k_type)
+            # approx: 2 * out * (kernel elems / out_features)
+            sm = _SHAPE_RE.search(k_type)
+            if sm and sm.group(2):
+                dims = [int(d) for d in sm.group(2).split(",")]
+                ofeat = max(dims[-1], 1)
+                return 2.0 * out_elems * k_elems / ofeat
+        return 2.0 * out_elems
+
+    # ------------------------------------------------------------------ bytes
+    def _op_bytes(self, op: Op, comp: Computation) -> float:
+        """HBM traffic estimate at materialization boundaries."""
+        if op.opcode in _ZERO_COST_OPS or op.opcode in ("fusion",):
+            return 0.0  # fusion handled by caller with slice-awareness
+        _, out_b = _shape_elems_bytes(op.type_str)
+        total = out_b
+        if op.opcode == "dynamic-slice":
+            return 2.0 * out_b  # read slice + write out
+        if op.opcode == "dynamic-update-slice":
+            if len(op.operands) >= 2:
+                _, upd_b = _shape_elems_bytes(comp.var_types.get(op.operands[1], ""))
+                return 2.0 * upd_b  # in-place slice write (+read)
+            return out_b
+        if op.opcode == "scatter":
+            # in-place: traffic ~ updates + indices (operand aliased)
+            b = 0.0
+            for o in op.operands[1:]:
+                _, ob = _shape_elems_bytes(comp.var_types.get(o, ""))
+                b += ob
+            return 2.0 * b
+        if op.opcode == "gather":
+            return 2.0 * out_b  # reads gathered elements + writes output
+        for o in op.operands:
+            _, b = _shape_elems_bytes(comp.var_types.get(o, ""))
+            total += b
+        return total
+
+    def _fusion_bytes(self, op: Op, comp: Computation) -> float:
+        """Fusion = one HBM materialization: operands + output.
+
+        Special cases matching XLA's fusion emitters:
+        * dynamic-slice consumers: a param consumed (possibly through
+          elementwise ops) only toward dynamic-slice reads slice-sized data;
+        * in-place DUS fusions (root is a dynamic-update-slice, possibly
+          followed by converts/bitcasts): the big operand is aliased with the
+          output and only the update window is computed/written — traffic is
+          2 x update bytes, not 2 x full-stack bytes.
+        """
+        _, out_b = _shape_elems_bytes(op.type_str)
+        called = None
+        cm = re.search(r"calls=%?([\w.\-]+)", op.rest)
+        if cm:
+            called = self.comps.get(cm.group(1))
+        if called is None:
+            total = out_b
+            for o in op.operands:
+                _, b = _shape_elems_bytes(comp.var_types.get(o, ""))
+                total += b
+            return total
+
+        # Trace elementwise-unary forwarding: var -> transitive source params.
+        fwd_src: dict[str, set] = {}
+        param_names = set(called.param_vars.values())
+        for cop in called.ops:
+            if cop.opcode == "parameter":
+                fwd_src[cop.name] = {cop.name}
+            elif cop.opcode in ("convert", "bitcast", "copy", "reshape", "transpose"):
+                srcs = set()
+                for o in cop.operands:
+                    srcs |= fwd_src.get(o, set())
+                fwd_src[cop.name] = srcs
+            else:
+                fwd_src[cop.name] = set()
+
+        dus_updates = 0.0
+        aliased_params: set = set()
+        sliced_params: set = set()
+        has_dus = False
+        for cop in called.ops:
+            if cop.opcode == "dynamic-slice":
+                for o in cop.operands[:1]:
+                    sliced_params |= fwd_src.get(o, {o} if o in param_names else set())
+            if cop.opcode == "dynamic-update-slice" and len(cop.operands) >= 2:
+                has_dus = True
+                _, ub = _shape_elems_bytes(called.var_types.get(cop.operands[1], ""))
+                dus_updates += ub
+                aliased_params |= fwd_src.get(
+                    cop.operands[0], {cop.operands[0]} if cop.operands[0] in param_names else set()
+                )
+
+        total = 0.0
+        # Output: in-place DUS fusions write only the update window.
+        total += 2.0 * dus_updates if has_dus else out_b
+        for idx, o in enumerate(op.operands):
+            _, b = _shape_elems_bytes(comp.var_types.get(o, ""))
+            pv = called.param_vars.get(idx)
+            if pv is not None and pv in aliased_params:
+                continue  # aliased with output; traffic already counted
+            if pv is not None and pv in sliced_params:
+                b = min(b, out_b)  # slice-sized read
+            total += b
+        return total
+
+    # ------------------------------------------------------------------ walk
+    def computation_cost(self, name: str, count_bytes: bool = True) -> CostReport:
+        """Cost of one computation.  ``count_bytes=False`` when reached
+        through a fusion: inner ops contribute FLOPs (they execute) but no
+        HBM traffic (the fusion boundary is the only materialization)."""
+        key = (name, count_bytes)
+        if key in self._memo:
+            return self._memo[key]
+        comp = self.comps.get(name)
+        rep = CostReport()
+        if comp is None:
+            return rep
+        self._memo[key] = rep  # guard recursion
+        for op in comp.ops:
+            oc = op.opcode
+            if oc == "while":
+                body = re.search(r"body=%?([\w.\-]+)", op.rest)
+                cond = re.search(r"condition=%?([\w.\-]+)", op.rest)
+                # Preferred: XLA's own analysis in backend_config.
+                tm = _TRIP_RE.search(op.rest)
+                trips = float(tm.group(1)) if tm else None
+                if trips is None and cond:
+                    trips = self._trip_count(cond.group(1))
+                if trips is None:
+                    trips = 1.0
+                    rep.unknown_trip_loops += 1
+                if body:
+                    rep.add(self.computation_cost(body.group(1), count_bytes).scaled(trips))
+                if cond:
+                    rep.add(self.computation_cost(cond.group(1), count_bytes).scaled(trips))
+            elif oc in ("fusion", "call", "async-start"):
+                cm = re.search(r"calls=%?([\w.\-]+)", op.rest)
+                if cm:
+                    inner_bytes = count_bytes and oc != "fusion"
+                    rep.add(self.computation_cost(cm.group(1), inner_bytes))
+                if oc == "fusion" and count_bytes:
+                    rep.bytes_accessed += self._fusion_bytes(op, comp)
+            elif oc == "conditional":
+                branches = re.findall(r"(?:branch_computations=\{([^}]*)\}|true_computation=%?([\w.\-]+)|false_computation=%?([\w.\-]+))", op.rest)
+                names = []
+                for b in branches:
+                    for part in b:
+                        if part:
+                            names.extend(n.strip().lstrip("%") for n in part.split(","))
+                if names:
+                    costs = [self.computation_cost(n, count_bytes) for n in names]
+                    best = max(costs, key=lambda c: c.flops)
+                    rep.add(best)
+            elif any(oc.startswith(c) for c in _COLLECTIVES):
+                base = next(c for c in _COLLECTIVES if oc.startswith(c))
+                b = 0.0
+                for o in op.operands:
+                    _, ob = _shape_elems_bytes(comp.var_types.get(o, ""))
+                    b += ob
+                if b == 0.0:  # e.g. -done ops reference the start tuple
+                    _, b = _shape_elems_bytes(op.type_str)
+                if oc.endswith("-done"):
+                    continue  # counted at -start
+                rep.collective_bytes[base] = rep.collective_bytes.get(base, 0.0) + b
+                rep.collective_count[base] = rep.collective_count.get(base, 0.0) + 1
+                if count_bytes:
+                    rep.bytes_accessed += self._op_bytes(op, comp)
+            else:
+                # flops
+                if oc == "dot":
+                    rep.flops += self._dot_flops(op, comp)
+                elif oc == "convolution":
+                    rep.flops += self._conv_flops(op, comp)
+                elif oc in ("reduce", "reduce-window"):
+                    in_elems = 0.0
+                    for o in op.operands[: max(1, len(op.operands) // 2)]:
+                        e, _ = _shape_elems_bytes(comp.var_types.get(o, ""))
+                        in_elems += e
+                    rep.flops += in_elems
+                elif oc not in _ZERO_COST_OPS and oc not in _VIEW_OPS:
+                    e, _ = _shape_elems_bytes(op.type_str)
+                    rep.flops += e
+                if count_bytes:
+                    rep.bytes_accessed += self._op_bytes(op, comp)
+        self._memo[key] = rep
+        return rep
+
+    def entry_cost(self) -> CostReport:
+        assert self.entry is not None, "no ENTRY computation found"
+        return self.computation_cost(self.entry)
+
+
+def analyze_compiled(compiled) -> CostReport:
+    return HloCostModel(compiled.as_text()).entry_cost()

@@ -1,0 +1,13 @@
+"""Per-architecture configs (one module per assigned arch) + registry."""
+
+from repro.configs.base import (  # noqa: F401
+    SHAPES,
+    ArchConfig,
+    MambaConfig,
+    MoEConfig,
+    RWKVConfig,
+    ShapeSpec,
+    all_archs,
+    get_arch,
+    register,
+)

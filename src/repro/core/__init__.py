@@ -1,0 +1,12 @@
+"""NetMax core: the paper's primary contribution.
+
+Submodules (import directly, e.g. ``from repro.core import policy``):
+
+- consensus: two-step consensus SGD update (Alg. 2), D^k / Y_P math (§IV)
+- policy: communication policy generation (Alg. 3) via grid search + LP
+- monitor: Network Monitor (Alg. 1) + worker-side iteration-time EMA
+- theory: convergence bounds (Thm 1/2/3), approximation ratio (App. B)
+- matching: Birkhoff matched gossip rounds (beyond paper)
+- compression: sparsified/quantized pulls + error feedback (beyond paper)
+- nettime: heterogeneous link-time model
+"""

@@ -1,0 +1,176 @@
+"""Consensus SGD math (paper §III-B, §IV).
+
+Two views of the same algorithm live here:
+
+* **Analysis view** (numpy): the one-step random operator ``D^k`` (Eq. 19),
+  its second moment ``Y_P = E[(D^k)^T D^k]`` (Eq. 22), and helpers used by the
+  policy generator and the theory tests.
+
+* **Runtime view** (jax): the two-step parameter update of Algorithm 2
+  (lines 11, 13-15) applied to arbitrary parameter pytrees, plus the lockstep
+  "gossip round" operator used by the SPMD trainer (every worker performs one
+  Alg.-2 iteration per round with i.i.d. neighbor draws — see DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# --------------------------------------------------------------------------
+# Analysis view (numpy)
+# --------------------------------------------------------------------------
+
+
+def gamma_matrix(P: np.ndarray, d: np.ndarray) -> np.ndarray:
+    """gamma_{i,m} = (d_{i,m} + d_{m,i}) / (2 p_{i,m}), 0 where p=0 or no edge."""
+    num = d + d.T
+    with np.errstate(divide="ignore", invalid="ignore"):
+        g = np.where((P > 0) & (num > 0), num / (2.0 * np.maximum(P, 1e-300)), 0.0)
+    return g
+
+
+def mean_iteration_times(P: np.ndarray, T: np.ndarray, d: np.ndarray) -> np.ndarray:
+    """t_bar_i = sum_m t_{i,m} p_{i,m} d_{i,m}   (Eq. 2)."""
+    return (T * P * d).sum(axis=1)
+
+
+def worker_activation_probs(
+    P: np.ndarray, T: np.ndarray | None, d: np.ndarray
+) -> np.ndarray:
+    """p_i per Eq. (3); uniform 1/M when no time matrix is supplied.
+
+    For any feasible Algorithm-3 policy the equality constraints (Eq. 10)
+    force t_bar_i identical across i, hence p_i = 1/M (Lemma 1).
+    """
+    M = P.shape[0]
+    if T is None:
+        return np.full(M, 1.0 / M)
+    tbar = mean_iteration_times(P, T, d)
+    # Workers that never communicate (tbar == 0) get frequency 0 by convention.
+    with np.errstate(divide="ignore"):
+        freq = np.where(tbar > 0, 1.0 / np.maximum(tbar, 1e-300), 0.0)
+    s = freq.sum()
+    return freq / s if s > 0 else np.full(M, 1.0 / M)
+
+
+def build_Y(
+    P: np.ndarray,
+    alpha: float,
+    rho: float,
+    d: np.ndarray,
+    T: np.ndarray | None = None,
+) -> np.ndarray:
+    """Second-moment matrix Y_P = E[(D^k)^T D^k], entries per Eq. (22).
+
+    Edges whose selection probability is zero contribute nothing (the
+    corresponding event never happens), which is how the Monitor retires a
+    dead link without touching the math.
+    """
+    M = P.shape[0]
+    p = worker_activation_probs(P, T, d)
+    g = gamma_matrix(P, d)
+    ar = alpha * rho
+    off = np.zeros((M, M))
+    # p_{i,m} * gamma_{i,m} = (d_{i,m}+d_{m,i})/2 when p>0 — a constant per edge.
+    pg = np.where(P > 0, P * g, 0.0)
+    pg2 = np.where(P > 0, P * g * g, 0.0)
+    for i in range(M):
+        for m in range(M):
+            if m == i:
+                continue
+            lin = ar * (p[i] * pg[i, m] + p[m] * pg[m, i])
+            quad = ar * ar * (p[i] * pg2[i, m] + p[m] * pg2[m, i])
+            off[i, m] = lin - quad
+    Y = off.copy()
+    for i in range(M):
+        lin = 2.0 * ar * (p[i] * pg[i, :]).sum()
+        quad = ar * ar * ((p[i] * pg2[i, :]) + (p * pg2[:, i])).sum()
+        Y[i, i] = 1.0 - lin + quad
+    return Y
+
+
+def sample_event(
+    rng: np.random.Generator, P: np.ndarray, p: np.ndarray
+) -> tuple[int, int]:
+    """Draw (i, m): active worker i ~ p, neighbor m ~ P[i]."""
+    M = P.shape[0]
+    i = int(rng.choice(M, p=p))
+    row = P[i] / P[i].sum()
+    m = int(rng.choice(M, p=row))
+    return i, m
+
+
+def D_matrix(i: int, m: int, alpha: float, rho: float, P, d) -> np.ndarray:
+    """D^k = I + alpha*rho*gamma_{i,m} e_i (e_m - e_i)^T  (Eq. 19)."""
+    M = P.shape[0]
+    D = np.eye(M)
+    if i != m and d[i, m]:
+        g = (d[i, m] + d[m, i]) / (2.0 * P[i, m])
+        w = alpha * rho * g
+        D[i, i] -= w
+        D[i, m] += w
+    return D
+
+
+# --------------------------------------------------------------------------
+# Runtime view (jax, pytree-level)
+# --------------------------------------------------------------------------
+
+
+def mixing_weight(alpha: float, rho: float, p_im: float, d_sym: float = 2.0):
+    """w = alpha * rho * gamma = alpha*rho*(d_im+d_mi)/(2*p_im)."""
+    return alpha * rho * d_sym / (2.0 * p_im)
+
+
+def two_step_update(params, grads, pulled, alpha, w):
+    """Algorithm 2 lines 11+13-15 on a parameter pytree.
+
+    x_half = x - alpha * g          (first step: local SGD)
+    x_next = (1-w) * x_half + w * x_pull   (second step: consensus mix)
+
+    ``w`` may be a scalar or broadcastable leaf-wise weight (per-worker when
+    leaves carry a leading worker axis).
+    """
+
+    def leaf(x, g, xp):
+        x_half = x - alpha * g
+        return (1.0 - w) * x_half + w * xp
+
+    return jax.tree_util.tree_map(leaf, params, grads, pulled)
+
+
+def stacked_round(params, grads, neighbors, weights, alpha):
+    """Lockstep gossip round on *stacked* replicas (leading axis = worker).
+
+    params/grads: pytrees whose leaves are (M, ...).
+    neighbors:    int32 (M,) — neighbor index drawn per worker (may equal i).
+    weights:      f32 (M,)  — alpha*rho*gamma_{i, m_i}; 0 where m_i == i.
+
+    Pulled values are the *pre-round* neighbor params (Eq. 16 pulls x_m^k,
+    not x_m^k - alpha g_m^k).
+    """
+
+    def leaf(x, g):
+        pulled = jnp.take(x, neighbors, axis=0)
+        x_half = x - alpha * g
+        w = weights.reshape((-1,) + (1,) * (x.ndim - 1))
+        return (1.0 - w) * x_half + w * pulled
+
+    return jax.tree_util.tree_map(leaf, params, grads)
+
+
+def sample_round(rng: np.random.Generator, P: np.ndarray, alpha: float, rho: float, d: np.ndarray):
+    """Draw one lockstep round: per-worker neighbor + mixing weight (host side)."""
+    M = P.shape[0]
+    neighbors = np.empty(M, dtype=np.int32)
+    weights = np.zeros(M, dtype=np.float32)
+    for i in range(M):
+        row = P[i] / P[i].sum()
+        m = int(rng.choice(M, p=row))
+        neighbors[i] = m
+        if m != i and d[i, m]:
+            g = (d[i, m] + d[m, i]) / (2.0 * P[i, m])
+            weights[i] = alpha * rho * g
+    return neighbors, weights

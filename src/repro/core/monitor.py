@@ -1,0 +1,117 @@
+"""Network Monitor (paper Algorithm 1) + worker-side EMA (Algorithm 2, 19-22).
+
+The Monitor is a *host-side control-plane* component: it never touches model
+parameters (unlike a parameter server), only per-link iteration-time EMAs.
+Every schedule period it pulls the EMA matrix from the workers and publishes
+a fresh (P, rho) produced by Algorithm 3.
+
+Fault tolerance: a worker that stopped reporting has its links marked dead
+(time = inf) after ``dead_after`` missed reports; Algorithm 3 masks dead
+links out of the connectivity graph, so the next policy routes around the
+failure.  A restarted Monitor rebuilds all state from worker EMAs — it keeps
+no durable state of its own.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.policy import PolicyResult, generate_policy_matrix
+
+
+@dataclass
+class IterationTimeEMA:
+    """Worker-side EMA of iteration times (Algorithm 2, UPDATETIMEVECTOR).
+
+    T[m] <- beta * T[m] + (1 - beta) * t_{i,m}.  Smaller beta tracks faster
+    networks dynamics (paper §III-B).
+    """
+
+    n_workers: int
+    beta: float = 0.5
+    times: np.ndarray = field(init=False)
+    counts: np.ndarray = field(init=False)
+
+    def __post_init__(self):
+        self.times = np.zeros(self.n_workers)
+        self.counts = np.zeros(self.n_workers, dtype=np.int64)
+
+    def update(self, m: int, t: float) -> None:
+        if self.counts[m] == 0:
+            self.times[m] = t  # seed the EMA with the first observation
+        else:
+            self.times[m] = self.beta * self.times[m] + (1.0 - self.beta) * t
+        self.counts[m] += 1
+
+    def snapshot(self) -> np.ndarray:
+        """Observed EMAs; never-observed links report 0 (Monitor fills them)."""
+        return self.times.copy()
+
+
+@dataclass
+class NetworkMonitor:
+    """Algorithm 1.  ``collect`` <- worker EMAs; ``step`` -> (P, rho)."""
+
+    n_workers: int
+    alpha: float
+    K: int = 8
+    R: int = 8
+    eps: float = 1e-2
+    schedule_period: float = 120.0  # T_s (paper uses 2 minutes)
+    dead_after: int = 3
+
+    _T: np.ndarray = field(init=False)
+    _missed: np.ndarray = field(init=False)
+    policy: PolicyResult | None = field(init=False, default=None)
+    history: list = field(init=False, default_factory=list)
+
+    def __post_init__(self):
+        M = self.n_workers
+        self._T = np.zeros((M, M))
+        self._missed = np.zeros(M, dtype=np.int64)
+
+    # -- data plane ----------------------------------------------------------
+    def collect(self, reports: dict[int, np.ndarray]) -> None:
+        """Receive {worker_id: EMA vector}; absent workers accrue a miss."""
+        for i in range(self.n_workers):
+            if i in reports:
+                self._T[i, :] = reports[i]
+                self._missed[i] = 0
+            else:
+                self._missed[i] += 1
+
+    def _time_matrix(self) -> np.ndarray:
+        """EMA matrix with dead workers masked and unobserved links imputed."""
+        T = self._T.copy()
+        observed = T[T > 0]
+        fill = float(observed.mean()) if observed.size else 1.0
+        T[T <= 0] = fill  # never-measured links: assume average cost
+        np.fill_diagonal(T, 0.0)
+        dead = self._missed >= self.dead_after
+        T[dead, :] = np.inf
+        T[:, dead] = np.inf
+        return T
+
+    # -- control plane -------------------------------------------------------
+    def step(self) -> PolicyResult:
+        """One Algorithm-1 period: recompute and publish (P, rho)."""
+        T = self._time_matrix()
+        live = ~np.all(~np.isfinite(T) | (T == 0), axis=1)
+        res = generate_policy_matrix(self.alpha, self.K, self.R, T, eps=self.eps)
+        self.policy = res
+        self.history.append(
+            dict(
+                rho=res.rho,
+                t_bar=res.t_bar,
+                lambda2=res.lambda2,
+                T_convergence=res.T_convergence,
+                n_live=int(live.sum()),
+            )
+        )
+        return res
+
+    @property
+    def live_workers(self) -> np.ndarray:
+        return np.where(self._missed < self.dead_after)[0]

@@ -1,0 +1,134 @@
+"""Heterogeneous link-time model (paper §II-B, Fig. 2/3 and §V network setup).
+
+Models the per-iteration time t_{i,m} = max(C_i, N_{i,m}) of worker i pulling
+from worker m: local compute overlapped with the network transfer (the paper
+parallelizes them, §II-B).  Topology tiers map the paper's "intra-machine vs
+inter-machine vs WAN" onto pod hardware: intra-host ICI, intra-pod ICI,
+inter-pod DCN.  Dynamic perturbations reproduce the paper's evaluation setup
+("randomly slow down one link by 2x-100x, change the slow link every 5 min").
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass
+class Topology:
+    """Placement of M workers onto a pod/host hierarchy."""
+
+    n_workers: int
+    workers_per_host: int = 4
+    hosts_per_pod: int = 2
+
+    def host_of(self, i: int) -> int:
+        return i // self.workers_per_host
+
+    def pod_of(self, i: int) -> int:
+        return self.host_of(i) // self.hosts_per_pod
+
+    def tier(self, i: int, m: int) -> str:
+        if self.host_of(i) == self.host_of(m):
+            return "intra_host"
+        if self.pod_of(i) == self.pod_of(m):
+            return "intra_pod"
+        return "inter_pod"
+
+
+@dataclass
+class LinkTimeModel:
+    """Produces t_{i,m} matrices; supports paper-style dynamic slowdowns.
+
+    Base times are per-tier transfer seconds for one model pull; the paper's
+    Fig. 3 measured a ~4x gap between intra- and inter-machine iteration time
+    — the defaults keep that ratio and add a slower inter-pod tier.
+    """
+
+    topology: Topology
+    compute_time: float = 0.012  # C_i: one local grad step, overlapped
+    base_times: dict = field(
+        default_factory=lambda: {
+            "intra_host": 0.010,
+            "intra_pod": 0.040,
+            "inter_pod": 0.120,
+        }
+    )
+    jitter: float = 0.05  # lognormal-ish multiplicative noise
+    slowdown_range: tuple = (2.0, 100.0)  # paper §V: 2x-100x on one link
+    slow_interval: float = 300.0  # change the slow link every 5 minutes
+    seed: int = 0
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+        self._slow_edge: tuple[int, int] | None = None
+        self._slow_factor: float = 1.0
+        self._next_change: float = 0.0
+
+    # -- dynamics -----------------------------------------------------------
+    def advance_to(self, now: float) -> None:
+        """Re-draw the slowed link if the change interval elapsed."""
+        while now >= self._next_change:
+            M = self.topology.n_workers
+            i = int(self._rng.integers(M))
+            m = int(self._rng.integers(M - 1))
+            m = m if m < i else m + 1
+            self._slow_edge = (i, m)
+            lo, hi = self.slowdown_range
+            self._slow_factor = float(self._rng.uniform(lo, hi))
+            self._next_change += self.slow_interval
+
+    # -- queries ------------------------------------------------------------
+    def network_time(self, i: int, m: int, now: float = 0.0) -> float:
+        self.advance_to(now)
+        t = self.base_times[self.topology.tier(i, m)]
+        if self._slow_edge in ((i, m), (m, i)):
+            t *= self._slow_factor
+        if self.jitter > 0:
+            t *= float(np.exp(self._rng.normal(0.0, self.jitter)))
+        return t
+
+    def iteration_time(self, i: int, m: int, now: float = 0.0) -> float:
+        """t_{i,m} = max(C_i, N_{i,m})  (paper §II-B)."""
+        return max(self.compute_time, self.network_time(i, m, now))
+
+    def matrix(self, now: float = 0.0) -> np.ndarray:
+        """Expected iteration-time matrix at virtual time ``now`` (no jitter)."""
+        self.advance_to(now)
+        M = self.topology.n_workers
+        T = np.zeros((M, M))
+        for i in range(M):
+            for m in range(M):
+                if i == m:
+                    continue
+                t = self.base_times[self.topology.tier(i, m)]
+                if self._slow_edge in ((i, m), (m, i)):
+                    t *= self._slow_factor
+                T[i, m] = max(self.compute_time, t)
+        return T
+
+
+def homogeneous_times(M: int, t: float = 0.02) -> np.ndarray:
+    """Uniform-link matrix (paper §V homogeneous setting)."""
+    T = np.full((M, M), t)
+    np.fill_diagonal(T, 0.0)
+    return T
+
+
+def pod_link_times(
+    M: int,
+    workers_per_pod: int,
+    intra: float = 0.02,
+    inter: float = 0.24,
+    compute: float = 0.012,
+) -> np.ndarray:
+    """Two-tier pod matrix used by the production mesh benchmarks."""
+    T = np.zeros((M, M))
+    for i in range(M):
+        for m in range(M):
+            if i == m:
+                continue
+            same = (i // workers_per_pod) == (m // workers_per_pod)
+            T[i, m] = max(compute, intra if same else inter)
+    return T

@@ -1,0 +1,238 @@
+"""Communication policy generation (paper Algorithm 3 + Appendix A).
+
+``generate_policy_matrix`` is the Network Monitor's core computation:
+a nested grid search over the mixing weight rho (outer, K points) and the
+target mean iteration time t_bar (inner, R points).  Each grid point solves
+the LP of Eq. (14) — minimize self-selection subject to Eqs. (10)-(13) —
+and is scored by the convergence-time model T = t_bar * ln(eps)/ln(lambda2).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core import consensus, theory
+from repro.solver.lp import solve_lp
+
+# Strictness margin for the strict inequality Eq. (11): p > alpha*rho*(d+d').
+_FLOOR_MARGIN = 1e-6
+
+
+@dataclass
+class PolicyResult:
+    P: np.ndarray
+    rho: float
+    t_bar: float
+    lambda2: float
+    T_convergence: float
+    # Diagnostics for EXPERIMENTS.md / the Monitor log.
+    n_lp_solved: int = 0
+    n_lp_feasible: int = 0
+    grid: list = field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        return np.isfinite(self.T_convergence)
+
+
+def _solve_policy_lp(
+    T: np.ndarray, d: np.ndarray, alpha: float, rho: float, t_bar: float
+) -> np.ndarray | None:
+    """LP of Eq. (14): min sum_i p_{i,i} s.t. Eqs. (10)-(13).
+
+    Variables: p_{i,m} for every edge (d_{i,m}=1) plus every diagonal p_{i,i}.
+    Eq. (10): per-worker expected iteration time == M * t_bar (equalizes p_i).
+    Eq. (11): p_{i,m} >= alpha*rho*(d_{i,m}+d_{m,i}) + margin on edges.
+    Eq. (13): rows sum to one (diagonal included).
+    """
+    M = T.shape[0]
+    idx: dict[tuple[int, int], int] = {}
+    for i in range(M):
+        idx[(i, i)] = len(idx)
+        for m in range(M):
+            if m != i and d[i, m]:
+                idx[(i, m)] = len(idx)
+    n = len(idx)
+    c = np.zeros(n)
+    lb = np.zeros(n)
+    ub = np.ones(n)
+    for (i, m), j in idx.items():
+        if i == m:
+            c[j] = 1.0  # objective: minimize self-selection
+        else:
+            lb[j] = alpha * rho * (d[i, m] + d[m, i]) + _FLOOR_MARGIN
+    A = np.zeros((2 * M, n))
+    b = np.zeros(2 * M)
+    for i in range(M):
+        # Eq. (10): sum_m t_{i,m} p_{i,m} d_{i,m} = M * t_bar.
+        for m in range(M):
+            if m != i and d[i, m]:
+                A[i, idx[(i, m)]] = T[i, m]
+        b[i] = M * t_bar
+        # Eq. (13): sum_m p_{i,m} = 1.
+        A[M + i, idx[(i, i)]] = 1.0
+        for m in range(M):
+            if m != i and d[i, m]:
+                A[M + i, idx[(i, m)]] = 1.0
+        b[M + i] = 1.0
+    res = solve_lp(c, A, b, lb=lb, ub=ub)
+    if not res.ok:
+        return None
+    P = np.zeros((M, M))
+    for (i, m), j in idx.items():
+        P[i, m] = max(res.x[j], 0.0)
+    return P
+
+
+def _t_bar_interval(
+    T: np.ndarray, d: np.ndarray, alpha: float, rho: float
+) -> tuple[float, float]:
+    """Feasible [L, U] for t_bar (Appendix A, Eqs. 26/28)."""
+    M = T.shape[0]
+    L = 0.0
+    U = np.inf
+    for i in range(M):
+        Li = alpha * rho / M * sum(
+            T[i, m] * (d[i, m] + d[m, i]) for m in range(M) if m != i
+        )
+        edge_times = [T[i, m] for m in range(M) if m != i and d[i, m]]
+        if not edge_times:
+            return (np.inf, -np.inf)  # isolated node: infeasible
+        Ui = max(edge_times) / M
+        L = max(L, Li)
+        U = min(U, Ui)
+    return L, U
+
+
+def inner_loop(
+    alpha: float,
+    rho: float,
+    R: int,
+    T: np.ndarray,
+    d: np.ndarray,
+    eps: float = 1e-2,
+) -> PolicyResult | None:
+    """Algorithm 3 INNERLOOP: grid over t_bar in [L, U], LP + eig score."""
+    L, U = _t_bar_interval(T, d, alpha, rho)
+    if not np.isfinite(U) or U <= L:
+        return None
+    best: PolicyResult | None = None
+    n_solved = n_feasible = 0
+    grid = []
+    for r in range(1, R + 1):
+        t_bar = L + (U - L) * r / R
+        n_solved += 1
+        P = _solve_policy_lp(T, d, alpha, rho, t_bar)
+        if P is None:
+            grid.append((rho, t_bar, None, np.inf))
+            continue
+        n_feasible += 1
+        Y = consensus.build_Y(P, alpha, rho, d)
+        lam2 = theory.lambda2(Y)
+        Tc = theory.convergence_time(t_bar, lam2, eps)
+        grid.append((rho, t_bar, lam2, Tc))
+        if best is None or Tc < best.T_convergence:
+            best = PolicyResult(P, rho, t_bar, lam2, Tc)
+    if best is not None:
+        best.n_lp_solved = n_solved
+        best.n_lp_feasible = n_feasible
+        best.grid = grid
+    return best
+
+
+def generate_policy_matrix(
+    alpha: float,
+    K: int,
+    R: int,
+    T: np.ndarray,
+    d: np.ndarray | None = None,
+    eps: float = 1e-2,
+) -> PolicyResult:
+    """Algorithm 3 GENERATEPOLICYMATRIX.
+
+    Parameters mirror the paper: learning rate alpha, outer-loop rounds K
+    (grid over rho in (0, 0.5/alpha]), inner-loop rounds R (grid over t_bar),
+    iteration-time matrix T.  ``d`` is the connectivity mask (default: fully
+    connected on finite links — entries of T that are inf/nan are treated as
+    dead links and masked out, which is how failed nodes are retired).
+    """
+    T = np.asarray(T, dtype=np.float64)
+    M = T.shape[0]
+    if d is None:
+        d = np.ones((M, M)) - np.eye(M)
+    d = np.asarray(d, dtype=np.float64).copy()
+    dead = ~np.isfinite(T)
+    d[dead] = 0.0
+    d[dead.T] = 0.0
+    Tm = np.where(np.isfinite(T), T, 0.0)
+
+    # Fault tolerance: isolated workers (all links dead) are excluded from
+    # the optimization; the policy is solved on the live subgraph and
+    # embedded back (dead rows/cols zero).  lambda2 then measures consensus
+    # of the *live* replicas, which is what convergence means post-failure.
+    np.fill_diagonal(d, 0.0)
+    live = np.where(d.sum(axis=1) > 0)[0]
+    if 0 < live.size < M:
+        sub = generate_policy_matrix(
+            alpha, K, R, Tm[np.ix_(live, live)], d[np.ix_(live, live)], eps
+        )
+        P = np.zeros((M, M))
+        P[np.ix_(live, live)] = sub.P
+        return PolicyResult(
+            P, sub.rho, sub.t_bar, sub.lambda2, sub.T_convergence,
+            sub.n_lp_solved, sub.n_lp_feasible, sub.grid,
+        )
+
+    U_rho = 0.5 / alpha
+    # Engineering guard (documented deviation): clamp the outer grid to the
+    # region where the inner interval [L(rho), U] is non-empty and the Eq.-11
+    # floors can sum to <= 1, so no grid point is wasted on provably
+    # infeasible rho.  L(rho) = alpha*rho*A with A below; U is rho-free.
+    deg2 = np.array([(d[i] + d[:, i]).sum() for i in range(M)])
+    with np.errstate(invalid="ignore"):
+        A = max(
+            (Tm[i] * (d[i] + d[:, i])).sum() / M for i in range(M)
+        )
+    U_t = min(
+        (np.max(Tm[i] * d[i]) / M) for i in range(M) if d[i].sum() > 0
+    ) if d.sum() > 0 else 0.0
+    if A > 0:
+        U_rho = min(U_rho, U_t / (A * alpha))
+    if deg2.max() > 0:
+        U_rho = min(U_rho, 1.0 / (alpha * deg2.max()) * (1.0 - 1e-6))
+    delta = U_rho / K
+    best: PolicyResult | None = None
+    all_grid = []
+    for k in range(1, K + 1):
+        rho = k * delta
+        res = inner_loop(alpha, rho, R, Tm, d, eps)
+        if res is None:
+            continue
+        all_grid.extend(res.grid)
+        if best is None or res.T_convergence < best.T_convergence:
+            best = res
+    if best is None:
+        # No feasible grid point (e.g. alpha*rho floor too high everywhere):
+        # fall back to the uniform policy — still convergent (Thm 1), just
+        # not time-optimized.  The Monitor logs this condition.
+        P = uniform_policy(d)
+        rho = 0.25 / alpha / max(1.0, d.sum(axis=1).max())
+        Y = consensus.build_Y(P, alpha, rho, d)
+        lam2 = theory.lambda2(Y)
+        tbar = float(consensus.mean_iteration_times(P, Tm, d).mean())
+        best = PolicyResult(P, rho, tbar, lam2, theory.convergence_time(tbar, lam2, eps))
+    best.grid = all_grid
+    return best
+
+
+def uniform_policy(d: np.ndarray) -> np.ndarray:
+    """AD-PSGD-style uniform neighbor selection (no self-loops)."""
+    M = d.shape[0]
+    P = np.zeros((M, M))
+    for i in range(M):
+        nbrs = [m for m in range(M) if m != i and d[i, m]]
+        for m in nbrs:
+            P[i, m] = 1.0 / len(nbrs)
+    return P

@@ -1,0 +1,1 @@
+"""Data pipeline: synthetic streams, partitioning (uniform / non-IID), loaders."""

@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: fused NetMax two-step update (gossip_mix).
+
+The consensus update  out = (1-w) * (x + u) + w * pulled  (Alg. 2 lines
+11+13-15, with u = optimizer delta) is pure HBM traffic: naively it is three
+elementwise passes (apply update, subtract, mix) over every parameter.  The
+fused kernel streams x, u, pulled through VMEM once:
+
+    reads  3 x bytes   writes 1 x bytes      (vs 5R/3W unfused)
+
+which at 819 GB/s HBM is the dominant non-matmul cost of a NetMax round at
+small per-worker batch.  Block layout: flat 1-D tiles of 64k elements (f32)
+— bandwidth-bound, no MXU alignment needed, lane-dim 128-aligned.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_BLOCK = 65536  # elements per tile (256 KiB f32 in VMEM x 4 buffers)
+
+
+def _mix_kernel(x_ref, u_ref, p_ref, w_ref, o_ref):
+    w = w_ref[0]
+    x_half = x_ref[...].astype(jnp.float32) + u_ref[...].astype(jnp.float32)
+    out = (1.0 - w) * x_half + w * p_ref[...].astype(jnp.float32)
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block"))
+def gossip_mix(x, u, pulled, w, *, interpret: bool = False, block: int = _BLOCK):
+    """out = (1-w)*(x+u) + w*pulled, elementwise; w scalar (per worker).
+
+    x/u/pulled: same-shape arrays (any dtype); w: f32 scalar array.
+    """
+    shape, dtype = x.shape, x.dtype
+    n = x.size
+    xf, uf, pf = (a.reshape(-1) for a in (x, u, pulled))
+    pad = (-n) % block
+    if pad:
+        xf = jnp.pad(xf, (0, pad))
+        uf = jnp.pad(uf, (0, pad))
+        pf = jnp.pad(pf, (0, pad))
+    nb = xf.size // block
+    wv = jnp.asarray(w, jnp.float32).reshape(1)
+
+    out = pl.pallas_call(
+        _mix_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,), memory_space=pltpu.MemorySpace.SMEM),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((xf.size,), dtype),
+        interpret=interpret,
+    )(xf, uf, pf, wv)
+    return out[:n].reshape(shape)

@@ -1,0 +1,67 @@
+"""Jit'd dispatchers for the Pallas kernels.
+
+``use_pallas`` picks the execution path:
+  * True  -> compiled Pallas (TPU)
+  * False -> pure-jnp reference (XLA; used for dry-run lowering on CPU)
+  * "interpret" -> Pallas interpret mode (CPU correctness testing)
+
+Default: Pallas on TPU backends, reference elsewhere.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.gossip_mix import gossip_mix
+from repro.kernels.rwkv_scan import rwkv_scan
+
+
+def _default_mode():
+    return jax.default_backend() == "tpu"
+
+
+def attention(q, k, v, *, causal=True, use_pallas=None, block_q=128, block_k=128):
+    mode = _default_mode() if use_pallas is None else use_pallas
+    if mode == "interpret":
+        return flash_attention(q, k, v, causal=causal, block_q=block_q,
+                               block_k=block_k, interpret=True)
+    if mode:
+        return flash_attention(q, k, v, causal=causal, block_q=block_q, block_k=block_k)
+    return ref.reference_attention(q, k, v, causal=causal)
+
+
+def rwkv(r, k, v, w, u, *, use_pallas=None, chunk=64):
+    mode = _default_mode() if use_pallas is None else use_pallas
+    if mode == "interpret":
+        return rwkv_scan(r, k, v, w, u, chunk=chunk, interpret=True)
+    if mode:
+        return rwkv_scan(r, k, v, w, u, chunk=chunk)
+    return ref.reference_rwkv(r, k, v, w, u)
+
+
+def mix(x, u, pulled, w, *, use_pallas=None):
+    mode = _default_mode() if use_pallas is None else use_pallas
+    if mode == "interpret":
+        return gossip_mix(x, u, pulled, w, interpret=True)
+    if mode:
+        return gossip_mix(x, u, pulled, w)
+    return ref.reference_gossip_mix(x, u, pulled, w)
+
+
+def gossip_mix_tree(x_half, pulled, weights, *, use_pallas=None):
+    """Tree-level fused mix used by the trainer (x_half already includes the
+    optimizer update, so u = 0): out = (1-w_i) x_half + w_i pulled."""
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, x_half)
+
+    def one(h, z, p):
+        w = weights.reshape((-1,) + (1,) * (h.ndim - 1))
+        out = []
+        # per-worker scalar w -> apply kernel per worker slice
+        for i in range(h.shape[0]):
+            out.append(mix(h[i], z[i], p[i], weights[i], use_pallas=use_pallas))
+        return jnp.stack(out)
+
+    return jax.tree_util.tree_map(one, x_half, zeros, pulled)

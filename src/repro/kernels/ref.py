@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def reference_attention(q, k, v, *, causal: bool = True) -> jnp.ndarray:
+    """Naive O(S^2) GQA attention. q: (B,S,H,hd); k/v: (B,Sk,Hk,hd)."""
+    B, S, H, hd = q.shape
+    Sk, Hk = k.shape[1], k.shape[2]
+    G = H // Hk
+    qg = q.reshape(B, S, Hk, G, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bshgd,bkhd->bhgsk", qg, kf) / jnp.sqrt(jnp.float32(hd))
+    if causal:
+        mask = jnp.arange(S)[:, None] >= jnp.arange(Sk)[None, :]
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgsk,bkhd->bshgd", p, vf)
+    return o.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def reference_rwkv(r, k, v, w, u) -> jnp.ndarray:
+    """Sequential WKV recurrence.  r/k/v/w: (B,S,H,N); u: (H,N).
+
+    y_t = r_t . (S_{t-1} + diag(u) k_t v_t^T);  S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    """
+    B, S, H, N = r.shape
+    rf, kf, vf, wf = (x.astype(jnp.float32) for x in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+
+    def step(state, inp):
+        rt, kt, vt, wt = inp  # (B,H,N)
+        kv = kt[..., :, None] * vt[..., None, :]  # (B,H,N,N)
+        y = jnp.einsum("bhn,bhnm->bhm", rt, state + uf[None, :, :, None] * kv)
+        return wt[..., :, None] * state + kv, y
+
+    xs = tuple(jnp.moveaxis(x, 1, 0) for x in (rf, kf, vf, wf))
+    _, ys = jax.lax.scan(step, jnp.zeros((B, H, N, N), jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1).astype(r.dtype)
+
+
+def reference_gossip_mix(x, u, pulled, w) -> jnp.ndarray:
+    """out = (1-w)*(x+u) + w*pulled (f32 math, cast back)."""
+    xf = x.astype(jnp.float32) + u.astype(jnp.float32)
+    out = (1.0 - w) * xf + w * pulled.astype(jnp.float32)
+    return out.astype(x.dtype)

@@ -1,0 +1,313 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST run before any other import (jax locks the device
+count on first init).  For each cell this driver:
+
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. resolves the sharding plan (worker axes / TP / FSDP — dist.sharding),
+  3. lowers + compiles the program against ShapeDtypeStruct inputs,
+  4. prints memory_analysis() + cost_analysis(),
+  5. runs the HLO cost model (analysis.hlo) for trip-count-correct FLOPs /
+     bytes / per-collective bytes, and
+  6. appends a JSON record under artifacts/dryrun/.
+
+Usage:
+  python -m repro.launch.dryrun --arch tinyllama-1.1b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--gossip ppermute]
+"""
+
+import argparse
+import gzip
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.analysis.hlo import HloCostModel
+from repro.configs.base import SHAPES, all_archs
+from repro.dist import sharding as shd
+from repro.launch import specs as sp
+from repro.launch.mesh import make_production_mesh, worker_axis_names
+from repro.models import lm
+from repro.optim import sgd
+
+ARTIFACTS = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def _opt_state_specs(opt_state_abstract, pspecs):
+    """Momentum trees mirror params; scalars replicate."""
+    from jax.sharding import PartitionSpec as P
+
+    out = {}
+    for k, v in opt_state_abstract.items():
+        out[k] = pspecs if k in ("m", "v") else P()
+    return out
+
+
+def build_lowered(cfg, shape_name, mesh, gossip_mode="ppermute"):
+    """Returns (lowered, meta) for one cell."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    shape = SHAPES[shape_name]
+    optimizer = sgd(momentum=0.9, weight_decay=1e-4)
+    ns = lambda s: NamedSharding(mesh, s)
+
+    if shape.kind == "train":
+        plan = shd.plan_for(cfg, mesh)
+        M = max(plan.n_workers, 1)
+        waxes = plan.worker_axes
+        inputs = sp.input_specs(cfg, shape_name, M, optimizer)
+        pspecs = shd.param_specs(cfg, inputs["params"], plan, stacked=True)
+        ospecs = _opt_state_specs(inputs["opt_state"], pspecs)
+        bspecs = shd.batch_specs(cfg, plan, shape, stacked=True)
+        gspecs = {k: P() for k in inputs["gossip_in"]}
+
+        from repro.train.trainer import TrainStepConfig, make_train_step
+
+        mode = gossip_mode if M > 1 else "none"
+        step_cfg = TrainStepConfig(gossip_mode=mode)
+        perm = tuple((i + 1) % M for i in range(M)) if mode == "ppermute" else None
+        train_step = make_train_step(
+            cfg, optimizer, M, step_cfg, mesh=mesh, worker_axes=waxes,
+            param_specs=pspecs,
+        )
+        fn = lambda params, opt_state, batch, gossip_in: train_step(
+            params, opt_state, batch, gossip_in, perm=perm
+        )
+        in_sh = (
+            jax.tree_util.tree_map(ns, pspecs, is_leaf=lambda x: isinstance(x, P)),
+            jax.tree_util.tree_map(ns, ospecs, is_leaf=lambda x: isinstance(x, P)),
+            jax.tree_util.tree_map(ns, bspecs, is_leaf=lambda x: isinstance(x, P)),
+            jax.tree_util.tree_map(ns, gspecs, is_leaf=lambda x: isinstance(x, P)),
+        )
+        jitted = jax.jit(fn, in_shardings=in_sh, donate_argnums=(0, 1))
+        lowered = jitted.lower(
+            inputs["params"], inputs["opt_state"], inputs["batch"], inputs["gossip_in"]
+        )
+        meta = dict(M=M, mode=mode, program="train_step")
+        return lowered, meta
+
+    plan = shd.plan_for(cfg, mesh, serve=True)
+    inputs = sp.input_specs(cfg, shape_name, 1, optimizer)
+    pspecs = shd.param_specs(cfg, inputs["params"], plan, stacked=False)
+    p_sh = jax.tree_util.tree_map(ns, pspecs, is_leaf=lambda x: isinstance(x, P))
+
+    if shape.kind == "prefill":
+        bspecs = shd.prefill_batch_specs(cfg, plan, inputs["batch"])
+        b_sh = jax.tree_util.tree_map(ns, bspecs, is_leaf=lambda x: isinstance(x, P))
+        fn = lambda params, batch: lm.prefill_logits(params, batch, cfg)
+        jitted = jax.jit(fn, in_shardings=(p_sh, b_sh))
+        lowered = jitted.lower(inputs["params"], inputs["batch"])
+        return lowered, dict(M=1, mode="serve", program="serve_prefill")
+
+    cspecs = shd.cache_specs(cfg, inputs["cache"], plan, shape.global_batch)
+    c_sh = jax.tree_util.tree_map(ns, cspecs, is_leaf=lambda x: isinstance(x, P))
+    t_sh = ns(shd.serve_batch_spec(plan, shape.global_batch))
+    fn = lambda params, cache, token, pos: lm.decode_step(params, cache, token, pos, cfg)
+    jitted = jax.jit(fn, in_shardings=(p_sh, c_sh, t_sh, ns(P())), donate_argnums=(1,))
+    lowered = jitted.lower(inputs["params"], inputs["cache"], inputs["token"], inputs["pos"])
+    return lowered, dict(M=1, mode="serve", program="serve_step")
+
+
+def apply_opt_flags(cfg, opt: str):
+    """§Perf hillclimb variants, applied on top of the baseline config.
+
+    noselect  — drop the redundant causal carry select in chunked attention
+    padheads  — zero-init inert heads to the next TP multiple (unlocks head
+                sharding for archs with H %% 16 != 0: llama4/starcoder/
+                internvl/whisper)
+    dpworkers — enumerate workers over ALL non-pod... all mesh axes (pure
+                NetMax-DP, TP=1): eliminates TP activation psums for small
+                models at the cost of per-worker replica memory
+    nogossip  — ablation: local SGD only (isolates gossip collective cost)
+    """
+    from dataclasses import replace
+
+    from repro.models import attention as attn_mod
+
+    for flag in filter(None, opt.split(",")):
+        if flag == "noselect":
+            attn_mod.CAUSAL_CARRY_SELECT = False
+        elif flag == "dpworkers":
+            cfg = replace(cfg, worker_axes=("pod", "data", "model"))
+        elif flag == "padheads":
+            tp = 16
+            He = -(-cfg.n_heads // tp) * tp  # next multiple of tp
+            if (He - cfg.n_heads) % cfg.n_kv_heads == 0:
+                cfg = replace(cfg, pad_heads=He - cfg.n_heads)
+            else:
+                # MHA-style: pad q and kv together (whisper 12 -> 16).
+                pkv = (-cfg.n_kv_heads) % tp
+                g = cfg.n_heads // cfg.n_kv_heads
+                cfg = replace(cfg, pad_heads=pkv * g, pad_kv_heads=pkv)
+        elif flag == "nogossip":
+            pass  # handled via gossip_mode
+        else:
+            raise ValueError(f"unknown opt flag {flag!r}")
+    return cfg
+
+
+def run_cell(arch, shape_name, multi_pod, gossip_mode="ppermute", save_hlo=False,
+             quiet=False, opt=""):
+    cfg = all_archs()[arch]
+    if opt:
+        cfg = apply_opt_flags(cfg, opt)
+    shape = SHAPES[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec = dict(
+        arch=arch, shape=shape_name, mesh=mesh_name, gossip=gossip_mode,
+        opt=opt, ok=False, skipped=False,
+    )
+    if not cfg.supports(shape):
+        rec.update(skipped=True, reason="full-attention arch at 500k context (DESIGN.md §4)")
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+    t0 = time.time()
+    try:
+        lowered, meta = build_lowered(cfg, shape_name, mesh, gossip_mode)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = {}
+        try:
+            ma = compiled.memory_analysis()
+            for k in (
+                "argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "generated_code_size_in_bytes",
+                "alias_size_in_bytes",
+            ):
+                if hasattr(ma, k):
+                    mem[k] = int(getattr(ma, k))
+        except Exception as e:  # CPU backend may not implement it
+            mem["error"] = str(e)
+        ca = {}
+        try:
+            raw = compiled.cost_analysis()
+            ca = {k: float(v) for k, v in raw.items() if isinstance(v, (int, float))}
+        except Exception as e:
+            ca["error"] = str(e)
+        hlo_text = compiled.as_text()
+        rep = HloCostModel(hlo_text).entry_cost()
+        rec.update(
+            ok=True,
+            chips=n_chips,
+            M=meta["M"],
+            program=meta["program"],
+            t_lower_s=round(t_lower, 2),
+            t_compile_s=round(t_compile, 2),
+            memory_analysis=mem,
+            cost_analysis_raw={k: ca.get(k) for k in ("flops", "bytes accessed") if k in ca},
+            hlo_flops_per_device=rep.flops,
+            hlo_bytes_per_device=rep.bytes_accessed,
+            collective_bytes_per_device=rep.collective_bytes,
+            collective_count=rep.collective_count,
+            unknown_trip_loops=rep.unknown_trip_loops,
+            hlo_size_chars=len(hlo_text),
+            params=lm.param_count(cfg),
+            active_params=lm.active_param_count(cfg),
+        )
+        if save_hlo:
+            ARTIFACTS.mkdir(parents=True, exist_ok=True)
+            suffix = f"_{opt.replace(',', '+')}" if opt else ""
+            with gzip.open(
+                ARTIFACTS / f"{mesh_name}_{arch}_{shape_name}{suffix}.hlo.gz", "wt"
+            ) as f:
+                f.write(hlo_text)
+        if not quiet:
+            print(f"[{mesh_name}|{arch}|{shape_name}] OK compile={t_compile:.1f}s "
+                  f"flops/dev={rep.flops:.3e} bytes/dev={rep.bytes_accessed:.3e} "
+                  f"coll={rep.collective_bytes}")
+            print("  memory_analysis:", mem)
+            print("  cost_analysis:", rec["cost_analysis_raw"])
+    except Exception as e:
+        rec.update(error=f"{type(e).__name__}: {e}", traceback=traceback.format_exc()[-2000:])
+        if not quiet:
+            print(f"[{mesh_name}|{arch}|{shape_name}] FAIL: {e}")
+    return rec
+
+
+def reanalyze(records_path: str) -> None:
+    """Re-run the HLO cost model over saved .hlo.gz artifacts (no recompiles)."""
+    recs = []
+    with open(records_path) as f:
+        for line in f:
+            recs.append(json.loads(line))
+    out = []
+    for rec in recs:
+        p = ARTIFACTS / f"{rec['mesh']}_{rec['arch']}_{rec['shape']}.hlo.gz"
+        if rec.get("ok") and p.exists():
+            with gzip.open(p, "rt") as f:
+                rep = HloCostModel(f.read()).entry_cost()
+            rec.update(
+                hlo_flops_per_device=rep.flops,
+                hlo_bytes_per_device=rep.bytes_accessed,
+                collective_bytes_per_device=rep.collective_bytes,
+                collective_count=rep.collective_count,
+                unknown_trip_loops=rep.unknown_trip_loops,
+            )
+            print(f"reanalyzed {rec['mesh']}|{rec['arch']}|{rec['shape']}: "
+                  f"flops={rep.flops:.3e} bytes={rep.bytes_accessed:.3e}")
+        out.append(rec)
+    with open(records_path, "w") as f:
+        for rec in out:
+            f.write(json.dumps(rec) + "\n")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--gossip", default="ppermute",
+                    choices=["ppermute", "gather", "masked_psum", "none"])
+    ap.add_argument("--save-hlo", action="store_true", default=True)
+    ap.add_argument("--no-save-hlo", dest="save_hlo", action="store_false")
+    ap.add_argument("--reanalyze", metavar="RECORDS")
+    ap.add_argument("--opt", default="", help="comma-separated hillclimb flags")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    if args.reanalyze:
+        reanalyze(args.reanalyze)
+        return 0
+
+    cells = []
+    archs = sorted(a for a in all_archs() if a != "netmax_paper")
+    if args.all:
+        for a in archs:
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells.append((args.arch, args.shape))
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    records = []
+    for mp in meshes:
+        for a, s in cells:
+            rec = run_cell(a, s, mp, args.gossip, args.save_hlo, opt=args.opt)
+            records.append(rec)
+            if args.out:
+                outp = Path(args.out)
+                outp.parent.mkdir(parents=True, exist_ok=True)
+                with open(outp, "a") as f:
+                    f.write(json.dumps(rec) + "\n")
+    n_ok = sum(r["ok"] for r in records)
+    n_skip = sum(r["skipped"] for r in records)
+    print(f"\ndry-run: {n_ok} ok, {n_skip} skipped, "
+          f"{len(records) - n_ok - n_skip} failed / {len(records)} cells")
+    return 0 if n_ok + n_skip == len(records) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,57 @@
+"""Serving driver: ``python -m repro.launch.serve --arch <id>``.
+
+Runs the batched KV-cache engine on a reduced config (CPU) or the full
+config under the production mesh (TPU).  The decode step function is the
+exact program the dry-run lowers for decode_32k / long_500k.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=64)
+    ap.add_argument("--reduced", action="store_true")
+    args = ap.parse_args()
+
+    import jax
+
+    from repro.configs.base import get_arch
+    from repro.models import lm
+    from repro.serve.engine import Request, ServeEngine
+
+    cfg = get_arch(args.arch)
+    if args.reduced or jax.default_backend() == "cpu":
+        cfg = cfg.reduced()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, batch_capacity=args.batch, max_seq=args.max_seq)
+
+    rng = np.random.default_rng(0)
+    reqs = [
+        Request(rid=i,
+                prompt=rng.integers(0, cfg.vocab_size, size=args.prompt_len).astype(np.int32),
+                max_new=args.max_new)
+        for i in range(args.requests)
+    ]
+    t0 = time.time()
+    done = eng.run(reqs)
+    dt = time.time() - t0
+    toks = sum(len(r.out) for r in done)
+    print(f"arch={cfg.name} served {len(done)} requests, {toks} tokens "
+          f"in {dt:.1f}s ({toks/dt:.1f} tok/s, batch={args.batch})")
+    for r in done[:3]:
+        print(f"  req {r.rid}: prompt={r.prompt.tolist()} -> {r.out}")
+
+
+if __name__ == "__main__":
+    main()

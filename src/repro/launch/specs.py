@@ -1,0 +1,87 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every lowered program.
+
+Weak-type-correct, shardable, zero allocation — the dry-run lowers
+``train_step`` / ``serve_prefill`` / ``serve_step`` against these.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, ArchConfig, ShapeSpec
+from repro.models import lm
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def train_batch_specs(cfg: ArchConfig, shape: ShapeSpec, M: int) -> dict:
+    """Stacked training batch: leaves (M, B/M, ...)."""
+    B = shape.global_batch
+    assert B % M == 0, f"global_batch {B} not divisible by {M} workers"
+    b = B // M
+    S = shape.seq_len
+    s_text = S - cfg.n_vis_tokens if cfg.n_vis_tokens else S
+    out = {
+        "tokens": _sds((M, b, s_text), jnp.int32),
+        "labels": _sds((M, b, s_text), jnp.int32),
+    }
+    if cfg.n_vis_tokens:
+        out["vis_embeds"] = _sds((M, b, cfg.n_vis_tokens, cfg.d_model), jnp.float32)
+    if cfg.family == "audio":
+        out["frames"] = _sds((M, b, cfg.enc_seq_len, cfg.d_model), jnp.float32)
+    return out
+
+
+def prefill_batch_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    s_text = S - cfg.n_vis_tokens if cfg.n_vis_tokens else S
+    out = {"tokens": _sds((B, s_text), jnp.int32)}
+    if cfg.n_vis_tokens:
+        out["vis_embeds"] = _sds((B, cfg.n_vis_tokens, cfg.d_model), jnp.float32)
+    if cfg.family == "audio":
+        out["frames"] = _sds((B, cfg.enc_seq_len, cfg.d_model), jnp.float32)
+    return out
+
+
+def decode_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    cache = jax.tree_util.tree_map(
+        lambda l: _sds(l.shape, l.dtype), lm.abstract_cache(cfg, B, S)
+    )
+    return {
+        "cache": cache,
+        "token": _sds((B,), jnp.int32),
+        "pos": _sds((), jnp.int32),
+    }
+
+
+def gossip_specs(M: int) -> dict:
+    return {
+        "neighbors": _sds((M,), jnp.int32),
+        "weights": _sds((M,), jnp.float32),
+        "lr": _sds((), jnp.float32),
+    }
+
+
+def input_specs(cfg: ArchConfig, shape_name: str, M: int, optimizer) -> dict:
+    """All inputs for the program selected by the shape's kind."""
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        from repro.train.trainer import abstract_stacked
+
+        params, opt_state = abstract_stacked(cfg, optimizer, M)
+        return {
+            "params": params,
+            "opt_state": opt_state,
+            "batch": train_batch_specs(cfg, shape, M),
+            "gossip_in": gossip_specs(M),
+        }
+    params = jax.tree_util.tree_map(
+        lambda l: _sds(l.shape, l.dtype), lm.abstract_params(cfg)
+    )
+    if shape.kind == "prefill":
+        return {"params": params, "batch": prefill_batch_specs(cfg, shape)}
+    return {"params": params, **decode_specs(cfg, shape)}

@@ -1,0 +1,122 @@
+"""Production training driver: ``python -m repro.launch.train --arch <id> ...``
+
+Composes the full stack: arch config -> mesh/sharding plan -> NetMax trainer
+(or a baseline algorithm) -> Network Monitor -> checkpoint/restart.  On real
+hardware this runs under the production mesh; on CPU it runs reduced configs
+for verification (--reduced).
+
+The same step function the multi-pod dry-run lowers is executed here — there
+is exactly one trainer code path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--rounds", type=int, default=100)
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU-scale reduced config (default on cpu backend)")
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch-per-worker", type=int, default=4)
+    ap.add_argument("--lr", type=float, default=0.02)
+    ap.add_argument("--algo", default="netmax",
+                    choices=["netmax", "allreduce", "prague", "local"])
+    ap.add_argument("--gossip", default="gather",
+                    choices=["gather", "masked_psum", "ppermute"])
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--monitor-every", type=int, default=10)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.base import get_arch
+    from repro.core import consensus
+    from repro.core.monitor import IterationTimeEMA, NetworkMonitor
+    from repro.core.nettime import LinkTimeModel, Topology
+    from repro.data.synthetic import TokenStream
+    from repro.optim import sgd
+    from repro.train import checkpoint as ckpt
+    from repro.train.trainer import TrainStepConfig, init_stacked, make_train_step
+
+    M = args.workers
+    cfg = get_arch(args.arch)
+    if args.reduced or jax.default_backend() == "cpu":
+        cfg = cfg.reduced()
+
+    opt = sgd(momentum=0.9, weight_decay=1e-4)
+    step_cfg = TrainStepConfig(
+        gossip_mode="none" if args.algo in ("allreduce", "local") else args.gossip,
+        allreduce=args.algo == "allreduce",
+        prague_groups=max(2, M // 2) if args.algo == "prague" else 0,
+    )
+    step_fn = jax.jit(make_train_step(cfg, opt, M, step_cfg))
+    stream = TokenStream(cfg.vocab_size, args.seq, args.batch_per_worker, seed=0)
+
+    topo = Topology(M, workers_per_host=max(1, M // 2), hosts_per_pod=1)
+    link = LinkTimeModel(topo, jitter=0.05, seed=1)
+    monitor = NetworkMonitor(M, alpha=args.lr, K=6, R=6)
+    emas = [IterationTimeEMA(M, beta=0.5) for _ in range(M)]
+    d = np.ones((M, M)) - np.eye(M)
+    P = np.where(d > 0, 1.0 / max(M - 1, 1), 0.0)
+    rho = 0.5 / (2 * args.lr * max(M - 1, 1))
+    rng = np.random.default_rng(0)
+
+    start = 0
+    params, opt_state = init_stacked(cfg, opt, M, jax.random.PRNGKey(0))
+    if args.ckpt and ckpt.latest_step(args.ckpt) is not None:
+        params, opt_state, man, mon = ckpt.restore(args.ckpt, params, opt_state)
+        start = man["data_cursor"].get("round", 0)
+        if mon and "P" in mon:
+            P, rho = np.asarray(mon["P"]), mon.get("rho", rho)
+        print(f"[resume] round {start}")
+
+    n = sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(params)) // M
+    print(f"[{args.algo}] arch={cfg.name} M={M} params/worker={n/1e6:.1f}M "
+          f"gossip={step_cfg.gossip_mode}")
+
+    t_virt = 0.0
+    for r in range(start, args.rounds):
+        batch = {
+            k: jnp.stack([jnp.asarray(stream.batch(w, r)[k]) for w in range(M)])
+            for k in ("tokens", "labels")
+        }
+        nb, wts = consensus.sample_round(rng, P, args.lr, rho, d)
+        gi = {"neighbors": jnp.asarray(nb), "weights": jnp.asarray(wts),
+              "lr": jnp.float32(args.lr)}
+        t0 = time.time()
+        params, opt_state, m = step_fn(params, opt_state, batch, gi)
+        for i in range(M):
+            emas[i].update(int(nb[i]), link.iteration_time(i, int(nb[i]), now=t_virt))
+        t_virt += max(link.iteration_time(i, int(nb[i]), now=t_virt) for i in range(M))
+
+        if args.algo == "netmax" and (r + 1) % args.monitor_every == 0:
+            monitor.collect({i: emas[i].snapshot() for i in range(M)})
+            pol = monitor.step()
+            if np.isfinite(pol.T_convergence):
+                P, rho = pol.P, pol.rho
+                bad = P.sum(axis=1) <= 0
+                P[bad] = np.where(d[bad] > 0, 1.0 / max(M - 1, 1), 0.0)
+        if (r + 1) % args.log_every == 0 or r == start:
+            print(f"round {r+1:5d} loss={float(m['loss']):.4f} "
+                  f"step_wall={time.time()-t0:.2f}s virt={t_virt:.1f}s")
+        if args.ckpt and (r + 1) % args.ckpt_every == 0:
+            ckpt.save(args.ckpt, r + 1, params, opt_state,
+                      monitor_state={"rho": float(rho), "P": P.tolist()},
+                      data_cursor={"round": r + 1})
+
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

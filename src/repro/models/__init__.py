@@ -1,0 +1,6 @@
+"""Model zoo: pure-JAX (pytree params + functions), no framework deps.
+
+transformer.py builds every assigned decoder-LM family (dense / MoE / SSM /
+hybrid) from the blocks in attention.py / moe.py / rwkv.py / mamba.py;
+whisper.py adds the encoder-decoder; lm.py provides train/serve entry points.
+"""

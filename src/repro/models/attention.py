@@ -1,0 +1,233 @@
+"""GQA attention: chunked (flash-style) training/prefill + KV-cache decode.
+
+The training path is an online-softmax computation chunked over the KV axis
+(lax.scan) so no O(S^2) buffer is ever materialized — the same algorithm the
+Pallas kernel (repro.kernels.flash_attention) implements with explicit VMEM
+BlockSpecs; this XLA version is its reference and the path used for dry-run
+lowering on the CPU backend.
+
+Causal block skipping: KV chunks strictly in the future of a whole Q chunk
+contribute nothing; the scan skips their compute via jnp.where on the chunk
+index (lax.cond is avoided to stay vmap-friendly; the select lets XLA skip
+the masked FLOPs on TPU via predication, and the roofline accounting treats
+the skip explicitly — see analysis/roofline.py).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.modules import apply_rope, lecun_normal
+
+NEG_INF = -1e30
+
+# §Perf hillclimb toggle ("noselect"): the explicit carry select for fully
+# masked causal KV blocks is mathematically redundant — masked scores are
+# NEG_INF, so exp() = 0 and the online update is already the identity
+# (corr = exp(m - max(m, -inf)) = 1).  The select costs 3 full-carry
+# read/writes per KV step in the XLA lowering.  Baseline keeps it (explicit
+# skip semantics); the optimized variant drops it.
+CAUSAL_CARRY_SELECT = True
+
+
+def _pad_q(w, D, Hk, G, Hke, Gn, hd):
+    """Pad q-projection (D, Hk*G*hd) -> (D, Hke*Gn*hd) with zeros placed
+    PER GROUP so original q heads keep their kv-group assignment."""
+    w4 = w.reshape(D, Hk, G, hd)
+    w4 = jnp.pad(w4, ((0, 0), (0, Hke - Hk), (0, Gn - G), (0, 0)))
+    return w4.reshape(D, Hke * Gn * hd)
+
+
+def _pad_o(w, Hk, G, Hke, Gn, hd, D):
+    """Pad out-projection rows (H*hd, D) group-aligned with _pad_q."""
+    w4 = w.reshape(Hk, G, hd, D)
+    w4 = jnp.pad(w4, ((0, Hke - Hk), (0, Gn - G), (0, 0), (0, 0)))
+    return w4.reshape(Hke * Gn * hd, D)
+
+
+def attn_init(key, cfg, dtype):
+    """Projections sized to the EFFECTIVE (TP-padded) head counts.
+
+    Padding is group-interleaved and zero-initialized, so padded heads are
+    exactly inert: their q rows are zero AND their wo rows are zero, and
+    original heads keep their kv-group mapping (tested in test_models_smoke).
+    """
+    H, Hk, hd, D = cfg.n_heads, cfg.n_kv_heads, cfg.hd, cfg.d_model
+    He, Hke = cfg.n_heads_eff, cfg.n_kv_heads_eff
+    G, Gn = H // Hk, He // Hke
+    assert He == Hke * Gn, "pad_heads must keep H_eff = Hk_eff * G_eff"
+    ks = jax.random.split(key, 4)
+    wq = lecun_normal(ks[0], (D, H * hd), dtype)
+    wk = lecun_normal(ks[1], (D, Hk * hd), dtype)
+    wv = lecun_normal(ks[2], (D, Hk * hd), dtype)
+    wo = lecun_normal(ks[3], (H * hd, D), dtype, fan_in=H * hd)
+    if He != H or Hke != Hk:
+        wq = _pad_q(wq, D, Hk, G, Hke, Gn, hd)
+        wo = _pad_o(wo, Hk, G, Hke, Gn, hd, D)
+        if Hke != Hk:
+            wk = jnp.pad(wk.reshape(D, Hk, hd), ((0, 0), (0, Hke - Hk), (0, 0))).reshape(
+                D, Hke * hd
+            )
+            wv = jnp.pad(wv.reshape(D, Hk, hd), ((0, 0), (0, Hke - Hk), (0, 0))).reshape(
+                D, Hke * hd
+            )
+    p = {"wq": wq, "wk": wk, "wv": wv, "wo": wo}
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((He * hd,), dtype)
+        p["bk"] = jnp.zeros((Hke * hd,), dtype)
+        p["bv"] = jnp.zeros((Hke * hd,), dtype)
+    return p
+
+
+def qkv_project(p, x, cfg, positions=None, rope=True):
+    """x: (B, S, D) -> q (B,S,H,hd), k/v (B,S,Hk,hd), with RoPE applied."""
+    B, S, _ = x.shape
+    H, Hk, hd = cfg.n_heads_eff, cfg.n_kv_heads_eff, cfg.hd
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, Hk, hd)
+    v = v.reshape(B, S, Hk, hd)
+    if rope:
+        if positions is None:
+            positions = jnp.arange(S)[None, :]
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+@partial(jax.jit, static_argnames=("causal", "q_chunk", "kv_chunk"))
+def chunked_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+) -> jnp.ndarray:
+    """Online-softmax attention. q: (B,S,H,hd); k,v: (B,Sk,Hk,hd) -> (B,S,H,hd).
+
+    GQA via head grouping: q heads are reshaped to (Hk, G) groups so the
+    score einsum contracts against un-broadcast KV (no KV duplication).
+    """
+    B, S, H, hd = q.shape
+    Sk, Hk = k.shape[1], k.shape[2]
+    G = H // Hk
+    q_chunk = min(q_chunk, S)
+    kv_chunk = min(kv_chunk, Sk)
+    nq, nk = S // q_chunk, Sk // kv_chunk
+    assert S % q_chunk == 0 and Sk % kv_chunk == 0
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+
+    qg = q.reshape(B, nq, q_chunk, Hk, G, hd)
+    ks = k.reshape(B, nk, kv_chunk, Hk, hd)
+    vs = v.reshape(B, nk, kv_chunk, Hk, hd)
+    # scan over kv chunks; carry the online-softmax stats for all q chunks.
+    ks_t = jnp.moveaxis(ks, 1, 0)  # (nk, B, kv_chunk, Hk, hd)
+    vs_t = jnp.moveaxis(vs, 1, 0)
+
+    q_pos = jnp.arange(S).reshape(nq, q_chunk)  # global positions
+
+    def step(carry, blk):
+        acc, m, l = carry
+        kb, vb, kidx = blk
+        s = jnp.einsum(
+            "bnqhgd,bkhd->bnqhgk", qg.astype(jnp.float32), kb.astype(jnp.float32)
+        ) * scale  # (B,nq,qc,Hk,G,kc)
+        if causal:
+            k_pos = kidx * kv_chunk + jnp.arange(kv_chunk)
+            mask = q_pos[None, :, :, None, None, None] >= k_pos[None, None, None, None, None, :]
+            s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bnqhgk,bkhd->bnqhgd", p, vb.astype(jnp.float32))
+        acc_new = acc * corr[..., None] + pv
+        if causal and CAUSAL_CARRY_SELECT:
+            # Whole chunk in the future of every query in this q-chunk:
+            # keep the previous carry.  (Redundant with the NEG_INF masking —
+            # see CAUSAL_CARRY_SELECT; retained in the baseline lowering.)
+            fully_masked = (kidx * kv_chunk) > q_pos[:, -1]  # (nq,)
+            fm = fully_masked[None, :, None, None, None]
+            acc_new = jnp.where(fm[..., None], acc, acc_new)
+            l_new = jnp.where(fm, l, l_new)
+            m_new = jnp.where(fm, m, m_new)
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((B, nq, q_chunk, Hk, G, hd), jnp.float32)
+    m0 = jnp.full((B, nq, q_chunk, Hk, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, nq, q_chunk, Hk, G), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(
+        step, (acc0, m0, l0), (ks_t, vs_t, jnp.arange(nk))
+    )
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, length=None):
+    """Single-token attention against a (possibly sharded) KV cache.
+
+    q: (B, 1, H, hd); caches: (B, S, Hk, hd).  Softmax over a sharded S axis
+    is handled by the SPMD partitioner (all-reduce of max/sum — the
+    flash-decoding LSE combine falls out of the einsum formulation).
+    """
+    B, _, H, hd = q.shape
+    S, Hk = k_cache.shape[1], k_cache.shape[2]
+    G = H // Hk
+    qg = q.reshape(B, Hk, G, hd)
+    s = jnp.einsum(
+        "bhgd,bkhd->bhgk", qg.astype(jnp.float32), k_cache.astype(jnp.float32)
+    ) / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    if length is not None:
+        mask = jnp.arange(S)[None, None, None, :] < length
+        s = jnp.where(mask, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", w, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def attn_apply(p, x, cfg, *, causal=True, positions=None, rope=True,
+               q_chunk=512, kv_chunk=1024):
+    """Full attention sub-layer (projections + chunked attention + out proj)."""
+    q, k, v = qkv_project(p, x, cfg, positions=positions, rope=rope)
+    o = chunked_attention(q, k, v, causal=causal, q_chunk=q_chunk, kv_chunk=kv_chunk)
+    B, S = x.shape[:2]
+    return o.reshape(B, S, -1) @ p["wo"]
+
+
+def cross_attn_apply(p, x, kv_src, cfg, q_chunk=512, kv_chunk=1024):
+    """Encoder-decoder cross attention (whisper): KV from encoder output."""
+    B, S, _ = x.shape
+    H, Hk, hd = cfg.n_heads_eff, cfg.n_kv_heads_eff, cfg.hd
+    Se = kv_src.shape[1]
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    k = (kv_src @ p["wk"]).reshape(B, Se, Hk, hd)
+    v = (kv_src @ p["wv"]).reshape(B, Se, Hk, hd)
+    o = chunked_attention(q, k, v, causal=False, q_chunk=q_chunk, kv_chunk=kv_chunk)
+    return o.reshape(B, S, -1) @ p["wo"]
+
+
+def decode_qkv(p, x, cfg, position):
+    """One-token projections for serve_step. x: (B, 1, D)."""
+    B = x.shape[0]
+    H, Hk, hd = cfg.n_heads_eff, cfg.n_kv_heads_eff, cfg.hd
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, 1, H, hd)
+    k = k.reshape(B, 1, Hk, hd)
+    v = v.reshape(B, 1, Hk, hd)
+    pos = jnp.full((B, 1), position) if jnp.ndim(position) == 0 else position[:, None]
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    return q, k, v

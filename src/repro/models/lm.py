@@ -1,0 +1,125 @@
+"""LM entry points: loss, train forward, prefill, decode — family-dispatched.
+
+The loss is computed in *sequence chunks* (scan) so the (B, S, V) logits
+tensor is never materialized — at vocab 152k x 1M tokens that buffer would
+be 320 GB; chunked it stays O(B * chunk * V / devices).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer, whisper
+from repro.models.modules import pick_chunk
+
+
+def chunked_ce_loss(x, w_head, labels, mask=None, chunk: int = 512):
+    """Cross-entropy over vocab without materializing full logits.
+
+    x: (B,S,D); w_head: (D,V); labels: (B,S) int32; mask: (B,S) or None.
+    """
+    B, S, D = x.shape
+    chunk = pick_chunk(S, chunk)
+    n = S // chunk
+    xs = jnp.moveaxis(x.reshape(B, n, chunk, D), 1, 0)
+    ls = jnp.moveaxis(labels.reshape(B, n, chunk), 1, 0)
+    ms = (
+        jnp.moveaxis(mask.reshape(B, n, chunk), 1, 0)
+        if mask is not None
+        else jnp.ones((n, B, chunk), jnp.float32)
+    )
+
+    def body(acc, inp):
+        xc, lc, mc = inp
+        logits = (xc @ w_head).astype(jnp.float32)  # (B,chunk,V)
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        nll = (logz - gold) * mc
+        return (acc[0] + nll.sum(), acc[1] + mc.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())), (xs, ls, ms))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def loss_fn(params, batch, cfg: ArchConfig, aux_weight: float = 0.01):
+    """batch: {'tokens': (B,S), 'labels': (B,S), ['vis_embeds'|'frames']}."""
+    if cfg.family == "audio":
+        enc_out = whisper.encode(params, batch["frames"], cfg)
+        x = whisper.decode_train(params, batch["tokens"], enc_out, cfg)
+        w = params["lm_head"]["w"]
+        return chunked_ce_loss(x, w, batch["labels"])
+    x, aux = transformer.forward(
+        params, batch["tokens"], cfg, vis_embeds=batch.get("vis_embeds")
+    )
+    if cfg.n_vis_tokens:
+        x = x[:, cfg.n_vis_tokens :, :]  # loss over text positions only
+    w = params["embed"]["table"].T if cfg.tie_embeddings else params["lm_head"]["w"]
+    loss = chunked_ce_loss(x, w, batch["labels"])
+    return loss + aux_weight * aux
+
+
+def init_params(cfg: ArchConfig, key):
+    if cfg.family == "audio":
+        return whisper.init_params(cfg, key)
+    return transformer.init_params(cfg, key)
+
+
+def abstract_params(cfg: ArchConfig):
+    if cfg.family == "audio":
+        return whisper.abstract_params(cfg)
+    return transformer.abstract_params(cfg)
+
+
+def init_cache(cfg: ArchConfig, B: int, S: int):
+    if cfg.family == "audio":
+        return whisper.init_cache(cfg, B, S)
+    return transformer.init_cache(cfg, B, S)
+
+
+def abstract_cache(cfg: ArchConfig, B: int, S: int):
+    if cfg.family == "audio":
+        return whisper.abstract_cache(cfg, B, S)
+    return transformer.abstract_cache(cfg, B, S)
+
+
+def decode_step(params, cache, token, pos, cfg: ArchConfig):
+    if cfg.family == "audio":
+        return whisper.decode_step(params, cache, token, pos, cfg)
+    return transformer.decode_step(params, cache, token, pos, cfg)
+
+
+def prefill_logits(params, batch, cfg: ArchConfig):
+    if cfg.family == "audio":
+        enc_out = whisper.encode(params, batch["frames"], cfg)
+        x = whisper.decode_train(params, batch["tokens"], enc_out, cfg)
+        return (x[:, -1, :] @ params["lm_head"]["w"]).astype(jnp.float32)
+    return transformer.prefill(
+        params, batch["tokens"], cfg, vis_embeds=batch.get("vis_embeds")
+    )[:, 0, :]
+
+
+def param_count(cfg: ArchConfig) -> int:
+    import numpy as np
+
+    tree = abstract_params(cfg)
+    return int(sum(np.prod(l.shape) for l in jax.tree_util.tree_leaves(tree)))
+
+
+def active_param_count(cfg: ArchConfig) -> int:
+    """Active params per token (MoE: top_k of n_experts expert params)."""
+    import numpy as np
+
+    total = 0
+    tree = abstract_params(cfg)
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    for path, leaf in flat:
+        sz = int(np.prod(leaf.shape))
+        names = "/".join(str(p) for p in path)
+        if cfg.moe is not None and any(k in names for k in ("w_gate", "w_up", "w_down")) and "moe" in names:
+            sz = sz * cfg.moe.top_k // cfg.moe.n_experts
+        total += sz
+    return total

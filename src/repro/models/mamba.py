@@ -1,0 +1,109 @@
+"""Mamba (selective SSM) block — the SSM component of Jamba (arXiv:2403.19887).
+
+    x, z = in_proj(u)                       # (B,S,Di) each, Di = expand*D
+    x = silu(causal_depthwise_conv(x))
+    dt, B_, C = x_proj(x)                   # dt: (B,S,Di) via dt_rank
+    h_t = exp(dt*A) * h_{t-1} + dt*B_ * x_t  # per-channel state (Di, N)
+    y = C . h + D_skip*x ;  out = out_proj(y * silu(z))
+
+Training scans over time (XLA while loop — O(1) HLO); decode is a single
+state update, so Jamba's mamba layers serve long_500k in O(1) per token.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.modules import lecun_normal
+
+
+def mamba_init(key, cfg, dtype):
+    D = cfg.d_model
+    mc = cfg.mamba
+    Di = mc.expand * D
+    N = mc.d_state
+    R = mc.dt_rank or max(1, D // 16)
+    ks = jax.random.split(key, 7)
+    A = jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32)[None, :], (Di, 1))
+    return {
+        "w_in": lecun_normal(ks[0], (D, 2 * Di), dtype),
+        "conv_w": lecun_normal(ks[1], (mc.d_conv, Di), dtype, fan_in=mc.d_conv),
+        "conv_b": jnp.zeros((Di,), dtype),
+        "w_x": lecun_normal(ks[2], (Di, R + 2 * N), dtype),
+        "w_dt": lecun_normal(ks[3], (R, Di), dtype, fan_in=R),
+        "b_dt": jnp.log(jnp.expm1(jnp.full((Di,), 0.01, jnp.float32))),  # softplus^-1
+        "A_log": jnp.log(A),
+        "D_skip": jnp.ones((Di,), jnp.float32),
+        "w_out": lecun_normal(ks[4], (Di, D), dtype, fan_in=Di),
+    }
+
+
+def _causal_conv(x, w, b, conv_state=None):
+    """Depthwise causal conv along S. x: (B,S,Di); w: (K,Di).
+
+    Returns (y, new_conv_state) where conv_state caches the last K-1 inputs
+    for decode.
+    """
+    B, S, Di = x.shape
+    K = w.shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((B, K - 1, Di), x.dtype)
+    xp = jnp.concatenate([conv_state, x], axis=1)  # (B, S+K-1, Di)
+    # sum_k w[k] * x[t-K+1+k]
+    y = sum(xp[:, k : k + S, :] * w[k] for k in range(K)) + b
+    return y, xp[:, -(K - 1) :, :]
+
+
+def mamba_apply(p, u, cfg, state=None):
+    """u: (B,S,D) -> (y, new_state). state = dict(ssm (B,Di,N) f32, conv)."""
+    B, S, D = u.shape
+    mc = cfg.mamba
+    Di = mc.expand * D
+    N = mc.d_state
+    R = mc.dt_rank or max(1, D // 16)
+
+    xz = u @ p["w_in"]
+    x, z = jnp.split(xz, 2, axis=-1)  # (B,S,Di)
+    conv_state = state["conv"] if state else None
+    x, conv_state = _causal_conv(x, p["conv_w"], p["conv_b"], conv_state)
+    x = jax.nn.silu(x.astype(jnp.float32)).astype(u.dtype)
+
+    proj = x @ p["w_x"]  # (B,S,R+2N)
+    dt_r, B_, C = jnp.split(proj, [R, R + N], axis=-1)
+    dt = jax.nn.softplus((dt_r @ p["w_dt"]).astype(jnp.float32) + p["b_dt"])  # (B,S,Di)
+    A = -jnp.exp(p["A_log"])  # (Di,N)
+
+    xf = x.astype(jnp.float32)
+    Bf = B_.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp  # (B,Di),(B,Di),(B,N),(B,N)
+        dA = jnp.exp(dtt[..., None] * A)  # (B,Di,N)
+        dBx = (dtt * xt)[..., None] * bt[:, None, :]  # (B,Di,N)
+        h = dA * h + dBx
+        y = jnp.einsum("bdn,bn->bd", h, ct)
+        return h, y
+
+    h0 = state["ssm"] if state else jnp.zeros((B, Di, N), jnp.float32)
+    xs = jnp.moveaxis(xf, 1, 0)
+    dts = jnp.moveaxis(dt, 1, 0)
+    bs = jnp.moveaxis(Bf, 1, 0)
+    cs = jnp.moveaxis(Cf, 1, 0)
+    from repro.models.scan_utils import chunked_scan
+
+    h, ys = chunked_scan(step, h0, (xs, dts, bs, cs), chunk=64)
+    y = jnp.moveaxis(ys, 0, 1) + xf * p["D_skip"]  # (B,S,Di)
+    y = y.astype(u.dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(u.dtype)
+    out = y @ p["w_out"]
+    return out, {"ssm": h, "conv": conv_state}
+
+
+def mamba_init_state(cfg, B, dtype):
+    mc = cfg.mamba
+    Di = mc.expand * cfg.d_model
+    return {
+        "ssm": jnp.zeros((B, Di, mc.d_state), jnp.float32),
+        "conv": jnp.zeros((B, mc.d_conv - 1, Di), dtype),
+    }

@@ -1,0 +1,157 @@
+"""Primitive NN modules as (init, apply) function pairs over dict pytrees."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _dtype(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32, "float16": jnp.float16}[name]
+
+
+# -- initializers -----------------------------------------------------------
+
+
+def lecun_normal(key, shape, dtype, fan_in=None):
+    fan_in = fan_in if fan_in is not None else shape[-2] if len(shape) >= 2 else shape[-1]
+    std = 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# -- linear -------------------------------------------------------------------
+
+
+def linear_init(key, d_in, d_out, dtype, bias=False):
+    p = {"w": lecun_normal(key, (d_in, d_out), dtype, fan_in=d_in)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+# -- norms --------------------------------------------------------------------
+
+
+def rmsnorm_init(d, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(d, dtype):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+def make_norm(kind: str):
+    if kind == "rmsnorm":
+        return rmsnorm_init, rmsnorm
+    if kind == "layernorm":
+        return layernorm_init, layernorm
+    raise ValueError(kind)
+
+
+# -- rotary position embeddings ----------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # (..., S, 1, hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- activations ---------------------------------------------------------------
+
+
+def swiglu(gate, up):
+    return jax.nn.silu(gate.astype(jnp.float32)).astype(gate.dtype) * up
+
+
+def mlp_init(key, d_model, d_ff, dtype, activation="swiglu"):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if activation == "swiglu":
+        return {
+            "w_gate": lecun_normal(k1, (d_model, d_ff), dtype),
+            "w_up": lecun_normal(k2, (d_model, d_ff), dtype),
+            "w_down": lecun_normal(k3, (d_ff, d_model), dtype, fan_in=d_ff),
+        }
+    return {
+        "w_up": lecun_normal(k1, (d_model, d_ff), dtype),
+        "b_up": jnp.zeros((d_ff,), dtype),
+        "w_down": lecun_normal(k2, (d_ff, d_model), dtype, fan_in=d_ff),
+        "b_down": jnp.zeros((d_model,), dtype),
+    }
+
+
+def mlp(p, x, activation="swiglu"):
+    if activation == "swiglu":
+        h = swiglu(x @ p["w_gate"], x @ p["w_up"])
+        return h @ p["w_down"]
+    h = jax.nn.gelu((x @ p["w_up"] + p["b_up"]).astype(jnp.float32)).astype(x.dtype)
+    return h @ p["w_down"] + p["b_down"]
+
+
+# -- embeddings -----------------------------------------------------------------
+
+
+def embedding_init(key, vocab, d_model, dtype):
+    return {"table": embed_init(key, (vocab, d_model), dtype)}
+
+
+def embedding_lookup(p, ids):
+    return jnp.take(p["table"], ids, axis=0)
+
+
+def sinusoidal_positions(S: int, d: int) -> jnp.ndarray:
+    pos = np.arange(S)[:, None]
+    dim = np.arange(0, d, 2)[None, :]
+    ang = pos / np.power(10000.0, dim / d)
+    out = np.zeros((S, d), np.float32)
+    out[:, 0::2] = np.sin(ang)
+    out[:, 1::2] = np.cos(ang)
+    return jnp.asarray(out)
+
+
+def pick_chunk(S: int, target: int) -> int:
+    """Largest divisor of S that is <= target (chunked scans need S % c == 0)."""
+    c = min(target, S)
+    while S % c:
+        c -= 1
+    return c
+
+
+def count_params(tree) -> int:
+    return int(sum(np.prod(l.shape) for l in jax.tree_util.tree_leaves(tree)))

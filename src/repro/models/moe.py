@@ -1,0 +1,88 @@
+"""Mixture-of-Experts MLP with top-k routing and capacity-based dispatch.
+
+Dispatch uses scatter/gather (not the one-hot (T,E,C) einsum) so the buffers
+stay O(E*C*D) — required at 1M-token global batches.  Tokens route per
+"group" (= one sequence), giving the partitioner a batch dim to shard; with
+experts sharded over the model axis the expert einsum induces the canonical
+EP all-to-all in the lowered collective schedule.
+
+Aux losses: load-balancing (Switch-style) returned for the trainer.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.modules import lecun_normal
+
+
+def moe_init(key, cfg, dtype):
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.moe.n_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "w_router": lecun_normal(ks[0], (D, E), jnp.float32),
+        "w_gate": lecun_normal(ks[1], (E, D, F), dtype),
+        "w_up": lecun_normal(ks[2], (E, D, F), dtype),
+        "w_down": lecun_normal(ks[3], (E, F, D), dtype, fan_in=F),
+    }
+
+
+def _capacity(tokens_per_group: int, n_experts: int, top_k: int, factor: float) -> int:
+    c = int(tokens_per_group * top_k * factor / n_experts)
+    return max(c, top_k)
+
+
+def moe_apply(p, x, cfg):
+    """x: (B, S, D) -> (y, aux_loss).  Groups = sequences (B)."""
+    B, S, D = x.shape
+    E = cfg.moe.n_experts
+    K = cfg.moe.top_k
+    C = _capacity(S, E, K, cfg.moe.capacity_factor)
+
+    logits = (x.astype(jnp.float32) @ p["w_router"]).astype(jnp.float32)  # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)  # (B,S,K)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # Position of each (token, k) within its expert's capacity buffer.
+    onehot = jax.nn.one_hot(expert_idx, E, dtype=jnp.int32)  # (B,S,K,E)
+    flat = onehot.reshape(B, S * K, E)
+    pos_in_expert = jnp.cumsum(flat, axis=1) - flat  # (B,S*K,E) exclusive
+    pos = (pos_in_expert * flat).sum(-1).reshape(B, S, K)  # (B,S,K)
+    keep = pos < C  # dropped tokens beyond capacity
+    gate_vals = gate_vals * keep
+
+    # Scatter tokens into (B, E, C, D).
+    e_flat = expert_idx.reshape(B, S * K)
+    pos_flat = jnp.where(keep, pos, C).reshape(B, S * K)  # C = overflow slot
+    xk = jnp.repeat(x[:, :, None, :], K, axis=2).reshape(B, S * K, D)
+    buf = jnp.zeros((B, E, C + 1, D), x.dtype)
+    b_idx = jnp.arange(B)[:, None]
+    buf = buf.at[b_idx, e_flat, pos_flat].add(xk)
+    buf = buf[:, :, :C]  # drop overflow slot
+
+    # Expert FFN: (B,E,C,D) x (E,D,F) — EP-sharded over the model axis.
+    h = jnp.einsum("becd,edf->becf", buf, p["w_gate"])
+    u = jnp.einsum("becd,edf->becf", buf, p["w_up"])
+    h = jax.nn.silu(h.astype(jnp.float32)).astype(x.dtype) * u
+    out = jnp.einsum("becf,efd->becd", h, p["w_down"])  # (B,E,C,D)
+
+    # Gather back and combine with gate weights.
+    out_pad = jnp.concatenate([out, jnp.zeros((B, E, 1, D), out.dtype)], axis=2)
+    picked = out_pad[b_idx, e_flat, pos_flat]  # (B,S*K,D)
+    picked = picked.reshape(B, S, K, D)
+    y = (picked.astype(jnp.float32) * gate_vals[..., None]).sum(axis=2).astype(x.dtype)
+
+    # Switch-style load-balance loss: E * sum_e f_e * P_e.
+    me = probs.mean(axis=(0, 1))  # mean router prob per expert
+    ce = (onehot.sum(2).reshape(B, S, E).mean(axis=(0, 1))).astype(jnp.float32) / K
+    aux = E * jnp.sum(me * ce)
+    return y, aux
+
+
+def moe_param_count(cfg) -> tuple[int, int]:
+    """(total expert params, active expert params) per layer."""
+    D, F, E, K = cfg.d_model, cfg.d_ff, cfg.moe.n_experts, cfg.moe.top_k
+    per_expert = 3 * D * F
+    return E * per_expert + D * E, K * per_expert + D * E

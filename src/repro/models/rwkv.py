@@ -1,0 +1,155 @@
+"""RWKV-6 "Finch" block: time-mix with data-dependent decay + channel-mix.
+
+Attention-free recurrence (paper arXiv:2404.05892).  Per head (dim N):
+
+    state_t = diag(w_t) @ state_{t-1} + k_t v_t^T          (N x N state)
+    y_t     = r_t @ (state_{t-1} + diag(u) k_t v_t^T)
+
+with w_t = exp(-exp(w0 + lora_w(x_t))) the data-dependent decay.  The
+training path scans over time (XLA); the chunked matmul-form TPU kernel
+lives in repro.kernels.rwkv_scan with this as its oracle.  Decode carries
+(state, shift) — O(1) per token, which is why rwkv6 serves long_500k.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.modules import lecun_normal, rmsnorm, rmsnorm_init
+
+
+def timemix_init(key, cfg, dtype):
+    D = cfg.d_model
+    N = cfg.rwkv.head_dim
+    H = D // N
+    L = cfg.rwkv.decay_lora
+    ks = jax.random.split(key, 9)
+    return {
+        "wr": lecun_normal(ks[0], (D, D), dtype),
+        "wk": lecun_normal(ks[1], (D, D), dtype),
+        "wv": lecun_normal(ks[2], (D, D), dtype),
+        "wg": lecun_normal(ks[3], (D, D), dtype),
+        "wo": lecun_normal(ks[4], (D, D), dtype),
+        # data-dependent decay LoRA: w_t = exp(-exp(w0 + (x A) B))
+        "w0": jnp.zeros((D,), jnp.float32) - 6.0,
+        "wA": lecun_normal(ks[5], (D, L), dtype),
+        "wB": lecun_normal(ks[6], (L, D), dtype),
+        "u": (jax.random.normal(ks[7], (H, N), jnp.float32) * 0.1),
+        # token-shift mixing coefficients
+        "mu_r": jnp.full((D,), 0.5, dtype),
+        "mu_k": jnp.full((D,), 0.5, dtype),
+        "mu_v": jnp.full((D,), 0.5, dtype),
+        "mu_g": jnp.full((D,), 0.5, dtype),
+        "mu_w": jnp.full((D,), 0.5, dtype),
+        "ln_x": {"scale": jnp.ones((D,), dtype)},
+    }
+
+
+def _token_shift(x, x_prev):
+    """shift: x_{t-1} for t>0; x_prev feeds position 0. x: (B,S,D)."""
+    return jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def timemix_apply(p, x, cfg, state=None, x_prev=None):
+    """x: (B,S,D) -> (y, (state, last_x)).  state: (B,H,N,N) f32."""
+    B, S, D = x.shape
+    N = cfg.rwkv.head_dim
+    H = D // N
+    if state is None:
+        state = jnp.zeros((B, H, N, N), jnp.float32)
+    if x_prev is None:
+        x_prev = jnp.zeros((B, D), x.dtype)
+
+    xs = _token_shift(x, x_prev)
+    xr = x + (xs - x) * p["mu_r"]
+    xk = x + (xs - x) * p["mu_k"]
+    xv = x + (xs - x) * p["mu_v"]
+    xg = x + (xs - x) * p["mu_g"]
+    xw = x + (xs - x) * p["mu_w"]
+
+    r = (xr @ p["wr"]).reshape(B, S, H, N).astype(jnp.float32)
+    k = (xk @ p["wk"]).reshape(B, S, H, N).astype(jnp.float32)
+    v = (xv @ p["wv"]).reshape(B, S, H, N).astype(jnp.float32)
+    g = jax.nn.silu((xg @ p["wg"]).astype(jnp.float32))
+    # data-dependent decay in (0,1): w = exp(-exp(w0 + lora))
+    lora = (xw @ p["wA"]) @ p["wB"]
+    w = jnp.exp(-jnp.exp(p["w0"] + lora.astype(jnp.float32)))  # (B,S,D)
+    w = w.reshape(B, S, H, N)
+    u = p["u"]  # (H,N)
+
+    def step(st, inp):
+        rt, kt, vt, wt = inp  # (B,H,N) each
+        kv = kt[..., :, None] * vt[..., None, :]  # (B,H,N,N)
+        y = jnp.einsum("bhn,bhnm->bhm", rt, st + u[None, :, :, None] * kv)
+        st_new = wt[..., :, None] * st + kv
+        return st_new, y
+
+    rs = jnp.moveaxis(r, 1, 0)  # (S,B,H,N)
+    ks_ = jnp.moveaxis(k, 1, 0)
+    vs = jnp.moveaxis(v, 1, 0)
+    ws = jnp.moveaxis(w, 1, 0)
+    from repro.models.scan_utils import chunked_scan
+
+    state, ys = chunked_scan(step, state, (rs, ks_, vs, ws), chunk=64)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, D)  # (B,S,D)
+    y = rmsnorm(p["ln_x"], y.astype(x.dtype))
+    y = (y.astype(jnp.float32) * g).astype(x.dtype)
+    return y @ p["wo"], (state, x[:, -1, :])
+
+
+def channelmix_init(key, cfg, dtype):
+    D, F = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "wk": lecun_normal(ks[0], (D, F), dtype),
+        "wv": lecun_normal(ks[1], (F, D), dtype, fan_in=F),
+        "wr": lecun_normal(ks[2], (D, D), dtype),
+        "mu_k": jnp.full((D,), 0.5, dtype),
+        "mu_r": jnp.full((D,), 0.5, dtype),
+    }
+
+
+def channelmix_apply(p, x, x_prev=None):
+    B, S, D = x.shape
+    if x_prev is None:
+        x_prev = jnp.zeros((B, D), x.dtype)
+    xs = _token_shift(x, x_prev)
+    xk = x + (xs - x) * p["mu_k"]
+    xr = x + (xs - x) * p["mu_r"]
+    k = jnp.square(jax.nn.relu((xk @ p["wk"]).astype(jnp.float32))).astype(x.dtype)
+    r = jax.nn.sigmoid((xr @ p["wr"]).astype(jnp.float32)).astype(x.dtype)
+    return r * (k @ p["wv"]), x[:, -1, :]
+
+
+def rwkv_block_init(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": rmsnorm_init(cfg.d_model, dtype),
+        "time_mix": timemix_init(k1, cfg, dtype),
+        "ln2": rmsnorm_init(cfg.d_model, dtype),
+        "channel_mix": channelmix_init(k2, cfg, dtype),
+    }
+
+
+def rwkv_block_apply(p, x, cfg, state=None):
+    """state: None (train from zeros) or dict(tm_state, tm_x, cm_x)."""
+    tm_state = state["tm_state"] if state else None
+    tm_x = state["tm_x"] if state else None
+    cm_x = state["cm_x"] if state else None
+    h, (tm_state, tm_x) = timemix_apply(p["time_mix"], rmsnorm(p["ln1"], x), cfg, tm_state, tm_x)
+    x = x + h
+    h, cm_x = channelmix_apply(p["channel_mix"], rmsnorm(p["ln2"], x), cm_x)
+    x = x + h
+    return x, {"tm_state": tm_state, "tm_x": tm_x, "cm_x": cm_x}
+
+
+def rwkv_init_state(cfg, B, dtype):
+    D = cfg.d_model
+    N = cfg.rwkv.head_dim
+    H = D // N
+    return {
+        "tm_state": jnp.zeros((B, H, N, N), jnp.float32),
+        "tm_x": jnp.zeros((B, D), dtype),
+        "cm_x": jnp.zeros((B, D), dtype),
+    }

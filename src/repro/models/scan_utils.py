@@ -1,0 +1,82 @@
+"""Memory-bounded sequence scans: chunked remat for recurrent layers.
+
+A plain ``lax.scan`` over S timesteps saves the carry at every step for the
+backward pass — for RWKV's (B,H,N,N) state at S=4k that is tens of GB per
+device.  ``chunked_scan`` reshapes time into (n_chunks, chunk) and runs an
+outer scan whose body (a full inner scan over ``chunk`` steps) is wrapped in
+``jax.checkpoint``: the backward pass stores only n_chunks carries and
+recomputes inside each chunk.  Peak state memory drops from
+O(S * state) to O((S/chunk + chunk) * state).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def chunked_scan(step_fn, init, xs, chunk: int = 64):
+    """Like lax.scan(step_fn, init, xs) but with chunked rematerialization.
+
+    xs leaves: (S, ...); returns (final_carry, ys stacked (S, ...)).
+    S must be divisible by chunk (callers pad or pick chunk accordingly).
+    """
+    S = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    if S <= chunk:
+        return jax.lax.scan(step_fn, init, xs)
+    assert S % chunk == 0, f"seq {S} not divisible by chunk {chunk}"
+    n = S // chunk
+    xs_c = jax.tree_util.tree_map(
+        lambda a: a.reshape((n, chunk) + a.shape[1:]), xs
+    )
+
+    @partial(jax.checkpoint, prevent_cse=False)
+    def chunk_body(carry, xc):
+        return jax.lax.scan(step_fn, carry, xc)
+
+    carry, ys = jax.lax.scan(chunk_body, init, xs_c)
+    ys = jax.tree_util.tree_map(
+        lambda a: a.reshape((S,) + a.shape[2:]), ys
+    )
+    return carry, ys
+
+
+def microbatch_scan(grad_fn, params, batch, n_micro: int):
+    """Gradient accumulation: split batch leaves (M, b, ...) into n_micro
+    slices along b, scan-accumulate (losses, grads).
+
+    grad_fn(params, micro_batch) -> (loss (M,), grads).  Returns
+    (mean loss (M,), mean grads).
+    """
+    b = jax.tree_util.tree_leaves(batch)[0].shape[1]
+    n_micro = min(n_micro, b)  # dpworkers: per-worker batch may be tiny
+    if n_micro <= 1:
+        return grad_fn(params, batch)
+    assert b % n_micro == 0, f"per-worker batch {b} not divisible by {n_micro}"
+    bm = b // n_micro
+    # (M, b, ...) -> (n_micro, M, bm, ...)
+    split = jax.tree_util.tree_map(
+        lambda a: jnp.moveaxis(
+            a.reshape((a.shape[0], n_micro, bm) + a.shape[2:]), 1, 0
+        ),
+        batch,
+    )
+
+    def body(acc, mb):
+        losses, grads = grad_fn(params, mb)
+        acc_l, acc_g = acc
+        acc_g = jax.tree_util.tree_map(
+            lambda x, g: x + g.astype(jnp.float32), acc_g, grads
+        )
+        return (acc_l + losses, acc_g), None
+
+    M = jax.tree_util.tree_leaves(batch)[0].shape[0]
+    zeros_g = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params
+    )
+    (losses, grads), _ = jax.lax.scan(body, (jnp.zeros((M,)), zeros_g), split)
+    inv = 1.0 / n_micro
+    grads = jax.tree_util.tree_map(lambda g: (g * inv), grads)
+    return losses * inv, grads

@@ -1,0 +1,171 @@
+"""Whisper-style encoder-decoder (audio family).
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs()``
+supplies precomputed frame embeddings (B, S_enc, D).  The transformer
+backbone is real: a bidirectional encoder and a causal decoder with
+cross-attention, learned positions, LayerNorm + GELU (whisper conventions).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models.modules import (
+    embedding_init,
+    embedding_lookup,
+    layernorm,
+    layernorm_init,
+    lecun_normal,
+    mlp,
+    pick_chunk,
+    mlp_init,
+    sinusoidal_positions,
+)
+
+
+def _dt(cfg):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+
+
+def _stack(trees):
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def enc_block_init(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": layernorm_init(cfg.d_model, dtype),
+        "attn": attn.attn_init(k1, cfg, dtype),
+        "ln2": layernorm_init(cfg.d_model, dtype),
+        "mlp": mlp_init(k2, cfg.d_model, cfg.d_ff, dtype, "gelu"),
+    }
+
+
+def dec_block_init(key, cfg, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": layernorm_init(cfg.d_model, dtype),
+        "self_attn": attn.attn_init(k1, cfg, dtype),
+        "ln_x": layernorm_init(cfg.d_model, dtype),
+        "cross_attn": attn.attn_init(k2, cfg, dtype),
+        "ln2": layernorm_init(cfg.d_model, dtype),
+        "mlp": mlp_init(k3, cfg.d_model, cfg.d_ff, dtype, "gelu"),
+    }
+
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    dtype = _dt(cfg)
+    ks = jax.random.split(key, cfg.n_enc_layers + cfg.n_layers + 3)
+    enc = _stack([enc_block_init(ks[i], cfg, dtype) for i in range(cfg.n_enc_layers)])
+    dec = _stack(
+        [dec_block_init(ks[cfg.n_enc_layers + i], cfg, dtype) for i in range(cfg.n_layers)]
+    )
+    return {
+        "embed": embedding_init(ks[-1], cfg.vocab_size, cfg.d_model, dtype),
+        "dec_pos": {"table": lecun_normal(ks[-2], (32768, cfg.d_model), dtype)},  # sized to the max assigned decode shape
+        "enc_blocks": enc,
+        "dec_blocks": dec,
+        "enc_norm": layernorm_init(cfg.d_model, dtype),
+        "final_norm": layernorm_init(cfg.d_model, dtype),
+        "lm_head": {"w": lecun_normal(ks[-3], (cfg.d_model, cfg.vocab_size), dtype)},
+    }
+
+
+def abstract_params(cfg: ArchConfig) -> dict:
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def encode(params, frames, cfg: ArchConfig):
+    """frames: (B, S_enc, D) precomputed embeddings (frontend stub)."""
+    S = frames.shape[1]
+    x = frames + sinusoidal_positions(S, cfg.d_model).astype(frames.dtype)
+
+    def body(carry, blk):
+        h = attn.attn_apply(blk["attn"], layernorm(blk["ln1"], carry), cfg,
+                            causal=False, rope=False,
+                            q_chunk=pick_chunk(S, 512), kv_chunk=pick_chunk(S, 1024))
+        carry = carry + h
+        h = mlp(blk["mlp"], layernorm(blk["ln2"], carry), "gelu")
+        return carry + h, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return layernorm(params["enc_norm"], x)
+
+
+def decode_train(params, tokens, enc_out, cfg: ArchConfig):
+    """Teacher-forced decoder -> hidden states (B, S, D)."""
+    B, S = tokens.shape
+    x = embedding_lookup(params["embed"], tokens)
+    x = x + params["dec_pos"]["table"][:S]
+    qc, kc = pick_chunk(S, 512), pick_chunk(S, 1024)
+
+    def body(carry, blk):
+        h = attn.attn_apply(blk["self_attn"], layernorm(blk["ln1"], carry), cfg,
+                            causal=True, rope=False, q_chunk=qc, kv_chunk=kc)
+        carry = carry + h
+        h = attn.cross_attn_apply(blk["cross_attn"], layernorm(blk["ln_x"], carry),
+                                  enc_out, cfg, q_chunk=qc,
+                                  kv_chunk=pick_chunk(enc_out.shape[1], 1024))
+        carry = carry + h
+        h = mlp(blk["mlp"], layernorm(blk["ln2"], carry), "gelu")
+        return carry + h, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+    return layernorm(params["final_norm"], x)
+
+
+def init_cache(cfg: ArchConfig, B: int, S: int):
+    """Decoder self-attn KV cache + cross-attn KV (computed at prefill)."""
+    dtype = _dt(cfg)
+    Hk, hd = cfg.n_kv_heads, cfg.hd
+    Se = cfg.enc_seq_len
+    one = lambda: {
+        "k": jnp.zeros((B, S, Hk, hd), dtype),
+        "v": jnp.zeros((B, S, Hk, hd), dtype),
+        "xk": jnp.zeros((B, Se, Hk, hd), dtype),
+        "xv": jnp.zeros((B, Se, Hk, hd), dtype),
+    }
+    return _stack([one() for _ in range(cfg.n_layers)])
+
+
+def abstract_cache(cfg: ArchConfig, B: int, S: int):
+    return jax.eval_shape(lambda: init_cache(cfg, B, S))
+
+
+def decode_step(params, cache, token, pos, cfg: ArchConfig):
+    """One decoder token against self cache + fixed cross KV."""
+    x = embedding_lookup(params["embed"], token[:, None])
+    x = x + jax.lax.dynamic_slice_in_dim(params["dec_pos"]["table"], pos, 1, axis=0)
+    B = x.shape[0]
+    H, hd = cfg.n_heads, cfg.hd
+
+    def body(carry, blk_cache):
+        blk, c = blk_cache
+        h = layernorm(blk["ln1"], carry)
+        q = (h @ blk["self_attn"]["wq"]).reshape(B, 1, H, hd)
+        k = (h @ blk["self_attn"]["wk"]).reshape(B, 1, cfg.n_kv_heads, hd)
+        v = (h @ blk["self_attn"]["wv"]).reshape(B, 1, cfg.n_kv_heads, hd)
+        c = dict(c)
+        c["k"] = jax.lax.dynamic_update_slice_in_dim(c["k"], k.astype(c["k"].dtype), pos, axis=1)
+        c["v"] = jax.lax.dynamic_update_slice_in_dim(c["v"], v.astype(c["v"].dtype), pos, axis=1)
+        o = attn.decode_attention(q, c["k"], c["v"], length=pos + 1)
+        carry = carry + o.reshape(B, 1, -1) @ blk["self_attn"]["wo"]
+        # cross attention against precomputed encoder KV
+        h = layernorm(blk["ln_x"], carry)
+        q = (h @ blk["cross_attn"]["wq"]).reshape(B, 1, H, hd)
+        o = attn.decode_attention(q, c["xk"], c["xv"])
+        carry = carry + o.reshape(B, 1, -1) @ blk["cross_attn"]["wo"]
+        h = mlp(blk["mlp"], layernorm(blk["ln2"], carry), "gelu")
+        return carry + h, c
+
+    x, new_cache = jax.lax.scan(body, x, (params["dec_blocks"], cache))
+    x = layernorm(params["final_norm"], x)
+    logits = x[:, 0, :] @ params["lm_head"]["w"]
+    return logits.astype(jnp.float32), new_cache

@@ -1,0 +1,12 @@
+from repro.optim.optimizers import Optimizer, adamw, sgd
+from repro.optim.schedule import constant, cosine_decay, step_decay_on_plateau, warmup_cosine
+
+__all__ = [
+    "Optimizer",
+    "adamw",
+    "sgd",
+    "constant",
+    "cosine_decay",
+    "step_decay_on_plateau",
+    "warmup_cosine",
+]

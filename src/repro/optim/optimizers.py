@@ -1,0 +1,108 @@
+"""Optimizers (own implementation — no optax): SGD+momentum+WD, AdamW.
+
+Functional API mirroring the standard (init, update) pair; update returns
+*updates* (deltas) so the trainer controls application order — NetMax applies
+the consensus mix AFTER the local step (Alg. 2: first update then pull-mix).
+
+All states are pytrees matching params; elementwise ops broadcast over any
+leading stacking dims (NetMax worker replicas keep independent momenta).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable  # (grads, state, params, lr) -> (updates, state)
+
+    def apply(self, params, updates):
+        return jax.tree_util.tree_map(
+            lambda p, u: (p.astype(jnp.float32) + u.astype(jnp.float32)).astype(p.dtype),
+            params,
+            updates,
+        )
+
+
+def sgd(momentum: float = 0.9, weight_decay: float = 0.0, nesterov: bool = False) -> Optimizer:
+    """Paper §V config: SGD, momentum 0.9, weight decay 1e-4."""
+
+    def init(params):
+        if momentum == 0.0:
+            return {}
+        return {"m": jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def update(grads, state, params, lr):
+        def one(g, p, m=None):
+            g = g.astype(jnp.float32)
+            if weight_decay:
+                g = g + weight_decay * p.astype(jnp.float32)
+            if m is None:
+                return -lr * g, None
+            m_new = momentum * m + g
+            step = g + momentum * m_new if nesterov else m_new
+            return -lr * step, m_new
+
+        if momentum == 0.0:
+            upd = jax.tree_util.tree_map(lambda g, p: one(g, p)[0], grads, params)
+            return upd, state
+        out = jax.tree_util.tree_map(one, grads, params, state["m"])
+        upd = jax.tree_util.tree_map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        m = jax.tree_util.tree_map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        return upd, {"m": m}
+
+    return Optimizer(init, update)
+
+
+def adamw(
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "m": jax.tree_util.tree_map(z, params),
+            "v": jax.tree_util.tree_map(z, params),
+            "t": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr):
+        t = state["t"] + 1
+        c1 = 1.0 - b1 ** t.astype(jnp.float32)
+        c2 = 1.0 - b2 ** t.astype(jnp.float32)
+
+        def one(g, p, m, v):
+            g = g.astype(jnp.float32)
+            m_new = b1 * m + (1 - b1) * g
+            v_new = b2 * v + (1 - b2) * g * g
+            step = (m_new / c1) / (jnp.sqrt(v_new / c2) + eps)
+            if weight_decay:
+                step = step + weight_decay * p.astype(jnp.float32)
+            return -lr * step, m_new, v_new
+
+        out = jax.tree_util.tree_map(one, grads, params, state["m"], state["v"])
+        pick = lambda i: jax.tree_util.tree_map(
+            lambda o: o[i], out, is_leaf=lambda x: isinstance(x, tuple)
+        )
+        return pick(0), {"m": pick(1), "v": pick(2), "t": t}
+
+    return Optimizer(init, update)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    n = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale.astype(g.dtype), grads), n

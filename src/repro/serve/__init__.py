@@ -1,0 +1,1 @@
+"""Serving runtime: KV-cache engine with batched prefill/decode."""

@@ -1,0 +1,3 @@
+from repro.solver.lp import LPResult, solve_lp
+
+__all__ = ["LPResult", "solve_lp"]

@@ -1,0 +1,1 @@
+"""Training runtime: NetMax trainer, checkpointing, elasticity, simulator."""

@@ -1,0 +1,312 @@
+"""Event-driven asynchronous decentralized-training simulator.
+
+This is where the paper's *wall-clock* claims are reproduced faithfully:
+each worker has its own virtual clock; one event = one Alg.-2 iteration of
+one worker (grad step on its own data + pull from a sampled neighbor), with
+the iteration duration drawn from the heterogeneous LinkTimeModel.  The
+Network Monitor wakes on its own schedule (T_s) and republishes (P, rho).
+
+Algorithms share the event loop and differ only in communication semantics:
+
+  netmax     adaptive P from Alg. 3; mix weight alpha*rho*gamma_{i,m}
+  adpsgd     uniform neighbor, fixed averaging weight 1/2 (Lian et al.)
+  adpsgd+mon AD-PSGD with Monitor-optimized probabilities (paper §V-H)
+  allreduce  synchronous: all workers step together at the slowest pace
+  prague     random groups of g workers partial-allreduce per iteration
+  ps-sync    parameter server, synchronous (barrier at PS)
+  ps-async   parameter server, per-worker async push/pull
+
+Models are real JAX models (small MLPs) trained on real (synthetic) data —
+losses/accuracies are measured, not modeled.
+"""
+
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import consensus
+from repro.core.monitor import IterationTimeEMA, NetworkMonitor
+from repro.core.nettime import LinkTimeModel
+
+
+# --------------------------------------------------------------------------
+# Small real model: MLP classifier (pure JAX)
+# --------------------------------------------------------------------------
+
+
+def mlp_init(key, dims):
+    ks = jax.random.split(key, len(dims) - 1)
+    return [
+        {
+            "w": jax.random.normal(k, (a, b)) / np.sqrt(a),
+            "b": jnp.zeros((b,)),
+        }
+        for k, a, b in zip(ks, dims[:-1], dims[1:])
+    ]
+
+
+def mlp_apply(params, x):
+    for i, layer in enumerate(params):
+        x = x @ layer["w"] + layer["b"]
+        if i < len(params) - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def ce_loss(params, x, y):
+    logits = mlp_apply(params, x)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+    return (logz - gold).mean()
+
+
+@jax.jit
+def _grad_step(params, x, y, lr, momentum_state, mu):
+    loss, grads = jax.value_and_grad(ce_loss)(params, x, y)
+    new_m = jax.tree_util.tree_map(lambda m, g: mu * m + g, momentum_state, grads)
+    new_p = jax.tree_util.tree_map(lambda p, m: p - lr * m, params, new_m)
+    return loss, new_p, new_m
+
+
+@jax.jit
+def _mix(params, pulled, w):
+    return jax.tree_util.tree_map(
+        lambda a, b: (1.0 - w) * a + w * b, params, pulled
+    )
+
+
+# --------------------------------------------------------------------------
+# Simulation
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class SimConfig:
+    algorithm: str = "netmax"
+    n_workers: int = 8
+    lr: float = 0.05
+    momentum: float = 0.9
+    rho: float | None = None  # netmax: from Monitor
+    batch_size: int = 64
+    total_events: int = 4000
+    monitor_period: float = 30.0  # T_s
+    ema_beta: float = 0.5
+    policy_K: int = 8
+    policy_R: int = 8
+    prague_group: int = 4
+    # Concurrent partial-allreduce groups contend for shared links (paper
+    # §V-B: "concurrent executions of partial-allreduce of different groups
+    # compete for the limited bandwidth capacity, resulting in network
+    # congestion").  Each extra concurrent group inflates ring time by this
+    # factor.
+    prague_contention: float = 0.5
+    serial_compute: bool = False  # Fig. 7 ablation: no compute/comm overlap
+    uniform_policy: bool = False  # Fig. 7 ablation: no adaptive probabilities
+    adaptive_weight: bool = True  # NetMax gamma weighting vs fixed 1/2
+    ps_node: int = 0  # which worker doubles as the PS (ps-* algorithms)
+    # All PS traffic funnels through one node (paper SSVI: "the training is
+    # constrained by the network capacity at the parameter server").  Each
+    # additional concurrent worker inflates the PS link time.
+    ps_congestion: float = 0.4
+    seed: int = 0
+
+
+@dataclass
+class SimResult:
+    times: list = field(default_factory=list)  # virtual seconds per record
+    losses: list = field(default_factory=list)  # global mean loss
+    accs: list = field(default_factory=list)
+    events: list = field(default_factory=list)
+    comm_time: float = 0.0
+    compute_time: float = 0.0
+    policy_updates: int = 0
+
+    def time_to_loss(self, target: float) -> float:
+        for t, l in zip(self.times, self.losses):
+            if l <= target:
+                return t
+        return float("inf")
+
+    def final_accuracy(self) -> float:
+        return self.accs[-1] if self.accs else 0.0
+
+
+def _mean_params(replicas):
+    return jax.tree_util.tree_map(lambda *xs: sum(xs) / len(xs), *replicas)
+
+
+def simulate(
+    cfg: SimConfig,
+    link_model: LinkTimeModel,
+    data_x: np.ndarray,
+    data_y: np.ndarray,
+    part_idx: list[np.ndarray],
+    eval_x: np.ndarray,
+    eval_y: np.ndarray,
+    record_every: int = 100,
+) -> SimResult:
+    M = cfg.n_workers
+    rng = np.random.default_rng(cfg.seed)
+    key = jax.random.PRNGKey(cfg.seed)
+    dims = [data_x.shape[1], 128, 64, int(data_y.max()) + 1]
+    p0 = mlp_init(key, dims)
+    replicas = [jax.tree_util.tree_map(jnp.array, p0) for _ in range(M)]
+    momenta = [jax.tree_util.tree_map(jnp.zeros_like, p0) for _ in range(M)]
+
+    d = np.ones((M, M)) - np.eye(M)
+    P = np.where(d > 0, 1.0 / (M - 1), 0.0)
+    # Initial rho: keeps w = alpha*rho*gamma <= 0.5 under the uniform policy
+    # (gamma = M-1); the Monitor's Alg.-3 rho replaces it on first refresh.
+    rho = cfg.rho if cfg.rho is not None else 0.5 / (2 * cfg.lr * (M - 1))
+    emas = [IterationTimeEMA(M, beta=cfg.ema_beta) for _ in range(M)]
+    monitor = NetworkMonitor(M, alpha=cfg.lr, K=cfg.policy_K, R=cfg.policy_R)
+    use_monitor = cfg.algorithm in ("netmax", "adpsgd+mon") and not cfg.uniform_policy
+
+    res = SimResult()
+
+    def eval_now(t, ev):
+        mean_p = _mean_params(replicas)
+        loss = float(ce_loss(mean_p, jnp.asarray(eval_x), jnp.asarray(eval_y)))
+        logits = mlp_apply(mean_p, jnp.asarray(eval_x))
+        acc = float((jnp.argmax(logits, -1) == jnp.asarray(eval_y)).mean())
+        res.times.append(t)
+        res.losses.append(loss)
+        res.accs.append(acc)
+        res.events.append(ev)
+
+    def batch_for(i):
+        idx = rng.choice(part_idx[i], size=min(cfg.batch_size, len(part_idx[i])))
+        return jnp.asarray(data_x[idx]), jnp.asarray(data_y[idx])
+
+    # ---------------- synchronous algorithms: round-based loop ----------------
+    if cfg.algorithm in ("allreduce", "prague", "ps-sync"):
+        t = 0.0
+        rounds = cfg.total_events // M
+        for r in range(rounds):
+            # compute + comm time for the round
+            comp = link_model.compute_time
+            if cfg.algorithm == "allreduce":
+                # ring allreduce: bottlenecked by the slowest link in the ring
+                ring = [(i, (i + 1) % M) for i in range(M)]
+                step_t = max(link_model.iteration_time(i, j, now=t) for i, j in ring)
+                comm = step_t * 2 * (M - 1) / M  # 2(M-1)/M ring phases
+            elif cfg.algorithm == "prague":
+                order = rng.permutation(M)
+                comm = 0.0
+                g = cfg.prague_group
+                n_groups = max(1, M // g)
+                congestion = 1.0 + cfg.prague_contention * (n_groups - 1)
+                for s in range(0, M, g):
+                    grp = order[s : s + g]
+                    if len(grp) < 2:
+                        continue
+                    ring = [(int(grp[a]), int(grp[(a + 1) % len(grp)])) for a in range(len(grp))]
+                    ct = max(link_model.iteration_time(i, j, now=t) for i, j in ring)
+                    comm = max(comm, ct * 2 * (len(grp) - 1) / len(grp) * congestion)
+            else:  # ps-sync: every worker exchanges with the PS node
+                ps = cfg.ps_node
+                congestion = 1.0 + cfg.ps_congestion * (M - 2)
+                comm = max(
+                    link_model.iteration_time(i, ps, now=t) for i in range(M) if i != ps
+                ) * congestion
+            t += comp + comm
+            res.comm_time += comm
+            res.compute_time += comp
+            # parameter updates
+            for i in range(M):
+                x, y = batch_for(i)
+                _, replicas[i], momenta[i] = _grad_step(
+                    replicas[i], x, y, cfg.lr, momenta[i], cfg.momentum
+                )
+            if cfg.algorithm == "prague":
+                for s in range(0, M, cfg.prague_group):
+                    grp = [int(w) for w in order[s : s + cfg.prague_group]]
+                    mean_p = _mean_params([replicas[i] for i in grp])
+                    for i in grp:
+                        replicas[i] = mean_p
+            else:
+                mean_p = _mean_params(replicas)
+                for i in range(M):
+                    replicas[i] = mean_p
+            if r % max(1, record_every // M) == 0:
+                eval_now(t, (r + 1) * M)
+        eval_now(t, rounds * M)
+        return res
+
+    # ---------------- asynchronous algorithms: event-driven loop --------------
+    heap = []
+    for i in range(M):
+        heapq.heappush(heap, (rng.exponential(0.005), i))
+    next_monitor = cfg.monitor_period
+    ps = cfg.ps_node
+    ev = 0
+    t = 0.0
+    while ev < cfg.total_events:
+        t, i = heapq.heappop(heap)
+        ev += 1
+
+        if cfg.algorithm == "ps-async":
+            m = ps if i != ps else None
+            x, y = batch_for(i)
+            _, replicas[i], momenta[i] = _grad_step(
+                replicas[i], x, y, cfg.lr, momenta[i], cfg.momentum
+            )
+            if m is not None:
+                # push/pull with PS: PS absorbs then returns the average;
+                # the PS link carries all M-1 workers' traffic (congestion).
+                mean_p = _mix(replicas[ps], replicas[i], 0.5)
+                replicas[ps] = mean_p
+                replicas[i] = mean_p
+                congestion = 1.0 + cfg.ps_congestion * (M - 2)
+                dur = link_model.iteration_time(i, ps, now=t) * congestion
+            else:
+                dur = link_model.compute_time
+        else:
+            # gossip family: sample neighbor from P[i]
+            row = P[i] / P[i].sum()
+            m = int(rng.choice(M, p=row))
+            x, y = batch_for(i)
+            _, x_half, momenta[i] = _grad_step(
+                replicas[i], x, y, cfg.lr, momenta[i], cfg.momentum
+            )
+            if m != i and d[i, m]:
+                if cfg.algorithm == "netmax" and cfg.adaptive_weight:
+                    gamma = (d[i, m] + d[m, i]) / (2 * P[i, m])
+                    w = min(cfg.lr * rho * gamma, 0.9)
+                else:
+                    w = 0.5  # AD-PSGD fixed averaging
+                replicas[i] = _mix(x_half, replicas[m], w)
+                net = link_model.iteration_time(i, m, now=t)
+            else:
+                replicas[i] = x_half
+                net = 0.0
+            comp = link_model.compute_time
+            dur = (comp + net) if cfg.serial_compute else max(comp, net)
+            res.comm_time += net if cfg.serial_compute else max(0.0, net - comp)
+            res.compute_time += comp
+            emas[i].update(m, dur)
+
+        heapq.heappush(heap, (t + dur, i))
+
+        # Network Monitor wakes every T_s
+        if use_monitor and t >= next_monitor:
+            monitor.collect({j: emas[j].snapshot() for j in range(M)})
+            pol = monitor.step()
+            P = pol.P.copy()
+            # guard: keep rows valid for sampling
+            bad = P.sum(axis=1) <= 0
+            P[bad] = np.where(d[bad] > 0, 1.0 / (M - 1), 0.0)
+            if cfg.algorithm == "netmax":
+                rho = pol.rho
+            res.policy_updates += 1
+            next_monitor += cfg.monitor_period
+
+        if ev % record_every == 0:
+            eval_now(t, ev)
+    eval_now(t, ev)
+    return res

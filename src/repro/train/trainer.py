@@ -1,0 +1,149 @@
+"""NetMax training step + baseline algorithms, SPMD-ready.
+
+``make_train_step`` builds the jit-able per-round function.  Parameters are
+*stacked* over NetMax workers (leading M dim, sharded over the worker mesh
+axes); one round = every worker performs one Alg.-2 iteration:
+
+  1. per-worker grads               (vmapped value_and_grad)
+  2. local optimizer step           (x_half; momenta stay worker-local)
+  3. gossip pull of pre-round x     (gather | ppermute | compressed)
+  4. consensus mix                  ((1-w) x_half + w pulled,
+                                     w_i = alpha*rho*gamma_{i,m_i})
+
+Baselines (same substrate, different step): Allreduce-SGD (psum grads),
+AD-PSGD (uniform gossip — NetMax with a uniform policy), Prague-style
+group partial-allreduce, PS-sync/async (see train/simulator.py for the
+async time semantics).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.dist import gossip
+from repro.models import lm
+from repro.optim import Optimizer
+
+
+@dataclass(frozen=True)
+class TrainStepConfig:
+    gossip_mode: str = "gather"  # gather | ppermute | masked_psum | none
+    allreduce: bool = False  # Allreduce-SGD baseline (replaces gossip)
+    prague_groups: int = 0  # >0: Prague-style partial all-reduce groups
+    use_gossip_mix_kernel: bool = False  # Pallas fused mix (TPU)
+    grad_clip: float = 0.0
+
+
+def make_train_step(
+    cfg: ArchConfig,
+    optimizer: Optimizer,
+    M: int,
+    step_cfg: TrainStepConfig = TrainStepConfig(),
+    mesh=None,
+    worker_axes: tuple = (),
+    param_specs=None,
+):
+    """Returns train_step(params, opt_state, batch, gossip_in) ->
+    (params, opt_state, metrics).
+
+    params/opt_state leaves: (M, ...).  batch leaves: (M, B/M, ...).
+    gossip_in: {'neighbors': (M,) i32, 'weights': (M,) f32, 'lr': f32[],
+                'perm': static via closure for ppermute mode}
+    """
+
+    def per_worker_loss(p, b):
+        return lm.loss_fn(p, b, cfg)
+
+    vgrad = jax.vmap(jax.value_and_grad(per_worker_loss))
+
+    def grad_fn(params, batch):
+        from repro.models.scan_utils import microbatch_scan
+
+        return microbatch_scan(vgrad, params, batch, cfg.microbatches)
+
+    def local_step(params, opt_state, batch, lr):
+        losses, grads = grad_fn(params, batch)
+        if step_cfg.grad_clip:
+            from repro.optim.optimizers import clip_by_global_norm
+
+            grads, _ = clip_by_global_norm(grads, step_cfg.grad_clip)
+        if step_cfg.allreduce:
+            # Allreduce-SGD baseline: average grads across workers
+            # (mean over the stacked worker dim — lowers to an all-reduce
+            # along the worker mesh axes).
+            grads = jax.tree_util.tree_map(
+                lambda g: jnp.broadcast_to(g.mean(axis=0, keepdims=True), g.shape), grads
+            )
+        elif step_cfg.prague_groups > 1:
+            # Prague: random group partial-allreduce.  Groups are contiguous
+            # worker ranges re-randomized on the host per round via the
+            # neighbors permutation; here: mean within G groups.
+            G = step_cfg.prague_groups
+
+            def group_mean(g):
+                gg = g.reshape((G, M // G) + g.shape[1:])
+                gg = jnp.broadcast_to(gg.mean(axis=1, keepdims=True), gg.shape)
+                return gg.reshape(g.shape)
+
+            grads = jax.tree_util.tree_map(group_mean, grads)
+        updates, opt_state = optimizer.update(grads, opt_state, params, lr)
+        x_half = optimizer.apply(params, updates)
+        return losses, x_half, opt_state
+
+    def gossip_pull(params, neighbors, perm):
+        if step_cfg.gossip_mode == "none" or M == 1:
+            return params
+        if step_cfg.gossip_mode == "gather":
+            return gossip.pull_gather(params, neighbors)
+        if step_cfg.gossip_mode == "masked_psum":
+            return gossip.pull_masked_psum(params, neighbors, M)
+        if step_cfg.gossip_mode == "ppermute":
+            assert perm is not None and mesh is not None
+            return gossip.pull_ppermute(params, perm, mesh, worker_axes, specs=param_specs)
+        raise ValueError(step_cfg.gossip_mode)
+
+    def train_step(params, opt_state, batch, gossip_in, *, perm=None):
+        lr = gossip_in["lr"]
+        losses, x_half, opt_state = local_step(params, opt_state, batch, lr)
+        if step_cfg.allreduce or step_cfg.prague_groups > 1 or step_cfg.gossip_mode == "none":
+            new_params = x_half
+        else:
+            pulled = gossip_pull(params, gossip_in["neighbors"], perm)
+            if step_cfg.use_gossip_mix_kernel:
+                from repro.kernels import ops as kops
+
+                new_params = kops.gossip_mix_tree(
+                    x_half, pulled, gossip_in["weights"]
+                )
+            else:
+                new_params = gossip.mix(x_half, pulled, gossip_in["weights"])
+        metrics = {"loss": losses.mean(), "loss_per_worker": losses}
+        return new_params, opt_state, metrics
+
+    return train_step
+
+
+def init_stacked(cfg: ArchConfig, optimizer: Optimizer, M: int, key):
+    """Initialize M worker replicas (identical start — paper Alg. 2 line 1
+    uses independent x_i^0; identical init is the common practical choice
+    and also what D-PSGD baselines use)."""
+    params1 = lm.init_params(cfg, key)
+    params = jax.tree_util.tree_map(lambda l: jnp.broadcast_to(l[None], (M,) + l.shape), params1)
+    # Materialize (broadcast_to creates views; optimizer needs real buffers).
+    params = jax.tree_util.tree_map(jnp.array, params)
+    opt_state = optimizer.init(params)
+    return params, opt_state
+
+
+def abstract_stacked(cfg: ArchConfig, optimizer: Optimizer, M: int):
+    """ShapeDtypeStructs for the stacked training state (dry-run)."""
+    p1 = lm.abstract_params(cfg)
+    stack = lambda l: jax.ShapeDtypeStruct((M,) + l.shape, l.dtype)
+    params = jax.tree_util.tree_map(stack, p1)
+    opt_state = jax.eval_shape(optimizer.init, params)
+    return params, opt_state

@@ -1,0 +1,98 @@
+"""Tests for gossip compression + error feedback."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.compression import (
+    ErrorFeedback,
+    dequantize_int8,
+    quantize_int8,
+    randk_mask,
+    topk_mask,
+)
+
+
+def test_topk_keeps_largest():
+    x = jnp.array([0.1, -5.0, 0.3, 2.0, -0.01])
+    y = topk_mask(x, 2)
+    assert jnp.count_nonzero(y) == 2
+    assert y[1] == -5.0 and y[3] == 2.0
+
+
+def test_topk_k_geq_size_identity():
+    x = jnp.arange(4.0)
+    assert jnp.allclose(topk_mask(x, 10), x)
+
+
+def test_randk_unbiased():
+    x = jnp.ones(100)
+    keys = jax.random.split(jax.random.PRNGKey(0), 200)
+    acc = jnp.zeros(100)
+    for k in keys:
+        acc += randk_mask(x, 10, k)
+    # E[mask*scale] = x
+    assert jnp.abs(acc / 200 - 1.0).mean() < 0.35
+
+
+def test_quantize_roundtrip_error_bounded():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=512).astype(np.float32))
+    q, s = quantize_int8(x)
+    err = jnp.abs(dequantize_int8(q, s) - x).max()
+    assert err <= s * 0.51 + 1e-7  # half a quantization step
+
+
+def test_quantize_stochastic_unbiased():
+    x = jnp.full((2048,), 0.3)
+    keys = jax.random.split(jax.random.PRNGKey(1), 64)
+    acc = jnp.zeros_like(x)
+    for k in keys:
+        q, s = quantize_int8(x, key=k)
+        acc += dequantize_int8(q, s)
+    assert jnp.abs(acc / 64 - x).mean() < 0.01
+
+
+def test_error_feedback_accumulates_residual():
+    ef = ErrorFeedback(ratio=0.25, mode="topk")
+    tree = {"a": jnp.array([1.0, 0.1, 0.2, 3.0])}
+    state = ef.init_state(tree)
+    sent, state = ef.compress(tree, state)
+    # k = 1 of 4: only the largest goes out, the rest accumulates.
+    assert jnp.count_nonzero(sent["a"]) == 1
+    assert sent["a"][3] == 3.0
+    assert state["a"][0] == 1.0  # dropped, remembered
+
+
+def test_error_feedback_eventually_transmits_everything():
+    """Property: sum(sent over rounds) -> original signal (EF is lossless in
+    the limit for a constant input)."""
+    ef = ErrorFeedback(ratio=0.25, mode="topk")
+    x = {"a": jnp.array([1.0, -2.0, 0.5, 0.25])}
+    state = ef.init_state(x)
+    total = jnp.zeros(4)
+    for _ in range(8):
+        sent, state = ef.compress(x, state)
+        total += sent["a"]
+    # after n rounds total ~ n_rounds-ish * x cumulative; residual bounded
+    assert jnp.abs(state["a"]).max() <= 2.0 + 1e-6
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 100))
+def test_compress_preserves_treedef_and_shapes(seed):
+    rng = np.random.default_rng(seed)
+    tree = {
+        "w": jnp.asarray(rng.normal(size=(4, 3)).astype(np.float32)),
+        "b": jnp.asarray(rng.normal(size=(3,)).astype(np.float32)),
+    }
+    ef = ErrorFeedback(ratio=0.5)
+    state = ef.init_state(tree)
+    sent, new_state = ef.compress(tree, state)
+    assert sent["w"].shape == (4, 3) and sent["b"].shape == (3,)
+    assert new_state["w"].shape == (4, 3)
+    # conservation: sent + residual == input + old state
+    assert jnp.allclose(sent["w"] + new_state["w"], tree["w"], atol=1e-6)

@@ -1,0 +1,151 @@
+"""Tests for the consensus-SGD operator math (paper §III-B, §IV)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import consensus, policy, theory
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _random_policy(M, seed):
+    rng = np.random.default_rng(seed)
+    P = rng.uniform(0.1, 1.0, size=(M, M))
+    P /= P.sum(axis=1, keepdims=True)
+    return P
+
+
+def test_D_matrix_row_stochastic():
+    M = 5
+    P = _random_policy(M, 0)
+    d = np.ones((M, M)) - np.eye(M)
+    D = consensus.D_matrix(1, 3, alpha=0.05, rho=1.0, P=P, d=d)
+    assert np.allclose(D.sum(axis=1), 1.0)
+    # Only row i changes.
+    assert np.allclose(D[[0, 2, 4]], np.eye(M)[[0, 2, 4]])
+
+
+def test_Y_matches_monte_carlo_expectation():
+    """Y_P (Eq. 22) == E[(D^k)^T D^k] estimated by sampling events."""
+    M = 4
+    rng = np.random.default_rng(0)
+    d = np.ones((M, M)) - np.eye(M)
+    P = policy.uniform_policy(d)
+    alpha, rho = 0.1, 1.0
+    p = consensus.worker_activation_probs(P, None, d)
+    Y = consensus.build_Y(P, alpha, rho, d)
+    acc = np.zeros((M, M))
+    n = 40_000
+    for _ in range(n):
+        i, m = consensus.sample_event(rng, P, p)
+        D = consensus.D_matrix(i, m, alpha, rho, P, d)
+        acc += D.T @ D
+    acc /= n
+    assert np.allclose(acc, Y, atol=5e-3)
+
+
+def test_two_step_update_matches_eq16():
+    x = {"w": jnp.array([1.0, 2.0]), "b": jnp.array(0.5)}
+    g = {"w": jnp.array([0.1, -0.1]), "b": jnp.array(1.0)}
+    xp = {"w": jnp.array([0.0, 0.0]), "b": jnp.array(0.0)}
+    alpha, w = 0.1, 0.25
+    out = consensus.two_step_update(x, g, xp, alpha, w)
+    x_half = x["w"] - alpha * g["w"]
+    expect = (1 - w) * x_half + w * xp["w"]
+    assert jnp.allclose(out["w"], expect)
+
+
+def test_stacked_round_pulls_preround_params():
+    """Eq. 16 pulls x_m^k (pre-round), not the neighbor's post-grad value."""
+    M, D = 3, 4
+    x = {"p": jnp.arange(M * D, dtype=jnp.float32).reshape(M, D)}
+    g = {"p": jnp.ones((M, D))}
+    neighbors = jnp.array([1, 2, 0], dtype=jnp.int32)
+    weights = jnp.array([0.5, 0.0, 0.25], dtype=jnp.float32)
+    alpha = 0.1
+    out = consensus.stacked_round(x, g, neighbors, weights, alpha)
+    x_half = x["p"] - alpha
+    # worker 0 mixes with pre-round x[1]:
+    expect0 = 0.5 * x_half[0] + 0.5 * x["p"][1]
+    assert jnp.allclose(out["p"][0], expect0, atol=1e-6)
+    # worker 1 (weight 0) is pure SGD:
+    assert jnp.allclose(out["p"][1], x_half[1], atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 500), st.sampled_from([3, 5, 8]))
+def test_consensus_round_preserves_mean_when_symmetric(seed, M):
+    """With a symmetric pairwise exchange (permutation of transpositions and
+    equal weights) the replica mean is preserved up to gradient drift."""
+    rng = np.random.default_rng(seed)
+    x = {"p": jnp.asarray(rng.normal(size=(M, 7)).astype(np.float32))}
+    g = {"p": jnp.zeros((M, 7), dtype=jnp.float32)}
+    # pair 2i <-> 2i+1; odd tail self-loops
+    nb = np.arange(M)
+    for i in range(0, M - 1, 2):
+        nb[i], nb[i + 1] = i + 1, i
+    w = np.where(nb != np.arange(M), 0.3, 0.0).astype(np.float32)
+    out = consensus.stacked_round(x, g, jnp.asarray(nb, dtype=jnp.int32), jnp.asarray(w), 0.0)
+    assert jnp.allclose(out["p"].mean(axis=0), x["p"].mean(axis=0), atol=1e-5)
+
+
+def test_event_chain_reaches_consensus():
+    """Pure consensus (zero gradients): replicas contract to a common point,
+    and the contraction rate is bounded by Thm 1 with lambda2(Y_P)."""
+    M = 6
+    rng = np.random.default_rng(1)
+    d = np.ones((M, M)) - np.eye(M)
+    P = policy.uniform_policy(d)
+    alpha, rho = 0.1, 1.5
+    p = consensus.worker_activation_probs(P, None, d)
+    Y = consensus.build_Y(P, alpha, rho, d)
+    lam = theory.effective_lambda(Y)
+    assert lam < 1.0
+
+    x = rng.normal(size=(M, 3))
+    x_star = x.mean(axis=0)
+    dev0 = float(((x - x_star) ** 2).sum())
+    K = 400
+    trials = 40
+    devs = np.zeros(K + 1)
+    for _ in range(trials):
+        xt = x.copy()
+        devs[0] += ((xt - x_star) ** 2).sum()
+        for k in range(1, K + 1):
+            i, m = consensus.sample_event(rng, P, p)
+            gmm = (d[i, m] + d[m, i]) / (2 * P[i, m])
+            w = alpha * rho * gmm
+            xt[i] = (1 - w) * xt[i] + w * xt[m]
+            devs[k] += ((xt - xt.mean(axis=0)) ** 2).sum()
+    devs /= trials
+    # Empirical deviation must respect the Thm-1 bound (sigma = 0).
+    for k in (50, 100, 200, 400):
+        assert devs[k] <= lam**k * dev0 * 1.5 + 1e-9
+    assert devs[K] < dev0 * 1e-2  # consensus actually reached
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 100))
+def test_build_Y_symmetric_rows_sum_one_for_feasible(seed):
+    M = 6
+    T = np.full((M, M), 0.02)
+    rng = np.random.default_rng(seed)
+    T += rng.uniform(0, 0.03, size=(M, M))
+    T = (T + T.T) / 2
+    np.fill_diagonal(T, 0)
+    res = policy.generate_policy_matrix(0.1, K=5, R=5, T=T)
+    d = np.ones((M, M)) - np.eye(M)
+    Y = consensus.build_Y(res.P, 0.1, res.rho, d)
+    assert np.allclose(Y, Y.T, atol=1e-10)
+    assert np.allclose(Y.sum(axis=1), 1.0, atol=1e-6)
+    assert np.all(Y >= -1e-10)
+
+
+def test_mixing_weight_formula():
+    # gamma = (d+d')/(2p); w = alpha*rho*gamma
+    assert consensus.mixing_weight(0.1, 2.0, 0.25) == pytest.approx(0.8)
+    assert consensus.mixing_weight(0.1, 2.0, 0.5, d_sym=2.0) == pytest.approx(0.4)

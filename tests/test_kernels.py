@@ -1,0 +1,203 @@
+"""Per-kernel allclose tests: Pallas (interpret=True) vs pure-jnp oracles.
+
+Sweeps shapes / dtypes / GQA ratios / causality per the deliverable spec.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.gossip_mix import gossip_mix
+from repro.kernels.rwkv_scan import rwkv_scan
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+# ---------------------------------------------------------------- flash attn
+
+ATTN_CASES = [
+    # (B, S, Sk, H, Hk, hd, causal, dtype)
+    (1, 128, 128, 4, 4, 64, True, jnp.float32),
+    (2, 256, 256, 8, 2, 64, True, jnp.float32),   # GQA G=4
+    (1, 128, 128, 4, 1, 32, True, jnp.float32),   # MQA
+    (2, 128, 256, 4, 4, 64, False, jnp.float32),  # cross-attn shapes
+    (1, 256, 256, 2, 2, 128, True, jnp.bfloat16),
+    (1, 512, 512, 4, 2, 64, True, jnp.float32),   # multiple q/kv blocks
+]
+
+
+@pytest.mark.parametrize("B,S,Sk,H,Hk,hd,causal,dtype", ATTN_CASES)
+def test_flash_attention_matches_reference(B, S, Sk, H, Hk, hd, causal, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = _rand(ks[0], (B, S, H, hd), dtype)
+    k = _rand(ks[1], (B, Sk, Hk, hd), dtype)
+    v = _rand(ks[2], (B, Sk, Hk, hd), dtype)
+    got = flash_attention(q, k, v, causal=causal, interpret=True)
+    want = ref.reference_attention(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=tol, rtol=tol
+    )
+
+
+def test_flash_attention_block_shape_sweep():
+    B, S, H, Hk, hd = 1, 256, 4, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = _rand(ks[0], (B, S, H, hd), jnp.float32)
+    k = _rand(ks[1], (B, S, Hk, hd), jnp.float32)
+    v = _rand(ks[2], (B, S, Hk, hd), jnp.float32)
+    want = ref.reference_attention(q, k, v, causal=True)
+    for bq, bk in [(64, 64), (128, 64), (64, 128), (256, 256)]:
+        got = flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk, interpret=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000))
+def test_flash_attention_property_random(seed):
+    rng = np.random.default_rng(seed)
+    B = int(rng.integers(1, 3))
+    S = int(rng.choice([128, 256]))
+    Hk = int(rng.choice([1, 2]))
+    G = int(rng.choice([1, 2, 4]))
+    hd = int(rng.choice([32, 64]))
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = _rand(ks[0], (B, S, Hk * G, hd), jnp.float32)
+    k = _rand(ks[1], (B, S, Hk, hd), jnp.float32)
+    v = _rand(ks[2], (B, S, Hk, hd), jnp.float32)
+    got = flash_attention(q, k, v, causal=True, interpret=True)
+    want = ref.reference_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-5, rtol=3e-5)
+
+
+def test_flash_attention_rows_are_convex_combinations():
+    """Property: each output row lies in the convex hull of V rows (softmax
+    weights sum to 1) — catches normalization bugs."""
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = _rand(ks[0], (1, 128, 2, 32), jnp.float32)
+    k = _rand(ks[1], (1, 128, 2, 32), jnp.float32)
+    v = jnp.ones((1, 128, 2, 32), jnp.float32)
+    got = flash_attention(q, k, v, causal=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), 1.0, atol=1e-5)
+
+
+# ---------------------------------------------------------------- rwkv scan
+
+RWKV_CASES = [
+    # (B, S, H, N, chunk, dtype)
+    (1, 64, 2, 16, 16, jnp.float32),
+    (2, 128, 4, 32, 32, jnp.float32),
+    (1, 128, 2, 64, 64, jnp.float32),
+    (1, 256, 2, 16, 64, jnp.float32),  # multiple chunks
+    (1, 128, 2, 32, 32, jnp.bfloat16),
+]
+
+
+def _rwkv_inputs(seed, B, S, H, N, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    r = _rand(ks[0], (B, S, H, N), dtype) * 0.5
+    k = _rand(ks[1], (B, S, H, N), dtype) * 0.5
+    v = _rand(ks[2], (B, S, H, N), dtype)
+    # decays in (0.7, 1.0) like trained RWKV models
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, S, H, N)) + 2.0).astype(jnp.float32)
+    u = (jax.random.normal(ks[4], (H, N)) * 0.1).astype(jnp.float32)
+    return r, k, v, w.astype(dtype), u
+
+
+@pytest.mark.parametrize("B,S,H,N,chunk,dtype", RWKV_CASES)
+def test_rwkv_scan_matches_reference(B, S, H, N, chunk, dtype):
+    r, k, v, w, u = _rwkv_inputs(0, B, S, H, N, dtype)
+    got = rwkv_scan(r, k, v, w, u, chunk=chunk, interpret=True)
+    want = ref.reference_rwkv(r, k, v, w, u)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=tol, rtol=tol
+    )
+
+
+def test_rwkv_chunk_invariance():
+    """Output must not depend on the chunk size (state handoff correct)."""
+    r, k, v, w, u = _rwkv_inputs(3, 1, 128, 2, 16, jnp.float32)
+    outs = [
+        np.asarray(rwkv_scan(r, k, v, w, u, chunk=c, interpret=True))
+        for c in (16, 32, 64, 128)
+    ]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], atol=1e-4, rtol=1e-4)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 10_000))
+def test_rwkv_property_random(seed):
+    rng = np.random.default_rng(seed)
+    B = int(rng.integers(1, 3))
+    S = int(rng.choice([64, 128]))
+    H = int(rng.choice([1, 2]))
+    N = int(rng.choice([16, 32]))
+    r, k, v, w, u = _rwkv_inputs(seed, B, S, H, N, jnp.float32)
+    got = rwkv_scan(r, k, v, w, u, chunk=32, interpret=True)
+    want = ref.reference_rwkv(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-4, rtol=2e-4)
+
+
+def test_rwkv_extreme_decay_clamped_semantics():
+    """Decays stronger than the kernel's f32-safety clamp (e^-(75/chunk) per
+    step) are clamped; the kernel must match the reference run with the SAME
+    clamp — and stay finite where the unclamped factored form would overflow."""
+    B, S, H, N = 1, 32, 1, 16
+    chunk = 16
+    r, k, v, _, u = _rwkv_inputs(4, B, S, H, N, jnp.float32)
+    w0 = jnp.full((B, S, H, N), 1e-30, jnp.float32)
+    got = rwkv_scan(r, k, v, w0, u, chunk=chunk, interpret=True)
+    assert np.all(np.isfinite(np.asarray(got)))
+    from repro.kernels.rwkv_scan import _SUB
+    w_clamped = jnp.exp(jnp.clip(jnp.log(w0), -75.0 / min(_SUB, chunk), 0.0))
+    want = ref.reference_rwkv(r, k, v, w_clamped, u)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-3, rtol=1e-3)
+
+
+# ---------------------------------------------------------------- gossip mix
+
+MIX_CASES = [
+    ((1024,), jnp.float32, 0.25),
+    ((127, 33), jnp.float32, 0.8),       # non-divisible -> padding path
+    ((8, 64, 32), jnp.bfloat16, 0.5),
+    ((70000,), jnp.float32, 0.0),        # multi-block, w=0 edge
+    ((256,), jnp.float32, 1.0),          # w=1 edge
+]
+
+
+@pytest.mark.parametrize("shape,dtype,w", MIX_CASES)
+def test_gossip_mix_matches_reference(shape, dtype, w):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    x = _rand(ks[0], shape, dtype)
+    u = _rand(ks[1], shape, dtype) * 0.01
+    p = _rand(ks[2], shape, dtype)
+    got = gossip_mix(x, u, p, jnp.float32(w), interpret=True, block=4096)
+    want = ref.reference_gossip_mix(x, u, p, w)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-6
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=tol, rtol=tol
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_gossip_mix_property(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 5000))
+    w = float(rng.uniform(0, 1))
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = _rand(ks[0], (n,), jnp.float32)
+    u = _rand(ks[1], (n,), jnp.float32)
+    p = _rand(ks[2], (n,), jnp.float32)
+    got = gossip_mix(x, u, p, jnp.float32(w), interpret=True, block=1024)
+    want = (1 - w) * (x + u) + w * p
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5, rtol=1e-5)

@@ -1,0 +1,123 @@
+"""Unit + property tests for the dense two-phase simplex solver."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.solver.lp import solve_lp
+
+try:
+    from scipy.optimize import linprog
+
+    HAVE_SCIPY = True
+except ImportError:  # pragma: no cover
+    HAVE_SCIPY = False
+
+
+def test_trivial_equality():
+    r = solve_lp(np.array([1.0, 1.0]), np.array([[1.0, 1.0]]), np.array([1.0]))
+    assert r.ok
+    assert r.fun == pytest.approx(1.0)
+
+
+def test_upper_bounds_bind():
+    r = solve_lp(
+        np.array([-1.0, -2.0]),
+        np.array([[1.0, 1.0]]),
+        np.array([1.0]),
+        ub=np.array([0.6, 0.6]),
+    )
+    assert r.ok
+    assert r.fun == pytest.approx(-1.6)
+    assert r.x == pytest.approx([0.4, 0.6])
+
+
+def test_infeasible_bounds():
+    r = solve_lp(
+        np.array([1.0]),
+        np.array([[1.0]]),
+        np.array([5.0]),
+        lb=np.array([0.0]),
+        ub=np.array([1.0]),
+    )
+    assert r.status == "infeasible"
+
+
+def test_infeasible_constraints():
+    # x0 + x1 = 1 and x0 + x1 = 2 simultaneously.
+    r = solve_lp(
+        np.array([1.0, 1.0]),
+        np.array([[1.0, 1.0], [1.0, 1.0]]),
+        np.array([1.0, 2.0]),
+    )
+    assert r.status == "infeasible"
+
+
+def test_redundant_rows_ok():
+    # Duplicated constraint should not break phase-1 artificial removal.
+    r = solve_lp(
+        np.array([1.0, 2.0]),
+        np.array([[1.0, 1.0], [1.0, 1.0]]),
+        np.array([1.0, 1.0]),
+    )
+    assert r.ok
+    assert r.fun == pytest.approx(1.0)
+
+
+def test_lower_bounds_shift():
+    # min x0 s.t. x0 + x1 = 3, x >= 1 -> x0 = 1 (x1 = 2).
+    r = solve_lp(
+        np.array([1.0, 0.0]),
+        np.array([[1.0, 1.0]]),
+        np.array([3.0]),
+        lb=np.array([1.0, 1.0]),
+    )
+    assert r.ok
+    assert r.x[0] == pytest.approx(1.0)
+
+
+def test_degenerate_vertex_terminates():
+    # Multiple constraints meeting at one vertex (degeneracy): Bland's rule
+    # must still terminate.
+    A = np.array([[1.0, 1.0, 1.0], [1.0, 1.0, 0.0]])
+    b = np.array([1.0, 1.0])
+    r = solve_lp(np.array([0.0, 1.0, 1.0]), A, b)
+    assert r.ok
+    assert r.fun == pytest.approx(0.0)
+
+
+@pytest.mark.skipif(not HAVE_SCIPY, reason="scipy unavailable")
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 10_000))
+def test_matches_scipy_on_random_feasible(seed):
+    rng = np.random.default_rng(seed)
+    n, m = 8, 3
+    A = rng.normal(size=(m, n))
+    x0 = rng.uniform(0.1, 1.0, size=n)  # interior point => feasible
+    b = A @ x0
+    c = rng.normal(size=n)
+    lb, ub = np.zeros(n), np.full(n, 2.0)
+    mine = solve_lp(c, A, b, lb, ub)
+    sp = linprog(c, A_eq=A, b_eq=b, bounds=list(zip(lb, ub)), method="highs")
+    assert mine.ok == (sp.status == 0)
+    if mine.ok:
+        assert mine.fun == pytest.approx(sp.fun, rel=1e-6, abs=1e-8)
+        assert np.allclose(A @ mine.x, b, atol=1e-7)
+        assert np.all(mine.x >= lb - 1e-9)
+        assert np.all(mine.x <= ub + 1e-9)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10_000))
+def test_solution_always_feasible(seed):
+    """Property: whenever the solver claims optimal, the point is feasible."""
+    rng = np.random.default_rng(seed)
+    n, m = 6, 2
+    A = rng.normal(size=(m, n))
+    b = A @ rng.uniform(0.0, 1.0, size=n)
+    c = rng.normal(size=n)
+    r = solve_lp(c, A, b, np.zeros(n), np.full(n, np.inf))
+    if r.ok:
+        assert np.allclose(A @ r.x, b, atol=1e-7)
+        assert np.all(r.x >= -1e-9)

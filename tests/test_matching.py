@@ -1,0 +1,96 @@
+"""Tests for Birkhoff matched gossip rounds (beyond-paper optimization)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import matching, policy
+from repro.core.matching import (
+    birkhoff_decompose,
+    marginal_matrix,
+    matched_sampler,
+    sinkhorn,
+)
+
+
+def _random_policy(M, seed):
+    rng = np.random.default_rng(seed)
+    P = rng.uniform(0.05, 1.0, size=(M, M))
+    P /= P.sum(axis=1, keepdims=True)
+    return P
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 500), st.sampled_from([3, 5, 8, 12]))
+def test_sinkhorn_doubly_stochastic(seed, M):
+    Q = sinkhorn(_random_policy(M, seed))
+    assert np.allclose(Q.sum(axis=1), 1.0, atol=1e-8)
+    assert np.allclose(Q.sum(axis=0), 1.0, atol=1e-6)
+    assert np.all(Q >= 0)
+
+
+def test_sinkhorn_preserves_zero_support():
+    P = np.array([[0.5, 0.5, 0.0], [0.5, 0.0, 0.5], [0.0, 0.5, 0.5]])
+    Q = sinkhorn(P)
+    # off-diagonal zeros stay zero (diagonal may gain the escape hatch)
+    assert Q[0, 2] == 0.0
+    assert Q[1, 1] >= 0.0
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 500), st.sampled_from([3, 5, 8]))
+def test_birkhoff_reconstructs_Q(seed, M):
+    Q = sinkhorn(_random_policy(M, seed))
+    dec = birkhoff_decompose(Q)
+    E = marginal_matrix(dec)
+    # Expected permutation matrix equals Q up to the numerical tail.
+    assert np.abs(E - Q).max() < 1e-4 + dec.residual
+    assert dec.weights.sum() == pytest.approx(1.0)
+    assert np.all(dec.weights > 0)
+
+
+def test_permutations_are_permutations():
+    Q = sinkhorn(_random_policy(6, 42))
+    dec = birkhoff_decompose(Q)
+    for perm in dec.permutations:
+        assert sorted(perm.tolist()) == list(range(6))
+
+
+def test_identity_matrix_single_component():
+    dec = birkhoff_decompose(np.eye(4))
+    assert dec.n_components == 1
+    assert np.array_equal(dec.permutations[0], np.arange(4))
+
+
+def test_matched_sampler_marginals_close_to_policy():
+    """E[pull edge] under the matched sampler ~ Sinkhorn projection of P —
+    the heterogeneity preference survives matching."""
+    M = 8
+    T = np.full((M, M), 0.04)
+    for i in range(M):
+        for m in range(M):
+            if (i < 4) == (m < 4):
+                T[i, m] = 0.01
+    np.fill_diagonal(T, 0.0)
+    T[0, 4] = T[4, 0] = 0.4
+    res = policy.generate_policy_matrix(0.1, K=8, R=8, T=T)
+    dec = matched_sampler(res.P)
+    E = marginal_matrix(dec)
+    # Slow link still de-preferred after matching:
+    assert E[0, 4] < E[0, 1:4].mean()
+    # Sampling marginals match decomposition weights.
+    rng = np.random.default_rng(0)
+    counts = np.zeros((M, M))
+    n = 20_000
+    for _ in range(n):
+        perm = dec.sample(rng)
+        counts[np.arange(M), perm] += 1
+    assert np.abs(counts / n - E).max() < 0.02
+
+
+def test_sample_returns_valid_perm():
+    dec = matched_sampler(_random_policy(5, 7))
+    rng = np.random.default_rng(1)
+    perm = dec.sample(rng)
+    assert sorted(perm.tolist()) == list(range(5))

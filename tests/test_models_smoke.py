@@ -1,0 +1,174 @@
+"""Per-arch smoke tests: REDUCED configs, one forward/train/decode step on CPU.
+
+Asserts output shapes and no NaNs for every assigned architecture family.
+Full configs are exercised only via the dry-run (ShapeDtypeStruct).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import all_archs
+from repro.models import lm
+
+ARCHS = sorted(all_archs().keys())
+
+
+def _batch(cfg, B=2, S=32, seed=0):
+    rng = np.random.default_rng(seed)
+    b = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, size=(B, S)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, size=(B, S)), jnp.int32),
+    }
+    if cfg.n_vis_tokens:
+        b["vis_embeds"] = jnp.asarray(
+            rng.normal(size=(B, cfg.n_vis_tokens, cfg.d_model)).astype(np.float32)
+        )
+    if cfg.family == "audio":
+        b["frames"] = jnp.asarray(
+            rng.normal(size=(B, cfg.enc_seq_len, cfg.d_model)).astype(np.float32)
+        )
+    return b
+
+
+@pytest.fixture(scope="module")
+def reduced_params():
+    cache = {}
+
+    def get(name):
+        if name not in cache:
+            cfg = all_archs()[name].reduced()
+            cache[name] = (cfg, lm.init_params(cfg, jax.random.PRNGKey(0)))
+        return cache[name]
+
+    return get
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_loss_finite(arch, reduced_params):
+    cfg, params = reduced_params(arch)
+    batch = _batch(cfg)
+    loss = jax.jit(lambda p, b: lm.loss_fn(p, b, cfg))(params, batch)
+    assert loss.shape == ()
+    assert jnp.isfinite(loss), f"{arch}: loss={loss}"
+    # untrained model ~ uniform over vocab
+    assert float(loss) == pytest.approx(np.log(cfg.vocab_size), rel=0.35)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_grads_finite(arch, reduced_params):
+    cfg, params = reduced_params(arch)
+    batch = _batch(cfg)
+    loss, grads = jax.jit(jax.value_and_grad(lambda p: lm.loss_fn(p, batch, cfg)))(params)
+    assert jnp.isfinite(loss)
+    leaves = jax.tree_util.tree_leaves(grads)
+    assert all(jnp.all(jnp.isfinite(l)) for l in leaves), f"{arch}: NaN grads"
+    # gradients actually flow to the embedding and deep blocks
+    gnorm = sum(jnp.sum(l * l) for l in leaves)
+    assert float(gnorm) > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_step_shapes(arch, reduced_params):
+    cfg, params = reduced_params(arch)
+    B, S = 2, 16
+    cache = lm.init_cache(cfg, B, S)
+    token = jnp.zeros((B,), jnp.int32)
+    logits, new_cache = jax.jit(
+        lambda p, c, t: lm.decode_step(p, c, t, 3, cfg)
+    )(params, cache, token)
+    assert logits.shape == (B, cfg.vocab_size)
+    assert jnp.all(jnp.isfinite(logits)), f"{arch}: NaN decode logits"
+    assert jax.tree_util.tree_structure(new_cache) == jax.tree_util.tree_structure(cache)
+
+
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "rwkv6-7b", "jamba-v0.1-52b"])
+def test_decode_matches_forward(arch, reduced_params):
+    """Teacher-forced decode step-by-step == train forward logits."""
+    cfg, params = reduced_params(arch)
+    B, S = 1, 8
+    rng = np.random.default_rng(1)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, size=(B, S)), jnp.int32)
+    from repro.models import transformer
+
+    x, _ = transformer.forward(params, tokens, cfg)
+    full_logits = transformer.logits_head(params, x, cfg).astype(jnp.float32)
+
+    cache = lm.init_cache(cfg, B, S)
+    step = jax.jit(lambda p, c, t, pos: lm.decode_step(p, c, t, pos, cfg),
+                   static_argnames=())
+    outs = []
+    for t in range(S):
+        logits, cache = lm.decode_step(params, cache, tokens[:, t], t, cfg)
+        outs.append(logits)
+    dec_logits = jnp.stack(outs, axis=1)  # (B,S,V)
+    np.testing.assert_allclose(
+        np.asarray(dec_logits), np.asarray(full_logits), rtol=5e-2, atol=5e-2
+    )
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_abstract_params(arch):
+    """Full configs build abstract param trees (no allocation) with the
+    exact assigned dimensions."""
+    cfg = all_archs()[arch]
+    tree = lm.abstract_params(cfg)
+    n = int(sum(np.prod(l.shape) for l in jax.tree_util.tree_leaves(tree)))
+    assert n > 0
+    emb = tree["embed"]["table"] if "embed" in tree else None
+    assert emb.shape == (cfg.vocab_size, cfg.d_model)
+
+
+def test_param_counts_match_billing():
+    """Sanity: headline param counts are in the advertised ballpark."""
+    cases = {
+        "tinyllama-1.1b": (1.0e9, 1.3e9),
+        "qwen1.5-0.5b": (0.4e9, 0.75e9),
+        "starcoder2-3b": (2.5e9, 3.5e9),
+        "rwkv6-7b": (6.0e9, 9.0e9),
+        "stablelm-12b": (10e9, 14e9),
+        "phi3.5-moe-42b-a6.6b": (39e9, 45e9),
+        "jamba-v0.1-52b": (48e9, 58e9),
+        "llama4-maverick-400b-a17b": (370e9, 430e9),
+    }
+    for name, (lo, hi) in cases.items():
+        cfg = all_archs()[name]
+        n = lm.param_count(cfg)
+        assert lo <= n <= hi, f"{name}: {n/1e9:.2f}B not in [{lo/1e9},{hi/1e9}]"
+
+
+def test_moe_active_params():
+    cfg = all_archs()["phi3.5-moe-42b-a6.6b"]
+    act = lm.active_param_count(cfg)
+    assert 5.5e9 <= act <= 8.0e9, f"active {act/1e9:.2f}B"
+
+
+def test_head_padding_is_inert():
+    """TP head padding (§Perf) must not change model outputs: padded q/wo
+    slots are zero and group-interleaved so original heads keep their
+    kv-group assignment."""
+    from dataclasses import replace
+
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, 128, (2, 16)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, 128, (2, 16)), jnp.int32),
+    }
+    for name, pads in [
+        ("starcoder2-3b", dict(pad_heads=2)),
+        ("whisper-small", dict(pad_heads=2, pad_kv_heads=2)),
+        ("tinyllama-1.1b", dict(pad_heads=2)),
+    ]:
+        cfg = replace(all_archs()[name].reduced(), vocab_size=128)
+        cfg_pad = replace(cfg, **pads)
+        b = dict(batch)
+        if cfg.family == "audio":
+            b["frames"] = jnp.asarray(
+                rng.normal(size=(2, cfg.enc_seq_len, cfg.d_model)).astype(np.float32)
+            )
+        p0 = lm.init_params(cfg, jax.random.PRNGKey(0))
+        p1 = lm.init_params(cfg_pad, jax.random.PRNGKey(0))
+        l0 = float(lm.loss_fn(p0, b, cfg))
+        l1 = float(lm.loss_fn(p1, b, cfg_pad))
+        assert abs(l0 - l1) < 5e-4, f"{name}: {l0} vs {l1}"

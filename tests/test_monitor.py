@@ -1,0 +1,92 @@
+"""Tests for the Network Monitor (Alg. 1) + worker EMA (Alg. 2 l.19-22)."""
+
+import numpy as np
+import pytest
+
+from repro.core.monitor import IterationTimeEMA, NetworkMonitor
+from repro.core.nettime import LinkTimeModel, Topology, homogeneous_times
+
+
+def test_ema_update_rule():
+    ema = IterationTimeEMA(n_workers=4, beta=0.5)
+    ema.update(1, 0.1)  # first observation seeds
+    assert ema.times[1] == pytest.approx(0.1)
+    ema.update(1, 0.3)
+    assert ema.times[1] == pytest.approx(0.5 * 0.1 + 0.5 * 0.3)
+
+
+def test_ema_tracks_speed_change():
+    """Small beta adapts quickly (paper: beta tuned to network dynamics)."""
+    fast = IterationTimeEMA(4, beta=0.1)
+    slow = IterationTimeEMA(4, beta=0.9)
+    for _ in range(10):
+        fast.update(0, 0.01)
+        slow.update(0, 0.01)
+    for _ in range(5):
+        fast.update(0, 1.0)
+        slow.update(0, 1.0)
+    assert fast.times[0] > 0.9  # tracked the slowdown
+    assert slow.times[0] < 0.5  # still remembers history
+
+
+def test_monitor_policy_adapts_to_slow_link():
+    M = 6
+    mon = NetworkMonitor(n_workers=M, alpha=0.1, K=6, R=6)
+    T = homogeneous_times(M, 0.02)
+    T[0, 1] = T[1, 0] = 0.5
+    mon.collect({i: T[i] for i in range(M)})
+    res = mon.step()
+    off = res.P[0][[m for m in range(M) if m not in (0, 1)]]
+    assert res.P[0, 1] < off.mean()  # slow link de-preferred
+    assert res.lambda2 < 1.0
+
+
+def test_monitor_detects_dead_worker_and_reroutes():
+    M = 5
+    mon = NetworkMonitor(n_workers=M, alpha=0.1, K=5, R=5, dead_after=2)
+    T = homogeneous_times(M, 0.02)
+    # Worker 4 reports twice then dies.
+    for _ in range(2):
+        mon.collect({i: T[i] for i in range(M)})
+    res = mon.step()
+    assert res.P[0, 4] > 0
+    for _ in range(3):
+        mon.collect({i: T[i] for i in range(M) if i != 4})
+    res = mon.step()
+    assert 4 not in mon.live_workers
+    assert np.all(res.P[:, 4] == 0)  # nobody pulls from the dead worker
+    assert np.all(res.P[4, :4] == 0)
+    # Survivors still converge.
+    assert res.lambda2 < 1.0
+
+
+def test_monitor_restart_stateless():
+    """A restarted Monitor rebuilds policy purely from worker reports."""
+    M = 4
+    T = homogeneous_times(M, 0.02)
+    m1 = NetworkMonitor(n_workers=M, alpha=0.1, K=5, R=5)
+    m1.collect({i: T[i] for i in range(M)})
+    r1 = m1.step()
+    m2 = NetworkMonitor(n_workers=M, alpha=0.1, K=5, R=5)  # fresh instance
+    m2.collect({i: T[i] for i in range(M)})
+    r2 = m2.step()
+    assert np.allclose(r1.P, r2.P)
+    assert r1.rho == pytest.approx(r2.rho)
+
+
+def test_linktime_model_tiers_and_dynamics():
+    topo = Topology(n_workers=8, workers_per_host=4, hosts_per_pod=1)
+    model = LinkTimeModel(topo, jitter=0.0, seed=3)
+    T0 = model.matrix(now=0.0)
+    # intra-host faster than inter-pod
+    assert T0[0, 1] < T0[0, 7]
+    # the dynamic slow link changes over time (paper: every 5 min)
+    mats = [model.matrix(now=t) for t in (0.0, 301.0, 602.0)]
+    assert not (np.allclose(mats[0], mats[1]) and np.allclose(mats[1], mats[2]))
+
+
+def test_linktime_iteration_time_floor_is_compute():
+    topo = Topology(n_workers=4, workers_per_host=4)
+    model = LinkTimeModel(topo, compute_time=0.05, jitter=0.0, seed=0)
+    # intra-host network (0.01) < compute (0.05) -> iteration time = compute
+    assert model.iteration_time(0, 1) == pytest.approx(0.05)

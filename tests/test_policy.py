@@ -1,0 +1,143 @@
+"""Tests for Algorithm 3 (policy generation) + Theorem-3 properties.
+
+The key paper invariants, checked as properties over random heterogeneous
+networks (hypothesis):
+
+  * any Algorithm-3 policy is row-stochastic, respects the Eq.-11 floors,
+    and equalizes expected iteration time (Eq. 10 => p_i = 1/M);
+  * Y_P is doubly stochastic with lambda2 < 1 (Theorem 3);
+  * on heterogeneous networks the optimized policy's modeled convergence
+    time beats the uniform (AD-PSGD) policy's;
+  * dead links (t -> inf) get zero probability.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import consensus, policy, theory
+
+
+def hetero_times(M, seed, slow_factor=10.0):
+    rng = np.random.default_rng(seed)
+    T = rng.uniform(0.01, 0.05, size=(M, M))
+    T = (T + T.T) / 2
+    # one slow link
+    i, m = rng.choice(M, size=2, replace=False)
+    T[i, m] = T[m, i] = T[i, m] * slow_factor
+    np.fill_diagonal(T, 0.0)
+    return T
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 1000), st.sampled_from([4, 6, 8]))
+def test_policy_feasibility_properties(seed, M):
+    T = hetero_times(M, seed)
+    alpha = 0.1
+    res = policy.generate_policy_matrix(alpha, K=6, R=6, T=T)
+    P = res.P
+    d = np.ones((M, M)) - np.eye(M)
+    # Row stochastic.
+    assert np.allclose(P.sum(axis=1), 1.0, atol=1e-7)
+    # Eq. 11 floors on edges.
+    floor = 2 * alpha * res.rho
+    off = P[~np.eye(M, dtype=bool)]
+    assert np.all(off >= floor - 1e-8)
+    # Eq. 10: equalized expected iteration times -> p_i = 1/M.
+    tbar = consensus.mean_iteration_times(P, T, d)
+    assert np.allclose(tbar, tbar[0], rtol=1e-5)
+    p = consensus.worker_activation_probs(P, T, d)
+    assert np.allclose(p, 1.0 / M, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 1000), st.sampled_from([4, 6, 8]))
+def test_theorem3_doubly_stochastic_lambda2(seed, M):
+    T = hetero_times(M, seed)
+    alpha = 0.1
+    res = policy.generate_policy_matrix(alpha, K=6, R=6, T=T)
+    d = np.ones((M, M)) - np.eye(M)
+    Y = consensus.build_Y(res.P, alpha, res.rho, d)
+    assert theory.is_doubly_stochastic(Y)
+    assert theory.lambda1(Y) == pytest.approx(1.0, abs=1e-6)
+    assert theory.lambda2(Y) < 1.0 - 1e-9
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 1000))
+def test_netmax_beats_uniform_on_hetero(seed):
+    """The paper's headline: adaptive probabilities reduce modeled
+    convergence time vs uniform selection on heterogeneous networks."""
+    M = 8
+    T = hetero_times(M, seed, slow_factor=25.0)
+    alpha = 0.1
+    d = np.ones((M, M)) - np.eye(M)
+    res = policy.generate_policy_matrix(alpha, K=8, R=8, T=T)
+    Pu = policy.uniform_policy(d)
+    Yu = consensus.build_Y(Pu, alpha, res.rho, d, T=T)
+    Tu = theory.convergence_time(
+        theory.global_step_time(Pu, T, d), theory.lambda2(Yu), 1e-2
+    )
+    assert res.T_convergence < Tu
+
+
+def test_slow_link_gets_floor_probability():
+    M = 8
+    T = np.full((M, M), 0.04)
+    for i in range(M):
+        for m in range(M):
+            if (i < 4) == (m < 4):
+                T[i, m] = 0.01
+    np.fill_diagonal(T, 0.0)
+    T[0, 4] = T[4, 0] = 0.4
+    res = policy.generate_policy_matrix(0.1, K=8, R=8, T=T)
+    floor = 2 * 0.1 * res.rho
+    assert res.P[0, 4] == pytest.approx(floor, rel=0.05)
+    # Fast intra-host links carry more probability than the slow link.
+    assert res.P[0, 1:4].mean() > res.P[0, 4]
+
+
+def test_dead_link_zero_probability():
+    M = 6
+    T = np.full((M, M), 0.02)
+    np.fill_diagonal(T, 0.0)
+    T[1, 3] = T[3, 1] = np.inf  # dead link
+    res = policy.generate_policy_matrix(0.1, K=6, R=6, T=T)
+    assert res.P[1, 3] == 0.0
+    assert res.P[3, 1] == 0.0
+    # Still convergent: the remaining graph is connected.
+    assert res.lambda2 < 1.0
+
+
+def test_homogeneous_network_near_uniform():
+    """Paper §V-D: on homogeneous networks NetMax behaves like AD-PSGD
+    (uniform off-diagonal probabilities)."""
+    M = 6
+    T = np.full((M, M), 0.02)
+    np.fill_diagonal(T, 0.0)
+    res = policy.generate_policy_matrix(0.1, K=6, R=8, T=T)
+    off = res.P[~np.eye(M, dtype=bool)]
+    assert off.std() / off.mean() < 0.2  # near-uniform
+
+
+def test_uniform_policy_rows():
+    d = np.ones((5, 5)) - np.eye(5)
+    P = policy.uniform_policy(d)
+    assert np.allclose(P.sum(axis=1), 1.0)
+    assert np.all(np.diag(P) == 0)
+
+
+def test_approximation_ratio_finite():
+    M = 8
+    T = hetero_times(M, 0)
+    res = policy.generate_policy_matrix(0.1, K=6, R=6, T=T)
+    d = np.ones((M, M)) - np.eye(M)
+    Y = consensus.build_Y(res.P, 0.1, res.rho, d)
+    a = float(Y[Y > 1e-12].min())
+    from repro.core.policy import _t_bar_interval
+
+    L, U = _t_bar_interval(T, d, 0.1, res.rho)
+    ratio = theory.approximation_ratio(U, L, M, a)
+    assert np.isfinite(ratio)
+    assert ratio >= 1.0

@@ -1,0 +1,277 @@
+"""Substrate tests: data pipeline, optimizers, checkpoint, elastic, serve."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import all_archs
+from repro.data.synthetic import TokenStream, classification_dataset
+from repro.data.partition import non_iid_partition, size_skewed_partition, uniform_partition
+from repro.models import lm
+from repro.optim import adamw, sgd
+from repro.optim.optimizers import clip_by_global_norm, global_norm
+from repro.train import checkpoint as ckpt
+from repro.train import elastic
+
+
+# ------------------------------------------------------------------ data
+
+
+def test_token_stream_deterministic_and_disjoint():
+    ts = TokenStream(vocab_size=100, seq_len=16, batch_size=4, seed=7)
+    b1 = ts.batch(worker=0, step=3)
+    b2 = ts.batch(worker=0, step=3)
+    assert np.array_equal(b1["tokens"], b2["tokens"])  # seekable
+    b3 = ts.batch(worker=1, step=3)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])  # per-worker shards
+    assert np.array_equal(b1["labels"][:, :-1], b1["tokens"][:, 1:])
+
+
+def test_token_stream_learnable_structure():
+    ts = TokenStream(vocab_size=50, seq_len=32, batch_size=8, seed=0)
+    b = ts.batch(0, 0)
+    # successors are concentrated: given token t, next token is one of ~8
+    # preferred choices 90% of the time
+    hits = 0
+    total = 0
+    for row_t, row_n in zip(b["tokens"], b["labels"]):
+        for t, n in zip(row_t, row_n):
+            total += 1
+            hits += n in ts._succ[t]
+    assert hits / total > 0.7
+
+
+def test_partitions():
+    x, y = classification_dataset(1000, 8, 10, seed=0)
+    parts = uniform_partition(len(y), 4, seed=0)
+    assert sum(len(p) for p in parts) == 1000
+    assert len(set(np.concatenate(parts).tolist())) == 1000  # disjoint cover
+    parts = size_skewed_partition(len(y), 4, [1, 1, 2, 2], seed=0)
+    assert abs(len(parts[2]) - 2 * len(parts[0])) <= 2
+    parts = non_iid_partition(y, 4, lost_labels=[[0, 1], [2, 3], [4, 5], [6, 7]])
+    for i, lost in enumerate([[0, 1], [2, 3], [4, 5], [6, 7]]):
+        labels = set(y[parts[i]].tolist())
+        assert not labels & set(lost)
+
+
+# ------------------------------------------------------------------ optim
+
+
+def test_sgd_momentum_matches_reference():
+    opt = sgd(momentum=0.9, weight_decay=0.0)
+    p = {"w": jnp.array([1.0, 2.0])}
+    g = {"w": jnp.array([0.5, -0.5])}
+    st = opt.init(p)
+    upd, st = opt.update(g, st, p, lr=0.1)
+    assert jnp.allclose(upd["w"], -0.1 * jnp.array([0.5, -0.5]))
+    upd, st = opt.update(g, st, p, lr=0.1)
+    # m = 0.9*0.5+0.5 = 0.95
+    assert jnp.allclose(upd["w"][0], -0.1 * 0.95)
+
+
+def test_sgd_weight_decay():
+    opt = sgd(momentum=0.0, weight_decay=0.1)
+    p = {"w": jnp.array([1.0])}
+    g = {"w": jnp.array([0.0])}
+    upd, _ = opt.update(g, opt.init(p), p, lr=1.0)
+    assert jnp.allclose(upd["w"], -0.1)
+
+
+def test_adamw_converges_quadratic():
+    opt = adamw(weight_decay=0.0)
+    p = {"w": jnp.array([5.0, -3.0])}
+    st = opt.init(p)
+    for _ in range(300):
+        g = {"w": 2 * p["w"]}
+        upd, st = opt.update(g, st, p, lr=0.05)
+        p = opt.apply(p, upd)
+    assert jnp.abs(p["w"]).max() < 0.1
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.array([3.0]), "b": jnp.array([4.0])}
+    clipped, n = clip_by_global_norm(g, 1.0)
+    assert n == pytest.approx(5.0)
+    assert global_norm(clipped) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_stacked_worker_momenta_independent():
+    """NetMax replicas keep per-worker momentum (stacked leading dim)."""
+    opt = sgd(momentum=0.9)
+    p = {"w": jnp.ones((3, 4))}
+    g = {"w": jnp.stack([jnp.ones(4), jnp.zeros(4), -jnp.ones(4)])}
+    st = opt.init(p)
+    upd, st = opt.update(g, st, p, lr=0.1)
+    assert jnp.allclose(st["m"]["w"][1], 0.0)
+    assert jnp.allclose(st["m"]["w"][0], 1.0)
+
+
+# ------------------------------------------------------------------ ckpt
+
+
+def test_checkpoint_roundtrip_bitexact(tmp_path):
+    cfg = all_archs()["tinyllama-1.1b"].reduced()
+    opt = sgd(momentum=0.9)
+    from repro.train.trainer import init_stacked
+
+    params, opt_state = init_stacked(cfg, opt, M=3, key=jax.random.PRNGKey(0))
+    ckpt.save(tmp_path, 17, params, opt_state, monitor_state={"rho": 1.5},
+              data_cursor={"step": 17})
+    p2, o2, man, mon = ckpt.restore(tmp_path, params, opt_state)
+    assert man["step"] == 17 and man["n_workers"] == 3
+    assert mon["rho"] == 1.5
+    for a, b in zip(jax.tree_util.tree_leaves(params), jax.tree_util.tree_leaves(p2)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree_util.tree_leaves(opt_state), jax.tree_util.tree_leaves(o2)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_latest_and_overwrite(tmp_path):
+    cfg = all_archs()["qwen1.5-0.5b"].reduced()
+    opt = sgd(momentum=0.0)
+    from repro.train.trainer import init_stacked
+
+    params, opt_state = init_stacked(cfg, opt, M=2, key=jax.random.PRNGKey(1))
+    ckpt.save(tmp_path, 1, params, opt_state)
+    ckpt.save(tmp_path, 2, params, opt_state)
+    assert ckpt.latest_step(tmp_path) == 2
+
+
+def test_checkpoint_resume_equals_uninterrupted(tmp_path):
+    """Train 4 steps; vs train 2, checkpoint, restore, train 2 — identical."""
+    cfg = all_archs()["qwen1.5-0.5b"].reduced()
+    opt = sgd(momentum=0.9)
+    from repro.core import consensus
+    from repro.train.trainer import TrainStepConfig, init_stacked, make_train_step
+
+    M = 2
+    step_fn = jax.jit(
+        make_train_step(cfg, opt, M, TrainStepConfig(gossip_mode="gather")),
+        static_argnames=(),
+    )
+    ts = TokenStream(vocab_size=cfg.vocab_size, seq_len=16, batch_size=2, seed=0)
+
+    def batch_at(step):
+        bs = [ts.batch(w, step) for w in range(M)]
+        return {
+            k: jnp.stack([jnp.asarray(b[k]) for b in bs]) for k in bs[0]
+        }
+
+    def gossip_at(step):
+        rng = np.random.default_rng(step)
+        P = np.full((M, M), 0.5)
+        np.fill_diagonal(P, 0.0)
+        d = np.ones((M, M)) - np.eye(M)
+        nb, wts = consensus.sample_round(rng, P / P.sum(1, keepdims=True), 0.05, 1.0, d)
+        return {
+            "neighbors": jnp.asarray(nb),
+            "weights": jnp.asarray(wts),
+            "lr": jnp.float32(0.05),
+        }
+
+    params, opt_state = init_stacked(cfg, opt, M, jax.random.PRNGKey(0))
+    for s in range(4):
+        params, opt_state, _ = step_fn(params, opt_state, batch_at(s), gossip_at(s))
+    final_a = jax.tree_util.tree_leaves(params)
+
+    params, opt_state = init_stacked(cfg, opt, M, jax.random.PRNGKey(0))
+    for s in range(2):
+        params, opt_state, _ = step_fn(params, opt_state, batch_at(s), gossip_at(s))
+    ckpt.save(tmp_path, 2, params, opt_state, data_cursor={"step": 2})
+    params, opt_state, man, _ = ckpt.restore(tmp_path, params, opt_state)
+    for s in range(man["data_cursor"]["step"], 4):
+        params, opt_state, _ = step_fn(params, opt_state, batch_at(s), gossip_at(s))
+    final_b = jax.tree_util.tree_leaves(params)
+    for a, b in zip(final_a, final_b):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------------------------------ elastic
+
+
+def test_elastic_remove_and_add_workers():
+    cfg = all_archs()["qwen1.5-0.5b"].reduced()
+    opt = sgd(momentum=0.9)
+    from repro.train.trainer import init_stacked
+
+    params, opt_state = init_stacked(cfg, opt, M=4, key=jax.random.PRNGKey(0))
+    # distinguish replicas
+    params = jax.tree_util.tree_map(
+        lambda l: l + jnp.arange(4, dtype=l.dtype).reshape((4,) + (1,) * (l.ndim - 1)),
+        params,
+    )
+    p2, o2 = elastic.remove_workers(params, opt_state, np.array([0, 2, 3]))
+    leaf = jax.tree_util.tree_leaves(p2)[0]
+    assert leaf.shape[0] == 3
+    p3, o3 = elastic.add_workers(p2, o2, n_new=2, seed_from=1)
+    leaf3 = jax.tree_util.tree_leaves(p3)[0]
+    assert leaf3.shape[0] == 5
+    # joiners cloned from survivor index 1 (= original worker 2)
+    np.testing.assert_array_equal(np.asarray(leaf3[3]), np.asarray(leaf3[1]))
+    # momenta zeroed for joiners
+    m3 = jax.tree_util.tree_leaves(o3)[0]
+    assert np.all(np.asarray(m3[3]) == 0)
+
+
+def test_elastic_policy_rescale_converges():
+    T = np.full((5, 5), 0.02)
+    np.fill_diagonal(T, 0)
+    res = elastic.rescale_policy(0.1, T)
+    assert res.lambda2 < 1.0
+    assert res.P.shape == (5, 5)
+
+
+# ------------------------------------------------------------------ serve
+
+
+def test_serve_engine_batched_decode():
+    cfg = all_archs()["tinyllama-1.1b"].reduced()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    from repro.serve.engine import Request, ServeEngine
+
+    eng = ServeEngine(cfg, params, batch_capacity=2, max_seq=32)
+    reqs = [
+        Request(rid=0, prompt=np.array([1, 2, 3], np.int32), max_new=4),
+        Request(rid=1, prompt=np.array([4, 5], np.int32), max_new=4),
+    ]
+    done = eng.run(reqs)
+    assert len(done) == 2
+    for r in done:
+        assert len(r.out) == 4
+        assert all(0 <= t < cfg.vocab_size for t in r.out)
+
+
+def test_stacked_loader_prefetch_and_determinism():
+    from repro.data.loader import StackedLoader
+
+    ts = TokenStream(vocab_size=64, seq_len=8, batch_size=2, seed=3)
+    ld = StackedLoader(ts, n_workers=3, start_step=5)
+    step, batch = next(ld)
+    assert step == 5
+    assert batch["tokens"].shape == (3, 2, 8)
+    step2, batch2 = next(ld)
+    assert step2 == 6
+    ld.close()
+    # determinism: same (worker, step) -> same data
+    ld2 = StackedLoader(ts, n_workers=3, start_step=5)
+    _, again = next(ld2)
+    ld2.close()
+    assert np.array_equal(np.asarray(batch["tokens"]), np.asarray(again["tokens"]))
+
+
+def test_frontend_stubs_shapes():
+    import jax
+
+    from repro.configs.base import all_archs
+    from repro.models.frontends import frontend_for
+
+    vlm = all_archs()["internvl2-1b"].reduced()
+    fn = frontend_for(vlm)
+    x = fn(jax.random.PRNGKey(0), vlm, batch=2)
+    assert x.shape == (2, vlm.n_vis_tokens, vlm.d_model)
+    aud = all_archs()["whisper-small"].reduced()
+    fn = frontend_for(aud)
+    x = fn(jax.random.PRNGKey(0), aud, batch=2)
+    assert x.shape == (2, aud.enc_seq_len, aud.d_model)
+    assert frontend_for(all_archs()["tinyllama-1.1b"]) is None

@@ -1,0 +1,138 @@
+"""Trainer integration: NetMax-DP on a tiny LM actually converges, baselines
+behave, compression and the fused-mix path agree with the reference."""
+
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_arch
+from repro.core import consensus
+from repro.data.synthetic import TokenStream
+from repro.optim import sgd
+from repro.train.trainer import TrainStepConfig, init_stacked, make_train_step
+
+
+@pytest.fixture(scope="module")
+def tiny_cfg():
+    return replace(get_arch("tinyllama-1.1b").reduced(), vocab_size=256,
+                   n_layers=2, d_model=64)
+
+
+def _run_training(cfg, step_cfg, M=4, rounds=30, lr=0.05, seed=0):
+    opt = sgd(momentum=0.9)
+    step = jax.jit(make_train_step(cfg, opt, M, step_cfg))
+    params, opt_state = init_stacked(cfg, opt, M, jax.random.PRNGKey(0))
+    stream = TokenStream(vocab_size=cfg.vocab_size, seq_len=32, batch_size=4, seed=seed)
+    rng = np.random.default_rng(seed)
+    d = np.ones((M, M)) - np.eye(M)
+    P = np.where(d > 0, 1.0 / (M - 1), 0.0)
+    rho = 0.5 / (2 * lr * (M - 1))
+    losses = []
+    for r in range(rounds):
+        batch = {
+            k: jnp.stack([jnp.asarray(stream.batch(w, r)[k]) for w in range(M)])
+            for k in ("tokens", "labels")
+        }
+        nb, wts = consensus.sample_round(rng, P, lr, rho, d)
+        gi = {"neighbors": jnp.asarray(nb), "weights": jnp.asarray(wts),
+              "lr": jnp.float32(lr)}
+        params, opt_state, m = step(params, opt_state, batch, gi)
+        losses.append(float(m["loss"]))
+    return params, losses
+
+
+def test_netmax_lm_training_converges(tiny_cfg):
+    params, losses = _run_training(
+        tiny_cfg, TrainStepConfig(gossip_mode="gather"), rounds=60, lr=0.1
+    )
+    assert np.mean(losses[-5:]) < losses[0] * 0.97
+    assert np.isfinite(losses).all()
+
+
+def test_replicas_stay_close(tiny_cfg):
+    """Consensus: max replica deviation stays bounded during training."""
+    params, _ = _run_training(tiny_cfg, TrainStepConfig(gossip_mode="gather"), rounds=40)
+    dev = max(
+        float(jnp.abs(l.astype(jnp.float32) - l.astype(jnp.float32).mean(0, keepdims=True)).max())
+        for l in jax.tree_util.tree_leaves(params)
+    )
+    assert dev < 1.0
+
+
+def test_allreduce_baseline_keeps_replicas_identical(tiny_cfg):
+    params, losses = _run_training(
+        tiny_cfg, TrainStepConfig(allreduce=True), rounds=10
+    )
+    for l in jax.tree_util.tree_leaves(params):
+        lf = np.asarray(l, np.float32)
+        np.testing.assert_allclose(lf, np.broadcast_to(lf[:1], lf.shape), atol=1e-5)
+    assert losses[-1] < losses[0]
+
+
+def test_prague_groups_average_within_group(tiny_cfg):
+    params, losses = _run_training(
+        tiny_cfg, TrainStepConfig(prague_groups=2), rounds=8
+    )
+    assert np.isfinite(losses).all()
+
+
+def test_masked_psum_equals_gather(tiny_cfg):
+    p1, l1 = _run_training(tiny_cfg, TrainStepConfig(gossip_mode="gather"), rounds=6)
+    p2, l2 = _run_training(tiny_cfg, TrainStepConfig(gossip_mode="masked_psum"), rounds=6)
+    np.testing.assert_allclose(l1, l2, rtol=1e-4, atol=1e-4)
+
+
+def test_gossip_mix_kernel_path_matches(tiny_cfg):
+    """Fused Pallas mix (interpret on CPU via default=False -> ref path) must
+    equal the tree-map mix."""
+    p1, l1 = _run_training(
+        tiny_cfg, TrainStepConfig(gossip_mode="gather", use_gossip_mix_kernel=False), rounds=5
+    )
+    p2, l2 = _run_training(
+        tiny_cfg, TrainStepConfig(gossip_mode="gather", use_gossip_mix_kernel=True), rounds=5
+    )
+    np.testing.assert_allclose(l1, l2, rtol=1e-4, atol=1e-4)
+    for a, b in zip(jax.tree_util.tree_leaves(p1), jax.tree_util.tree_leaves(p2)):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32), atol=2e-3
+        )
+
+
+def test_microbatching_matches_full_batch(tiny_cfg):
+    cfg1 = replace(tiny_cfg, microbatches=1)
+    cfg2 = replace(tiny_cfg, microbatches=2)
+    p1, l1 = _run_training(cfg1, TrainStepConfig(gossip_mode="none"), rounds=4)
+    p2, l2 = _run_training(cfg2, TrainStepConfig(gossip_mode="none"), rounds=4)
+    np.testing.assert_allclose(l1, l2, rtol=2e-3, atol=2e-3)
+
+
+def test_grad_clip_applies(tiny_cfg):
+    _, losses = _run_training(
+        tiny_cfg, TrainStepConfig(gossip_mode="gather", grad_clip=0.5), rounds=5
+    )
+    assert np.isfinite(losses).all()
+
+
+def test_compression_error_feedback_training():
+    """Sparsified gossip (top-k + EF) still converges on the consensus task."""
+    from repro.core.compression import ErrorFeedback
+
+    M, D = 6, 32
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(M, D)).astype(np.float32) * 3)
+    ef = ErrorFeedback(ratio=0.25)
+    states = [ef.init_state({"p": x[i]}) for i in range(M)]
+    xs = [{"p": x[i]} for i in range(M)]
+    for step in range(300):
+        i = step % M
+        m = (i + 1 + (step // M) % (M - 1)) % M
+        delta = jax.tree_util.tree_map(lambda a, b: b - a, xs[i], xs[m])
+        sent, states[i] = ef.compress(delta, states[i])
+        xs[i] = jax.tree_util.tree_map(lambda a, s: a + 0.5 * s, xs[i], sent)
+    stack = jnp.stack([t["p"] for t in xs])
+    dev = float(jnp.abs(stack - stack.mean(0, keepdims=True)).max())
+    dev0 = float(jnp.abs(x - x.mean(0, keepdims=True)).max())
+    assert dev < dev0 * 0.2, (dev, dev0)
