@@ -57,6 +57,44 @@ def bench_kernels():
     return rows
 
 
+def bench_algorithms(events=1200):
+    """One row per *registered* communication strategy (repro.algos).
+
+    The algorithm list is enumerated from the registry, not hardcoded: any
+    newly ``@register``'d strategy is benchmarked automatically.  Reports
+    host us per simulated event plus the virtual-time/comm split.
+    """
+    from repro.algos import list_algorithms
+    from repro.core.nettime import LinkTimeModel, Topology
+    from repro.data.partition import uniform_partition
+    from repro.data.synthetic import train_eval_split
+    from repro.train.simulator import SimConfig, simulate
+
+    M = 8
+    topo = Topology(n_workers=M, workers_per_host=4, hosts_per_pod=1)
+    x, y, ex, ey = train_eval_split(3000, 800, 32, 10, seed=0)
+    parts = uniform_partition(len(y), M, seed=0)
+    rows = {}
+    for name in list_algorithms():
+        link = LinkTimeModel(topo, jitter=0.02, seed=5, slow_interval=120.0)
+        cfg = SimConfig(algorithm=name, n_workers=M, total_events=events,
+                        lr=0.05, monitor_period=20.0, seed=0)
+        t0 = time.time()
+        res = simulate(cfg, link, x, y, parts, ex, ey, record_every=events)
+        us_per_event = (time.time() - t0) * 1e6 / events
+        rows[name] = dict(
+            us_per_event=us_per_event,
+            virtual_time_s=res.times[-1],
+            comm_time_s=res.comm_time,
+            final_loss=res.losses[-1],
+            policy_updates=res.policy_updates,
+        )
+        print(f"algo/{name},{us_per_event:.0f},"
+              f"vt={res.times[-1]:.1f}s_comm={res.comm_time:.1f}s_"
+              f"loss={res.losses[-1]:.3f}")
+    return rows
+
+
 def bench_roofline_summary():
     """Summarize dry-run artifacts (if present) into roofline terms."""
     from repro.analysis.roofline import from_record
@@ -89,7 +127,7 @@ def bench_roofline_summary():
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--suite", default="all",
-                    choices=["all", "paper", "kernels", "roofline", "quick"])
+                    choices=["all", "paper", "kernels", "roofline", "quick", "algos"])
     ap.add_argument("--events", type=int, default=4000)
     args = ap.parse_args()
 
@@ -98,6 +136,10 @@ def main() -> None:
     out = {}
     if args.suite in ("all", "kernels", "quick"):
         out["kernels"] = bench_kernels()
+    if args.suite in ("all", "quick", "algos"):
+        out["algorithms"] = bench_algorithms(
+            events=min(args.events, 1200) if args.suite == "quick" else args.events
+        )
     if args.suite in ("all", "paper"):
         out["policy_generation"] = pt.bench_policy_generation()
         out["epoch_time_hetero"] = pt.bench_epoch_time(hetero=True)

@@ -73,6 +73,27 @@ def main():
     print(f"  column P[:,5] = {np.round(p3.P[:, 5], 4).tolist()} (all zero)")
     print(f"  survivors still converge: lambda2={p3.lambda2:.4f} < 1")
 
+    # Every registered strategy on the same dynamic network (repro.algos):
+    # new @register'd algorithms are picked up automatically.
+    from repro.algos import list_algorithms
+    from repro.core.nettime import LinkTimeModel, Topology
+    from repro.data.partition import uniform_partition
+    from repro.data.synthetic import train_eval_split
+    from repro.train.simulator import SimConfig, simulate
+
+    topo = Topology(n_workers=M, workers_per_host=3, hosts_per_pod=1)
+    x, y, ex, ey = train_eval_split(2000, 500, 32, 10, seed=0)
+    parts = uniform_partition(len(y), M, seed=0)
+    print(f"\nAll {len(list_algorithms())} registered strategies on the "
+          "dynamic network (short runs):")
+    for algo in list_algorithms():
+        link = LinkTimeModel(topo, jitter=0.02, seed=7, slow_interval=60.0)
+        cfg = SimConfig(algorithm=algo, n_workers=M, total_events=1200,
+                        lr=0.02, monitor_period=10.0, seed=0)
+        r = simulate(cfg, link, x, y, parts, ex, ey, record_every=300)
+        print(f"  {algo:12s} loss={r.losses[-1]:.4f} t={r.times[-1]:7.1f}s "
+              f"comm={r.comm_time:7.1f}s policy_updates={r.policy_updates}")
+
 
 if __name__ == "__main__":
     main()

@@ -14,6 +14,7 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 import numpy as np
 
+from repro.algos import list_algorithms
 from repro.core import policy as policy_mod
 from repro.core.nettime import LinkTimeModel, Topology
 from repro.data.partition import uniform_partition
@@ -40,19 +41,23 @@ def main():
     print(f"  P[0 -> slow neighbor 4]  = {res.P[0, 4]:.4f}  (floor, Eq. 11)")
     print(f"  P[0 -> fast neighbors]   = {res.P[0, 1:4].mean():.4f}")
 
-    # 2) End-to-end: real training under the async event simulator.
+    # 2) End-to-end: real training under the async event simulator, once per
+    #    registered communication strategy (repro.algos) — a new @register'd
+    #    Algorithm automatically shows up here.
     topo = Topology(n_workers=M, workers_per_host=4, hosts_per_pod=1)
     x, y, ex, ey = train_eval_split(4000, 1000, 32, 10, seed=0)
     parts = uniform_partition(len(y), M, seed=0)
-    print("\nTraining the same model under four protocols (virtual time):")
+    algos = list_algorithms()
+    print(f"\nTraining the same model under all {len(algos)} registered "
+          "protocols (virtual time):")
     results = {}
-    for algo in ("netmax", "adpsgd", "allreduce", "prague"):
+    for algo in algos:
         link = LinkTimeModel(topo, jitter=0.02, seed=5, slow_interval=120.0)
         cfg = SimConfig(algorithm=algo, n_workers=M, total_events=4000,
                         lr=0.01, monitor_period=10.0, seed=0)
         r = simulate(cfg, link, x, y, parts, ex, ey, record_every=200)
         results[algo] = r
-        print(f"  {algo:10s} final_loss={r.losses[-1]:.4f} "
+        print(f"  {algo:12s} final_loss={r.losses[-1]:.4f} "
               f"acc={r.accs[-1]:.3f}  virtual_time={r.times[-1]:7.1f}s "
               f"policy_updates={r.policy_updates}")
 
@@ -62,7 +67,7 @@ def main():
     for algo, r in results.items():
         t = r.time_to_loss(target)
         sp = f"{t / t_nm:.2f}x" if algo != "netmax" else "1.00x (ref)"
-        print(f"  {algo:10s} {t:7.1f}s   NetMax speedup: {sp}")
+        print(f"  {algo:12s} {t:7.1f}s   NetMax speedup: {sp}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,34 @@
+"""Pluggable communication strategies (DESIGN.md §1).
+
+Importing this package populates the registry with the paper's seven
+strategies plus the beyond-paper ``netmax-topk``:
+
+    from repro.algos import get_algorithm, list_algorithms
+    algo = get_algorithm("netmax")
+"""
+
+from repro.algos.base import (
+    Algorithm,
+    AlgoState,
+    Timing,
+    get_algorithm,
+    list_algorithms,
+    mean_params,
+    register,
+)
+
+# Importing the strategy modules registers them.
+from repro.algos import collective as _collective  # noqa: F401
+from repro.algos import netmax as _netmax  # noqa: F401
+from repro.algos import netmax_topk as _netmax_topk  # noqa: F401
+from repro.algos import ps as _ps  # noqa: F401
+
+__all__ = [
+    "Algorithm",
+    "AlgoState",
+    "Timing",
+    "get_algorithm",
+    "list_algorithms",
+    "mean_params",
+    "register",
+]

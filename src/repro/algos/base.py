@@ -1,0 +1,328 @@
+"""The ``Algorithm`` protocol + registry (DESIGN.md §1).
+
+One communication strategy = one ``Algorithm`` subclass owning its three
+concerns:
+
+* **peer/group selection** — host-side, numpy RNG: which neighbor a worker
+  pulls from (async families) or how workers partition into reduction groups
+  (synchronous families).
+* **mixing semantics** — pure JAX: how pulled parameters fold into the local
+  replica.  The same leaf-level rule serves both the event simulator's
+  per-replica path (``mix``) and the SPMD trainer's stacked path
+  (``stacked_round`` / ``mix_stacked``), which is what the parity tests pin.
+* **timing semantics** — the per-event (or per-round) duration model:
+  congestion, barriers, compute/communication overlap.
+
+The event-driven simulator (train/simulator.py) and the SPMD trainer
+(train/trainer.py) are thin drivers over this protocol; new strategies
+(e.g. sparsified pulls, SAPS-style) register themselves and ride both
+substrates plus the benchmark harness for free:
+
+    @register("my-algo")
+    class MyAlgo(Algorithm):
+        ...
+
+    algo = get_algorithm("my-algo")
+"""
+
+from __future__ import annotations
+
+import abc
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# --------------------------------------------------------------------------
+# Registry
+# --------------------------------------------------------------------------
+
+_REGISTRY: dict[str, type["Algorithm"]] = {}
+
+
+def register(name: str):
+    """Class decorator: ``@register("netmax")`` adds the class to the registry."""
+
+    def deco(cls):
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+
+    return deco
+
+
+def get_algorithm(name: "str | Algorithm", **kwargs) -> "Algorithm":
+    """Instantiate a registered algorithm by name (kwargs -> constructor).
+
+    An Algorithm instance passes through unchanged — this is the single
+    dispatch point for "name or instance" (SimConfig.algorithm etc.).
+    """
+    if isinstance(name, Algorithm):
+        assert not kwargs, "kwargs only apply when constructing by name"
+        return name
+    try:
+        cls = _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown algorithm {name!r}; registered: {sorted(_REGISTRY)}"
+        ) from None
+    return cls(**kwargs)
+
+
+def list_algorithms() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+# --------------------------------------------------------------------------
+# Shared state / timing records
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class AlgoState:
+    """Host-side mutable state the event loop shares with the algorithm."""
+
+    M: int
+    d: np.ndarray  # connectivity mask (M, M), 0/1, zero diagonal
+    P: np.ndarray  # communication policy matrix (rows sum to 1 on edges)
+    rho: float  # consensus step size (paper Alg. 3)
+    extras: dict = field(default_factory=dict)
+
+
+@dataclass
+class Timing:
+    """Duration model output for one event (async) or one round (sync)."""
+
+    duration: float
+    comm: float = 0.0
+    compute: float = 0.0
+
+
+def uniform_state(cfg, M: int) -> AlgoState:
+    """Fully-connected uniform policy + the conservative initial rho.
+
+    Initial rho keeps w = alpha*rho*gamma <= 0.5 under the uniform policy
+    (gamma = M-1); a Monitor's Alg.-3 rho replaces it on first refresh.
+    """
+    d = np.ones((M, M)) - np.eye(M)
+    P = np.where(d > 0, 1.0 / (M - 1), 0.0)
+    rho = getattr(cfg, "rho", None)
+    if rho is None:
+        rho = 0.5 / (2 * cfg.lr * max(M - 1, 1))
+    return AlgoState(M=M, d=d, P=P, rho=rho)
+
+
+def guard_policy_rows(P: np.ndarray, d: np.ndarray) -> np.ndarray:
+    """Keep every row a valid sampling distribution (fallback: uniform)."""
+    P = P.copy()
+    bad = P.sum(axis=1) <= 0
+    M = P.shape[0]
+    P[bad] = np.where(d[bad] > 0, 1.0 / max(M - 1, 1), 0.0)
+    return P
+
+
+# --------------------------------------------------------------------------
+# Protocol
+# --------------------------------------------------------------------------
+
+
+class Algorithm(abc.ABC):
+    """One pluggable communication strategy; see module docstring."""
+
+    name: str = "?"
+    # gossip  — async pairwise pulls (netmax / adpsgd family)
+    # collective — synchronous (partial-)allreduce rounds
+    # ps      — parameter-server star
+    family: str = "gossip"
+    synchronous: bool = False  # round-based barrier loop vs event-driven
+    reports_ema: bool = True  # workers feed IterationTimeEMA (Alg. 2 l.19-22)
+
+    def __init__(self):
+        self._mix_jit = None
+        self._mix_stacked_jit = None
+        self._stacked_round_jit = None
+
+    # -- lifecycle ----------------------------------------------------------
+    def init_state(self, cfg, M: int) -> AlgoState:
+        return uniform_state(cfg, M)
+
+    def wants_monitor(self, cfg) -> bool:
+        """Whether the simulator should run a Network Monitor for this algo."""
+        return False
+
+    def make_monitor(self, cfg, M: int, d=None):
+        """Build the Monitor; cfg.monitor_period (when set) is the single
+        source of truth for the schedule period T_s, and ``d`` (the
+        AlgoState connectivity mask) bounds the topology Algorithm 3
+        optimizes over."""
+        from repro.core.monitor import NetworkMonitor
+
+        kw = dict(alpha=cfg.lr, K=cfg.policy_K, R=cfg.policy_R, d=d)
+        period = getattr(cfg, "monitor_period", None)
+        if period is not None:
+            kw["schedule_period"] = float(period)
+        return NetworkMonitor(M, **kw)
+
+    def on_policy(self, state: AlgoState, pol) -> None:
+        """Fold a fresh Monitor policy into host state."""
+        state.P = guard_policy_rows(pol.P, state.d)
+
+    # -- peer/group selection (host side, numpy RNG) ------------------------
+    def select_peer(self, state: AlgoState, i: int, rng) -> int | None:
+        """Async families: the neighbor worker i pulls from this event."""
+        raise NotImplementedError(f"{self.name} is not event-driven")
+
+    def select_groups(self, state: AlgoState, rng) -> list[list[int]]:
+        """Sync families: the reduction groups for this round."""
+        raise NotImplementedError(f"{self.name} is not round-based")
+
+    # -- mixing semantics (pure JAX) ----------------------------------------
+    def delta_transform(self, delta: jnp.ndarray) -> jnp.ndarray:
+        """Hook on the consensus delta (x_pull - x_half) of ONE replica.
+
+        Identity here; compression strategies (top-k, quantization) override.
+        Must be jit-traceable; applied per worker row under vmap on the
+        stacked path, so it sees unstacked leaf shapes in both substrates.
+        """
+        return delta
+
+    def mix_weight(self, state: AlgoState, cfg, i: int, m: int) -> float:
+        """Consensus weight w for worker i pulling from m (host side)."""
+        return 0.5
+
+    def mix(self, x_half, pulled, w):
+        """Per-replica consensus mix: x_half + w * f(pulled - x_half)."""
+        if self._mix_jit is None:
+
+            def fn(h, p, w):
+                return jax.tree_util.tree_map(
+                    lambda a, b: a
+                    + w.astype(a.dtype) * self.delta_transform(b - a),
+                    h, p,
+                )
+
+            self._mix_jit = jax.jit(fn)
+        return self._mix_jit(x_half, pulled, jnp.float32(w))
+
+    def mix_stacked(self, x_half, pulled, weights):
+        """Stacked consensus mix: leaves carry a leading worker axis; the
+        leaf rule is the same ``delta_transform`` as the per-replica path."""
+        if self._mix_stacked_jit is None:
+
+            def fn(h_tree, p_tree, weights):
+                def leaf(h, p):
+                    # Cast weights into the param dtype so bf16 replicas stay
+                    # bf16 (matches dist/gossip.mix and optimizer.apply).
+                    w = weights.reshape((-1,) + (1,) * (h.ndim - 1)).astype(h.dtype)
+                    return h + w * jax.vmap(self.delta_transform)(p - h)
+
+                return jax.tree_util.tree_map(leaf, h_tree, p_tree)
+
+            self._mix_stacked_jit = jax.jit(fn)
+        return self._mix_stacked_jit(x_half, pulled, weights)
+
+    def stacked_round(self, params, grads, neighbors, weights, alpha):
+        """One lockstep gossip round on stacked replicas (SPMD reference).
+
+        params/grads leaves: (M, ...); neighbors i32 (M,); weights f32 (M,).
+        Pulls are *pre-round* neighbor params (Eq. 16), then the same
+        leaf-level mix as the event-driven path — the parity tests assert
+        both substrates agree given identical draws.
+        """
+        if self._stacked_round_jit is None:
+
+            def fn(params, grads, neighbors, weights, alpha):
+                def leaf(x, g):
+                    pulled = jnp.take(x, neighbors, axis=0)
+                    x_half = x - jnp.asarray(alpha, x.dtype) * g
+                    w = weights.reshape((-1,) + (1,) * (x.ndim - 1)).astype(x.dtype)
+                    return x_half + w * jax.vmap(self.delta_transform)(
+                        pulled - x_half
+                    )
+
+                return jax.tree_util.tree_map(leaf, params, grads)
+
+            self._stacked_round_jit = jax.jit(fn)
+        return self._stacked_round_jit(params, grads, neighbors, weights, alpha)
+
+    def transform_grads(self, grads, M: int):
+        """SPMD trainer hook: grad reduction before the optimizer step
+        (identity for gossip; global/group mean for collective families)."""
+        return grads
+
+    @property
+    def communicates_in_trainer(self) -> bool:
+        """Whether the SPMD train step performs a gossip pull + mix."""
+        return self.family == "gossip"
+
+    @property
+    def supports_trainer(self) -> bool:
+        """Whether the lockstep SPMD trainer can express this strategy.
+
+        False for strategies whose semantics are inherently asynchronous
+        and not reducible to grad reduction + gossip mix (ps-async);
+        make_train_step raises rather than silently degrading.
+        """
+        return True
+
+    # -- event application (async families) ---------------------------------
+    def apply_comm(self, state: AlgoState, cfg, replicas, i, m, x_half):
+        """Fold worker i's communication into the replica list.
+
+        Default (gossip): replicas[i] <- mix(x_half, pre-event replicas[m]).
+        Returns True when a transfer actually crossed the network.
+        """
+        if m is not None and m != i and state.d[i, m]:
+            w = self.mix_weight(state, cfg, i, m)
+            replicas[i] = self.mix(x_half, replicas[m], w)
+            return True
+        replicas[i] = x_half
+        return False
+
+    # -- timing semantics ---------------------------------------------------
+    def event_timing(
+        self, state: AlgoState, cfg, link, i: int, m: int | None,
+        communicated: bool, t: float,
+    ) -> Timing:
+        """Async duration model: overlap of compute and the (optional) pull."""
+        net = link.iteration_time(i, m, now=t) if communicated else 0.0
+        net *= self.wire_ratio()
+        comp = link.compute_time
+        if getattr(cfg, "serial_compute", False):
+            return Timing(duration=comp + net, comm=net, compute=comp)
+        return Timing(duration=max(comp, net), comm=max(0.0, net - comp),
+                      compute=comp)
+
+    def round_timing(self, state: AlgoState, cfg, link, groups, t: float) -> Timing:
+        raise NotImplementedError(f"{self.name} is not round-based")
+
+    def wire_ratio(self) -> float:
+        """Bytes-on-the-wire ratio vs a dense f32 pull (compression hook)."""
+        return 1.0
+
+    # -- round application (sync families) ----------------------------------
+    def reduce_groups(self, replicas, groups):
+        """Average replicas within each reduction group (pure JAX)."""
+        for grp in groups:
+            if len(grp) < 2:
+                continue
+            mean_p = mean_params([replicas[i] for i in grp])
+            for i in grp:
+                replicas[i] = mean_p
+
+    def __repr__(self):
+        return f"<Algorithm {self.name} family={self.family}>"
+
+
+def mean_params(replicas):
+    return jax.tree_util.tree_map(lambda *xs: sum(xs) / len(xs), *replicas)
+
+
+def global_mean_grads(grads):
+    """Mean over the stacked worker dim, broadcast back — lowers to an
+    all-reduce along the worker mesh axes in the SPMD trainer."""
+    return jax.tree_util.tree_map(
+        lambda g: jnp.broadcast_to(g.mean(axis=0, keepdims=True), g.shape),
+        grads,
+    )

@@ -59,8 +59,15 @@ class NetworkMonitor:
     K: int = 8
     R: int = 8
     eps: float = 1e-2
-    schedule_period: float = 120.0  # T_s (paper uses 2 minutes)
+    # T_s (paper uses 2 minutes).  This is the single source of truth for
+    # the monitor period: the simulator's event loop schedules refreshes off
+    # this value, and SimConfig.monitor_period (when set) is forwarded here
+    # by Algorithm.make_monitor rather than tracked separately.
+    schedule_period: float = 120.0
     dead_after: int = 3
+    # Base connectivity mask (M, M); None = fully connected.  step() combines
+    # it with the live-worker mask so Algorithm 3 only routes over live links.
+    d: np.ndarray | None = None
 
     _T: np.ndarray = field(init=False)
     _missed: np.ndarray = field(init=False)
@@ -99,7 +106,14 @@ class NetworkMonitor:
         """One Algorithm-1 period: recompute and publish (P, rho)."""
         T = self._time_matrix()
         live = ~np.all(~np.isfinite(T) | (T == 0), axis=1)
-        res = generate_policy_matrix(self.alpha, self.K, self.R, T, eps=self.eps)
+        # Connectivity mask consistent with ``live``: base topology minus
+        # links to/from dead workers (Algorithm 3 then optimizes only over
+        # the live subgraph instead of re-deriving liveness from inf times).
+        conn = np.ones((self.n_workers, self.n_workers)) if self.d is None else self.d.copy()
+        np.fill_diagonal(conn, 0.0)
+        conn[~live, :] = 0.0
+        conn[:, ~live] = 0.0
+        res = generate_policy_matrix(self.alpha, self.K, self.R, T, d=conn, eps=self.eps)
         self.policy = res
         self.history.append(
             dict(

@@ -1,0 +1,1 @@
+"""Distributed substrate: gossip collectives + sharding plans (DESIGN.md §5/§6)."""

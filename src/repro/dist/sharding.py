@@ -1,0 +1,106 @@
+"""Sharding plans: map (arch config, mesh) -> PartitionSpecs (DESIGN.md §5).
+
+NetMax-DP shards the *stacked* training state: every leaf carries a leading
+worker axis enumerated over ``cfg.worker_axes`` (single-pod meshes drop the
+'pod' axis automatically); the trailing feature dim rides the 'model' axis
+when divisible (TP).  Serving drops the worker dim and keeps TP only.
+
+Heuristics, not a search: the dry-run harness (launch/dryrun.py) exists to
+measure what these plans lower to.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import worker_axis_names, worker_count
+
+
+@dataclass(frozen=True)
+class ShardingPlan:
+    mesh: object
+    n_workers: int
+    worker_axes: tuple  # worker-enumeration axes present in this mesh
+    model_axis: str = "model"
+
+    def axis_size(self, name: str) -> int:
+        return int(self.mesh.shape.get(name, 1))  # Mesh.shape is an OrderedDict
+
+
+def plan_for(cfg, mesh, serve: bool = False) -> ShardingPlan:
+    """Resolve the worker/TP split for this config on this mesh."""
+    if serve:
+        return ShardingPlan(mesh=mesh, n_workers=1, worker_axes=())
+    waxes = worker_axis_names(mesh, getattr(cfg, "worker_axes", ("pod", "data")))
+    return ShardingPlan(mesh=mesh, n_workers=worker_count(mesh, waxes),
+                        worker_axes=waxes)
+
+
+def _tp(plan: ShardingPlan) -> int:
+    return plan.axis_size(plan.model_axis)
+
+
+def _leaf_spec(leaf, plan: ShardingPlan, stacked: bool) -> P:
+    """Leading worker axes (stacked), trailing dim on 'model' when divisible."""
+    ndim = leaf.ndim
+    tp = _tp(plan)
+    lead = [tuple(plan.worker_axes)] if stacked else []
+    body_ndim = ndim - (1 if stacked else 0)
+    body = [None] * body_ndim
+    if body_ndim >= 1 and tp > 1:
+        last = leaf.shape[-1]
+        if last % tp == 0 and last >= tp:
+            body[-1] = plan.model_axis
+    return P(*lead, *body)
+
+
+def param_specs(cfg, params, plan: ShardingPlan, stacked: bool = True):
+    """PartitionSpec tree for (stacked) parameters."""
+    return jax.tree_util.tree_map(
+        lambda l: _leaf_spec(l, plan, stacked), params
+    )
+
+
+def batch_specs(cfg, plan: ShardingPlan, shape, stacked: bool = True):
+    """Specs for the training batch: leading worker dim, rest replicated."""
+    from repro.launch import specs as sp
+
+    abstract = sp.train_batch_specs(cfg, shape, max(plan.n_workers, 1))
+    lead = tuple(plan.worker_axes)
+    return jax.tree_util.tree_map(
+        lambda l: P(lead, *([None] * (l.ndim - 1))), abstract
+    )
+
+
+def _data_axis_spec(plan: ShardingPlan, dim: int) -> object:
+    data = plan.axis_size("data")
+    return "data" if data > 1 and dim % data == 0 else None
+
+
+def prefill_batch_specs(cfg, plan: ShardingPlan, batch):
+    """Serve prefill: shard the batch dim over 'data', rest replicated."""
+    return jax.tree_util.tree_map(
+        lambda l: P(_data_axis_spec(plan, l.shape[0]), *([None] * (l.ndim - 1))),
+        batch,
+    )
+
+
+def cache_specs(cfg, cache, plan: ShardingPlan, global_batch: int):
+    """Decode cache: shard the batch-sized axis over 'data' when present."""
+
+    def leaf(l):
+        body = [None] * l.ndim
+        for ax, dim in enumerate(l.shape):
+            if dim == global_batch and _data_axis_spec(plan, dim) is not None:
+                body[ax] = "data"
+                break
+        return P(*body)
+
+    return jax.tree_util.tree_map(leaf, cache)
+
+
+def serve_batch_spec(plan: ShardingPlan, global_batch: int) -> P:
+    return P(_data_axis_spec(plan, global_batch))

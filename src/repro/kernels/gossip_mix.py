@@ -55,7 +55,7 @@ def gossip_mix(x, u, pulled, w, *, interpret: bool = False, block: int = _BLOCK)
             pl.BlockSpec((block,), lambda i: (i,)),
             pl.BlockSpec((block,), lambda i: (i,)),
             pl.BlockSpec((block,), lambda i: (i,)),
-            pl.BlockSpec((1,), lambda i: (0,), memory_space=pltpu.MemorySpace.SMEM),
+            pl.BlockSpec((1,), lambda i: (0,), memory_space=pltpu.SMEM),
         ],
         out_specs=pl.BlockSpec((block,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((xf.size,), dtype),

@@ -55,12 +55,16 @@ def main():
         cfg = cfg.reduced()
 
     opt = sgd(momentum=0.9, weight_decay=1e-4)
+    from repro.algos import get_algorithm
+
+    if args.algo == "prague":
+        algo = get_algorithm("prague", trainer_groups=max(2, M // 2))
+    else:
+        algo = get_algorithm("netmax" if args.algo == "local" else args.algo)
     step_cfg = TrainStepConfig(
         gossip_mode="none" if args.algo in ("allreduce", "local") else args.gossip,
-        allreduce=args.algo == "allreduce",
-        prague_groups=max(2, M // 2) if args.algo == "prague" else 0,
     )
-    step_fn = jax.jit(make_train_step(cfg, opt, M, step_cfg))
+    step_fn = jax.jit(make_train_step(cfg, opt, M, algo, step_cfg))
     stream = TokenStream(cfg.vocab_size, args.seq, args.batch_per_worker, seed=0)
 
     topo = Topology(M, workers_per_host=max(1, M // 2), hosts_per_pod=1)

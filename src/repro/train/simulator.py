@@ -6,15 +6,14 @@ one worker (grad step on its own data + pull from a sampled neighbor), with
 the iteration duration drawn from the heterogeneous LinkTimeModel.  The
 Network Monitor wakes on its own schedule (T_s) and republishes (P, rho).
 
-Algorithms share the event loop and differ only in communication semantics:
+The simulator itself is a *thin driver*: all communication semantics —
+peer/group selection, mixing, timing — live in pluggable ``Algorithm``
+strategies (repro.algos; DESIGN.md §1).  ``SimConfig.algorithm`` names any
+registered strategy (or carries an ``Algorithm`` instance directly):
 
-  netmax     adaptive P from Alg. 3; mix weight alpha*rho*gamma_{i,m}
-  adpsgd     uniform neighbor, fixed averaging weight 1/2 (Lian et al.)
-  adpsgd+mon AD-PSGD with Monitor-optimized probabilities (paper §V-H)
-  allreduce  synchronous: all workers step together at the slowest pace
-  prague     random groups of g workers partial-allreduce per iteration
-  ps-sync    parameter server, synchronous (barrier at PS)
-  ps-async   parameter server, per-worker async push/pull
+    from repro.algos import list_algorithms
+    for name in list_algorithms():
+        simulate(SimConfig(algorithm=name, ...), ...)
 
 Models are real JAX models (small MLPs) trained on real (synthetic) data —
 losses/accuracies are measured, not modeled.
@@ -29,8 +28,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import consensus
-from repro.core.monitor import IterationTimeEMA, NetworkMonitor
+from repro.algos import Algorithm, get_algorithm, mean_params
+from repro.core.monitor import IterationTimeEMA
 from repro.core.nettime import LinkTimeModel
 
 
@@ -73,13 +72,6 @@ def _grad_step(params, x, y, lr, momentum_state, mu):
     return loss, new_p, new_m
 
 
-@jax.jit
-def _mix(params, pulled, w):
-    return jax.tree_util.tree_map(
-        lambda a, b: (1.0 - w) * a + w * b, params, pulled
-    )
-
-
 # --------------------------------------------------------------------------
 # Simulation
 # --------------------------------------------------------------------------
@@ -87,31 +79,28 @@ def _mix(params, pulled, w):
 
 @dataclass
 class SimConfig:
-    algorithm: str = "netmax"
+    # Any registered strategy name (repro.algos.list_algorithms()) or an
+    # Algorithm instance.
+    algorithm: str | Algorithm = "netmax"
     n_workers: int = 8
     lr: float = 0.05
     momentum: float = 0.9
     rho: float | None = None  # netmax: from Monitor
     batch_size: int = 64
     total_events: int = 4000
-    monitor_period: float = 30.0  # T_s
+    # Monitor schedule period T_s.  None defers to NetworkMonitor's own
+    # default (the paper's 2 minutes); setting it here is the single source
+    # of truth — the simulator reads the period back off the Monitor.
+    monitor_period: float | None = None
     ema_beta: float = 0.5
     policy_K: int = 8
     policy_R: int = 8
     prague_group: int = 4
-    # Concurrent partial-allreduce groups contend for shared links (paper
-    # §V-B: "concurrent executions of partial-allreduce of different groups
-    # compete for the limited bandwidth capacity, resulting in network
-    # congestion").  Each extra concurrent group inflates ring time by this
-    # factor.
     prague_contention: float = 0.5
     serial_compute: bool = False  # Fig. 7 ablation: no compute/comm overlap
     uniform_policy: bool = False  # Fig. 7 ablation: no adaptive probabilities
     adaptive_weight: bool = True  # NetMax gamma weighting vs fixed 1/2
     ps_node: int = 0  # which worker doubles as the PS (ps-* algorithms)
-    # All PS traffic funnels through one node (paper SSVI: "the training is
-    # constrained by the network capacity at the parameter server").  Each
-    # additional concurrent worker inflates the PS link time.
     ps_congestion: float = 0.4
     seed: int = 0
 
@@ -136,10 +125,6 @@ class SimResult:
         return self.accs[-1] if self.accs else 0.0
 
 
-def _mean_params(replicas):
-    return jax.tree_util.tree_map(lambda *xs: sum(xs) / len(xs), *replicas)
-
-
 def simulate(
     cfg: SimConfig,
     link_model: LinkTimeModel,
@@ -150,6 +135,7 @@ def simulate(
     eval_y: np.ndarray,
     record_every: int = 100,
 ) -> SimResult:
+    algo = get_algorithm(cfg.algorithm)
     M = cfg.n_workers
     rng = np.random.default_rng(cfg.seed)
     key = jax.random.PRNGKey(cfg.seed)
@@ -158,19 +144,11 @@ def simulate(
     replicas = [jax.tree_util.tree_map(jnp.array, p0) for _ in range(M)]
     momenta = [jax.tree_util.tree_map(jnp.zeros_like, p0) for _ in range(M)]
 
-    d = np.ones((M, M)) - np.eye(M)
-    P = np.where(d > 0, 1.0 / (M - 1), 0.0)
-    # Initial rho: keeps w = alpha*rho*gamma <= 0.5 under the uniform policy
-    # (gamma = M-1); the Monitor's Alg.-3 rho replaces it on first refresh.
-    rho = cfg.rho if cfg.rho is not None else 0.5 / (2 * cfg.lr * (M - 1))
-    emas = [IterationTimeEMA(M, beta=cfg.ema_beta) for _ in range(M)]
-    monitor = NetworkMonitor(M, alpha=cfg.lr, K=cfg.policy_K, R=cfg.policy_R)
-    use_monitor = cfg.algorithm in ("netmax", "adpsgd+mon") and not cfg.uniform_policy
-
+    state = algo.init_state(cfg, M)
     res = SimResult()
 
     def eval_now(t, ev):
-        mean_p = _mean_params(replicas)
+        mean_p = mean_params(replicas)
         loss = float(ce_loss(mean_p, jnp.asarray(eval_x), jnp.asarray(eval_y)))
         logits = mlp_apply(mean_p, jnp.asarray(eval_x))
         acc = float((jnp.argmax(logits, -1) == jnp.asarray(eval_y)).mean())
@@ -183,128 +161,63 @@ def simulate(
         idx = rng.choice(part_idx[i], size=min(cfg.batch_size, len(part_idx[i])))
         return jnp.asarray(data_x[idx]), jnp.asarray(data_y[idx])
 
-    # ---------------- synchronous algorithms: round-based loop ----------------
-    if cfg.algorithm in ("allreduce", "prague", "ps-sync"):
+    def grad_step(i):
+        x, y = batch_for(i)
+        loss, new_p, momenta[i] = _grad_step(
+            replicas[i], x, y, cfg.lr, momenta[i], cfg.momentum
+        )
+        return new_p
+
+    # ---------------- synchronous strategies: round-based loop ----------------
+    if algo.synchronous:
         t = 0.0
         rounds = cfg.total_events // M
         for r in range(rounds):
-            # compute + comm time for the round
-            comp = link_model.compute_time
-            if cfg.algorithm == "allreduce":
-                # ring allreduce: bottlenecked by the slowest link in the ring
-                ring = [(i, (i + 1) % M) for i in range(M)]
-                step_t = max(link_model.iteration_time(i, j, now=t) for i, j in ring)
-                comm = step_t * 2 * (M - 1) / M  # 2(M-1)/M ring phases
-            elif cfg.algorithm == "prague":
-                order = rng.permutation(M)
-                comm = 0.0
-                g = cfg.prague_group
-                n_groups = max(1, M // g)
-                congestion = 1.0 + cfg.prague_contention * (n_groups - 1)
-                for s in range(0, M, g):
-                    grp = order[s : s + g]
-                    if len(grp) < 2:
-                        continue
-                    ring = [(int(grp[a]), int(grp[(a + 1) % len(grp)])) for a in range(len(grp))]
-                    ct = max(link_model.iteration_time(i, j, now=t) for i, j in ring)
-                    comm = max(comm, ct * 2 * (len(grp) - 1) / len(grp) * congestion)
-            else:  # ps-sync: every worker exchanges with the PS node
-                ps = cfg.ps_node
-                congestion = 1.0 + cfg.ps_congestion * (M - 2)
-                comm = max(
-                    link_model.iteration_time(i, ps, now=t) for i in range(M) if i != ps
-                ) * congestion
-            t += comp + comm
-            res.comm_time += comm
-            res.compute_time += comp
-            # parameter updates
+            groups = algo.select_groups(state, rng)
+            timing = algo.round_timing(state, cfg, link_model, groups, t)
+            t += timing.duration
+            res.comm_time += timing.comm
+            res.compute_time += timing.compute
             for i in range(M):
-                x, y = batch_for(i)
-                _, replicas[i], momenta[i] = _grad_step(
-                    replicas[i], x, y, cfg.lr, momenta[i], cfg.momentum
-                )
-            if cfg.algorithm == "prague":
-                for s in range(0, M, cfg.prague_group):
-                    grp = [int(w) for w in order[s : s + cfg.prague_group]]
-                    mean_p = _mean_params([replicas[i] for i in grp])
-                    for i in grp:
-                        replicas[i] = mean_p
-            else:
-                mean_p = _mean_params(replicas)
-                for i in range(M):
-                    replicas[i] = mean_p
+                replicas[i] = grad_step(i)
+            algo.reduce_groups(replicas, groups)
             if r % max(1, record_every // M) == 0:
                 eval_now(t, (r + 1) * M)
         eval_now(t, rounds * M)
         return res
 
-    # ---------------- asynchronous algorithms: event-driven loop --------------
+    # ---------------- asynchronous strategies: event-driven loop --------------
+    emas = [IterationTimeEMA(M, beta=cfg.ema_beta) for _ in range(M)]
+    monitor = algo.make_monitor(cfg, M, d=state.d) if algo.wants_monitor(cfg) else None
+    next_monitor = monitor.schedule_period if monitor else float("inf")
+
     heap = []
     for i in range(M):
         heapq.heappush(heap, (rng.exponential(0.005), i))
-    next_monitor = cfg.monitor_period
-    ps = cfg.ps_node
     ev = 0
     t = 0.0
     while ev < cfg.total_events:
         t, i = heapq.heappop(heap)
         ev += 1
 
-        if cfg.algorithm == "ps-async":
-            m = ps if i != ps else None
-            x, y = batch_for(i)
-            _, replicas[i], momenta[i] = _grad_step(
-                replicas[i], x, y, cfg.lr, momenta[i], cfg.momentum
-            )
-            if m is not None:
-                # push/pull with PS: PS absorbs then returns the average;
-                # the PS link carries all M-1 workers' traffic (congestion).
-                mean_p = _mix(replicas[ps], replicas[i], 0.5)
-                replicas[ps] = mean_p
-                replicas[i] = mean_p
-                congestion = 1.0 + cfg.ps_congestion * (M - 2)
-                dur = link_model.iteration_time(i, ps, now=t) * congestion
-            else:
-                dur = link_model.compute_time
-        else:
-            # gossip family: sample neighbor from P[i]
-            row = P[i] / P[i].sum()
-            m = int(rng.choice(M, p=row))
-            x, y = batch_for(i)
-            _, x_half, momenta[i] = _grad_step(
-                replicas[i], x, y, cfg.lr, momenta[i], cfg.momentum
-            )
-            if m != i and d[i, m]:
-                if cfg.algorithm == "netmax" and cfg.adaptive_weight:
-                    gamma = (d[i, m] + d[m, i]) / (2 * P[i, m])
-                    w = min(cfg.lr * rho * gamma, 0.9)
-                else:
-                    w = 0.5  # AD-PSGD fixed averaging
-                replicas[i] = _mix(x_half, replicas[m], w)
-                net = link_model.iteration_time(i, m, now=t)
-            else:
-                replicas[i] = x_half
-                net = 0.0
-            comp = link_model.compute_time
-            dur = (comp + net) if cfg.serial_compute else max(comp, net)
-            res.comm_time += net if cfg.serial_compute else max(0.0, net - comp)
-            res.compute_time += comp
-            emas[i].update(m, dur)
+        m = algo.select_peer(state, i, rng)
+        x_half = grad_step(i)
+        communicated = algo.apply_comm(state, cfg, replicas, i, m, x_half)
+        timing = algo.event_timing(state, cfg, link_model, i, m, communicated, t)
+        res.comm_time += timing.comm
+        res.compute_time += timing.compute
+        if algo.reports_ema and m is not None:
+            emas[i].update(m, timing.duration)
 
-        heapq.heappush(heap, (t + dur, i))
+        heapq.heappush(heap, (t + timing.duration, i))
 
-        # Network Monitor wakes every T_s
-        if use_monitor and t >= next_monitor:
+        # Network Monitor wakes every T_s (period owned by the Monitor)
+        if monitor is not None and t >= next_monitor:
             monitor.collect({j: emas[j].snapshot() for j in range(M)})
             pol = monitor.step()
-            P = pol.P.copy()
-            # guard: keep rows valid for sampling
-            bad = P.sum(axis=1) <= 0
-            P[bad] = np.where(d[bad] > 0, 1.0 / (M - 1), 0.0)
-            if cfg.algorithm == "netmax":
-                rho = pol.rho
+            algo.on_policy(state, pol)
             res.policy_updates += 1
-            next_monitor += cfg.monitor_period
+            next_monitor += monitor.schedule_period
 
         if ev % record_every == 0:
             eval_now(t, ev)

@@ -1,29 +1,33 @@
-"""NetMax training step + baseline algorithms, SPMD-ready.
+"""NetMax training step, SPMD-ready, driven by a pluggable ``Algorithm``.
 
 ``make_train_step`` builds the jit-able per-round function.  Parameters are
 *stacked* over NetMax workers (leading M dim, sharded over the worker mesh
 axes); one round = every worker performs one Alg.-2 iteration:
 
   1. per-worker grads               (vmapped value_and_grad)
-  2. local optimizer step           (x_half; momenta stay worker-local)
-  3. gossip pull of pre-round x     (gather | ppermute | compressed)
-  4. consensus mix                  ((1-w) x_half + w pulled,
-                                     w_i = alpha*rho*gamma_{i,m_i})
+  2. algorithm grad reduction       (identity | all-mean | group-mean)
+  3. local optimizer step           (x_half; momenta stay worker-local)
+  4. gossip pull of pre-round x     (gather | ppermute | compressed)
+  5. algorithm consensus mix        (the same leaf rule the event-driven
+                                     simulator applies — DESIGN.md §1)
 
-Baselines (same substrate, different step): Allreduce-SGD (psum grads),
-AD-PSGD (uniform gossip — NetMax with a uniform policy), Prague-style
-group partial-allreduce, PS-sync/async (see train/simulator.py for the
-async time semantics).
+The strategy (which peers, which weights, which reduction) comes from
+``repro.algos``: pass an ``Algorithm`` instance or a registry name.  The
+pre-protocol boolean flags on ``TrainStepConfig`` (``allreduce``,
+``prague_groups``) still work as a deprecation shim that maps them onto
+registry names; ``gossip_mode`` / ``use_gossip_mix_kernel`` / ``grad_clip``
+remain *execution* options orthogonal to the strategy.
 """
 
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 
+from repro.algos import Algorithm, get_algorithm
 from repro.configs.base import ArchConfig
 from repro.dist import gossip
 from repro.models import lm
@@ -33,17 +37,51 @@ from repro.optim import Optimizer
 @dataclass(frozen=True)
 class TrainStepConfig:
     gossip_mode: str = "gather"  # gather | ppermute | masked_psum | none
-    allreduce: bool = False  # Allreduce-SGD baseline (replaces gossip)
-    prague_groups: int = 0  # >0: Prague-style partial all-reduce groups
+    allreduce: bool = False  # DEPRECATED: use algo="allreduce"
+    prague_groups: int = 0  # DEPRECATED: use algo="prague"
     use_gossip_mix_kernel: bool = False  # Pallas fused mix (TPU)
     grad_clip: float = 0.0
+
+
+def resolve_algorithm(algo, step_cfg: TrainStepConfig) -> Algorithm:
+    """Map the caller's strategy spec (Algorithm | name | legacy flags) to an
+    Algorithm instance."""
+    if algo is not None and (step_cfg.allreduce or step_cfg.prague_groups > 1):
+        raise ValueError(
+            "conflicting strategy specs: an explicit algo was given alongside "
+            "legacy TrainStepConfig flags (allreduce/prague_groups); drop the "
+            "flags"
+        )
+    if isinstance(algo, Algorithm):
+        return algo
+    if isinstance(algo, str):
+        return get_algorithm(algo)
+    # Legacy: derive the strategy from TrainStepConfig booleans.
+    if step_cfg.allreduce:
+        warnings.warn(
+            "TrainStepConfig(allreduce=True) is deprecated; pass "
+            "algo='allreduce' to make_train_step instead",
+            DeprecationWarning, stacklevel=3,
+        )
+        return get_algorithm("allreduce")
+    if step_cfg.prague_groups > 1:
+        warnings.warn(
+            "TrainStepConfig(prague_groups=...) is deprecated; pass "
+            "algo='prague' to make_train_step instead",
+            DeprecationWarning, stacklevel=3,
+        )
+        return get_algorithm("prague", trainer_groups=step_cfg.prague_groups)
+    # Default gossip strategy: the mixing weights arrive per-round via
+    # gossip_in, so netmax covers the whole adaptive/uniform gossip family.
+    return get_algorithm("netmax")
 
 
 def make_train_step(
     cfg: ArchConfig,
     optimizer: Optimizer,
     M: int,
-    step_cfg: TrainStepConfig = TrainStepConfig(),
+    algo: Algorithm | str | TrainStepConfig | None = None,
+    step_cfg: TrainStepConfig | None = None,
     mesh=None,
     worker_axes: tuple = (),
     param_specs=None,
@@ -54,7 +92,23 @@ def make_train_step(
     params/opt_state leaves: (M, ...).  batch leaves: (M, B/M, ...).
     gossip_in: {'neighbors': (M,) i32, 'weights': (M,) f32, 'lr': f32[],
                 'perm': static via closure for ppermute mode}
+
+    ``algo``: an Algorithm instance or registry name.  Passing a
+    TrainStepConfig here (the pre-registry calling convention) still works:
+    its flags select the strategy via the deprecation shim.
     """
+    if isinstance(algo, TrainStepConfig):
+        assert step_cfg is None, "pass TrainStepConfig once, not twice"
+        step_cfg = algo
+        algo = None
+    if step_cfg is None:
+        step_cfg = TrainStepConfig()
+    algorithm = resolve_algorithm(algo, step_cfg)
+    if not algorithm.supports_trainer:
+        raise NotImplementedError(
+            f"algorithm {algorithm.name!r} has no lockstep SPMD form; "
+            "use the event-driven simulator (train/simulator.py) instead"
+        )
 
     def per_worker_loss(p, b):
         return lm.loss_fn(p, b, cfg)
@@ -72,32 +126,14 @@ def make_train_step(
             from repro.optim.optimizers import clip_by_global_norm
 
             grads, _ = clip_by_global_norm(grads, step_cfg.grad_clip)
-        if step_cfg.allreduce:
-            # Allreduce-SGD baseline: average grads across workers
-            # (mean over the stacked worker dim — lowers to an all-reduce
-            # along the worker mesh axes).
-            grads = jax.tree_util.tree_map(
-                lambda g: jnp.broadcast_to(g.mean(axis=0, keepdims=True), g.shape), grads
-            )
-        elif step_cfg.prague_groups > 1:
-            # Prague: random group partial-allreduce.  Groups are contiguous
-            # worker ranges re-randomized on the host per round via the
-            # neighbors permutation; here: mean within G groups.
-            G = step_cfg.prague_groups
-
-            def group_mean(g):
-                gg = g.reshape((G, M // G) + g.shape[1:])
-                gg = jnp.broadcast_to(gg.mean(axis=1, keepdims=True), gg.shape)
-                return gg.reshape(g.shape)
-
-            grads = jax.tree_util.tree_map(group_mean, grads)
+        # Strategy-owned grad reduction: identity for gossip, global mean
+        # for allreduce/ps-sync, group mean for prague.
+        grads = algorithm.transform_grads(grads, M)
         updates, opt_state = optimizer.update(grads, opt_state, params, lr)
         x_half = optimizer.apply(params, updates)
         return losses, x_half, opt_state
 
     def gossip_pull(params, neighbors, perm):
-        if step_cfg.gossip_mode == "none" or M == 1:
-            return params
         if step_cfg.gossip_mode == "gather":
             return gossip.pull_gather(params, neighbors)
         if step_cfg.gossip_mode == "masked_psum":
@@ -107,21 +143,31 @@ def make_train_step(
             return gossip.pull_ppermute(params, perm, mesh, worker_axes, specs=param_specs)
         raise ValueError(step_cfg.gossip_mode)
 
+    communicates = (
+        algorithm.communicates_in_trainer
+        and step_cfg.gossip_mode != "none"
+        and M > 1
+    )
+
     def train_step(params, opt_state, batch, gossip_in, *, perm=None):
         lr = gossip_in["lr"]
         losses, x_half, opt_state = local_step(params, opt_state, batch, lr)
-        if step_cfg.allreduce or step_cfg.prague_groups > 1 or step_cfg.gossip_mode == "none":
-            new_params = x_half
-        else:
+        if communicates:
             pulled = gossip_pull(params, gossip_in["neighbors"], perm)
-            if step_cfg.use_gossip_mix_kernel:
+            if step_cfg.use_gossip_mix_kernel and type(algorithm).delta_transform is Algorithm.delta_transform:
                 from repro.kernels import ops as kops
 
+                # Fused Pallas mix — only valid for the identity delta
+                # transform (the kernel hard-codes the linear mix).
                 new_params = kops.gossip_mix_tree(
                     x_half, pulled, gossip_in["weights"]
                 )
             else:
-                new_params = gossip.mix(x_half, pulled, gossip_in["weights"])
+                new_params = algorithm.mix_stacked(
+                    x_half, pulled, gossip_in["weights"]
+                )
+        else:
+            new_params = x_half
         metrics = {"loss": losses.mean(), "loss_per_worker": losses}
         return new_params, opt_state, metrics
 

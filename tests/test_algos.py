@@ -1,0 +1,249 @@
+"""Tests for the pluggable Algorithm registry (repro.algos).
+
+Pins the unified-API contract: registry round-trips, event-driven vs
+stacked-SPMD mixing parity for every gossip-family strategy, the
+TrainStepConfig deprecation shim, and the Monitor-period single source
+of truth.
+"""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.algos import Algorithm, get_algorithm, list_algorithms, register
+from repro.train.simulator import SimConfig
+
+EXPECTED = {
+    "netmax", "adpsgd", "adpsgd+mon", "allreduce", "prague",
+    "ps-sync", "ps-async", "netmax-topk",
+}
+
+
+# --------------------------------------------------------------------------
+# Registry smoke
+# --------------------------------------------------------------------------
+
+
+def test_all_legacy_names_plus_topk_registered():
+    assert EXPECTED <= set(list_algorithms())
+
+
+def test_get_algorithm_round_trips():
+    for name in list_algorithms():
+        algo = get_algorithm(name)
+        assert isinstance(algo, Algorithm)
+        assert algo.name == name
+        assert get_algorithm(algo.name).name == name
+
+
+def test_unknown_name_raises_with_listing():
+    with pytest.raises(KeyError, match="netmax"):
+        get_algorithm("definitely-not-registered")
+
+
+def test_register_decorator_adds_new_strategy():
+    @register("_test-only")
+    class TestOnly(Algorithm):
+        pass
+
+    try:
+        assert "_test-only" in list_algorithms()
+        assert get_algorithm("_test-only").name == "_test-only"
+    finally:
+        from repro.algos import base
+
+        del base._REGISTRY["_test-only"]
+
+
+# --------------------------------------------------------------------------
+# Event-driven vs stacked parity (the API's core promise)
+# --------------------------------------------------------------------------
+
+
+def _tiny_tree(rng, M):
+    return {
+        "w": jnp.asarray(rng.normal(size=(M, 6, 4)).astype(np.float32)),
+        "b": jnp.asarray(rng.normal(size=(M, 4)).astype(np.float32)),
+    }
+
+
+def _gossip_algos():
+    return [n for n in list_algorithms() if get_algorithm(n).family == "gossip"]
+
+
+@pytest.mark.parametrize("name", ["netmax", "adpsgd", "adpsgd+mon", "netmax-topk"])
+def test_gossip_parity_event_vs_stacked(name):
+    """Given the same neighbor draw and mixing weight, the per-replica mix
+    (event simulator path) and the stacked round (SPMD path) must produce
+    identical replica states."""
+    algo = get_algorithm(name)
+    M, alpha = 4, 0.1
+    rng = np.random.default_rng(0)
+    params = _tiny_tree(rng, M)
+    grads = _tiny_tree(rng, M)
+    neighbors = np.array([1, 2, 0, 3], dtype=np.int32)  # worker 3 self-selects
+    weights = np.array([0.3, 0.5, 0.25, 0.0], dtype=np.float32)
+
+    stacked = algo.stacked_round(
+        params, grads, jnp.asarray(neighbors), jnp.asarray(weights), alpha
+    )
+
+    # Event-driven path: per-replica trees, pre-round pulls, same draws.
+    replicas = [
+        jax.tree_util.tree_map(lambda l: l[i], params) for i in range(M)
+    ]
+    gtrees = [jax.tree_util.tree_map(lambda l: l[i], grads) for i in range(M)]
+    pre_round = list(replicas)
+    for i in range(M):
+        x_half = jax.tree_util.tree_map(
+            lambda x, g: x - alpha * g, replicas[i], gtrees[i]
+        )
+        m = int(neighbors[i])
+        if m != i and weights[i] > 0:
+            replicas[i] = algo.mix(x_half, pre_round[m], float(weights[i]))
+        else:
+            replicas[i] = x_half
+
+    for i in range(M):
+        for k in ("w", "b"):
+            np.testing.assert_allclose(
+                np.asarray(replicas[i][k]),
+                np.asarray(stacked[k][i]),
+                rtol=1e-5, atol=1e-6,
+                err_msg=f"{name}: worker {i} leaf {k}",
+            )
+
+
+def test_parity_covers_every_registered_gossip_algorithm():
+    """The parametrized parity test above must not silently miss a newly
+    registered gossip strategy."""
+    assert set(_gossip_algos()) == {"netmax", "adpsgd", "adpsgd+mon", "netmax-topk"}
+
+
+def test_identity_delta_matches_legacy_consensus_stacked_round():
+    """Base stacked_round == consensus.stacked_round for identity transforms."""
+    from repro.core import consensus
+
+    algo = get_algorithm("adpsgd")
+    M, alpha = 4, 0.05
+    rng = np.random.default_rng(1)
+    params = _tiny_tree(rng, M)
+    grads = _tiny_tree(rng, M)
+    nb = jnp.asarray(np.array([2, 0, 3, 1], dtype=np.int32))
+    w = jnp.asarray(np.array([0.5, 0.5, 0.0, 0.2], dtype=np.float32))
+    a = algo.stacked_round(params, grads, nb, w, alpha)
+    b = consensus.stacked_round(params, grads, nb, w, alpha)
+    for k in ("w", "b"):
+        np.testing.assert_allclose(np.asarray(a[k]), np.asarray(b[k]),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_topk_delta_transform_sparsifies():
+    algo = get_algorithm("netmax-topk", ratio=0.1)
+    delta = jnp.asarray(np.random.default_rng(2).normal(size=(10, 10)).astype(np.float32))
+    out = algo.delta_transform(delta)
+    assert int((out != 0).sum()) == 10  # 10% of 100 entries kept
+    kept = np.abs(np.asarray(out))[np.asarray(out) != 0].min()
+    dropped = np.abs(np.asarray(delta))[np.asarray(out) == 0].max()
+    assert kept >= dropped  # largest-magnitude entries survive
+    assert algo.wire_ratio() == pytest.approx(0.2)
+
+
+# --------------------------------------------------------------------------
+# Simulator integration of the new strategy
+# --------------------------------------------------------------------------
+
+
+def test_netmax_topk_learns_and_spends_less_comm_time():
+    from repro.core.nettime import LinkTimeModel, Topology
+    from repro.data.partition import uniform_partition
+    from repro.data.synthetic import train_eval_split
+    from repro.train.simulator import simulate
+
+    M = 8
+    topo = Topology(n_workers=M, workers_per_host=4, hosts_per_pod=1)
+    x, y, ex, ey = train_eval_split(1500, 400, 32, 10, seed=0)
+    parts = uniform_partition(len(y), M, seed=0)
+
+    def run(algo):
+        link = LinkTimeModel(topo, jitter=0.02, seed=5, slow_interval=120.0)
+        cfg = SimConfig(algorithm=algo, n_workers=M, total_events=900, lr=0.05,
+                        monitor_period=20.0, seed=0)
+        return simulate(cfg, link, x, y, parts, ex, ey, record_every=300)
+
+    sparse = run("netmax-topk")
+    dense = run("netmax")
+    assert sparse.losses[-1] < sparse.losses[0] * 0.9
+    assert np.isfinite(sparse.losses[-1])
+    assert sparse.comm_time < dense.comm_time  # sparsified pulls are cheaper
+
+
+# --------------------------------------------------------------------------
+# Monitor period: single source of truth
+# --------------------------------------------------------------------------
+
+
+def test_monitor_period_flows_from_config():
+    algo = get_algorithm("netmax")
+    cfg = SimConfig(monitor_period=7.5)
+    mon = algo.make_monitor(cfg, 4)
+    assert mon.schedule_period == pytest.approx(7.5)
+
+
+def test_monitor_period_defaults_to_monitor_own_default():
+    algo = get_algorithm("netmax")
+    cfg = SimConfig()  # monitor_period=None -> Monitor's paper default
+    mon = algo.make_monitor(cfg, 4)
+    assert mon.schedule_period == pytest.approx(120.0)
+
+
+# --------------------------------------------------------------------------
+# Trainer shim
+# --------------------------------------------------------------------------
+
+
+def test_resolve_algorithm_shim_maps_legacy_flags():
+    from repro.train.trainer import TrainStepConfig, resolve_algorithm
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # no warning for the modern path
+        assert resolve_algorithm("prague", TrainStepConfig()).name == "prague"
+        assert resolve_algorithm(get_algorithm("adpsgd"), TrainStepConfig()).name == "adpsgd"
+
+    with pytest.deprecated_call():
+        assert resolve_algorithm(None, TrainStepConfig(allreduce=True)).name == "allreduce"
+    with pytest.deprecated_call():
+        algo = resolve_algorithm(None, TrainStepConfig(prague_groups=2))
+    assert algo.name == "prague" and algo.trainer_groups == 2
+    assert resolve_algorithm(None, TrainStepConfig()).name == "netmax"
+
+
+def test_make_train_step_accepts_algorithm_by_name():
+    from dataclasses import replace
+
+    from repro.configs.base import get_arch
+    from repro.optim import sgd
+    from repro.train.trainer import TrainStepConfig, init_stacked, make_train_step
+
+    cfg = replace(get_arch("tinyllama-1.1b").reduced(), vocab_size=64,
+                  n_layers=1, d_model=32)
+    M, lr = 4, 0.05
+    opt = sgd(momentum=0.9)
+    step = jax.jit(make_train_step(cfg, opt, M, "allreduce"))
+    params, opt_state = init_stacked(cfg, opt, M, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, 64, size=(M, 2, 16)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, 64, size=(M, 2, 16)), jnp.int32),
+    }
+    gi = {"neighbors": jnp.zeros((M,), jnp.int32),
+          "weights": jnp.zeros((M,), jnp.float32), "lr": jnp.float32(lr)}
+    params, opt_state, m = step(params, opt_state, batch, gi)
+    # Allreduce keeps replicas identical.
+    for l in jax.tree_util.tree_leaves(params):
+        lf = np.asarray(l, np.float32)
+        np.testing.assert_allclose(lf, np.broadcast_to(lf[:1], lf.shape), atol=1e-5)
+    assert np.isfinite(float(m["loss"]))

@@ -13,8 +13,7 @@ networks (hypothesis):
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_stub import given, settings, st
 
 from repro.core import consensus, policy, theory
 
