@@ -95,6 +95,78 @@ def bench_algorithms(events=1200):
     return rows
 
 
+def bench_simulator_engines(sizes=(8, 32, 64, 128), events=2000,
+                            out_path=None):
+    """Reference vs batched engine throughput on the multi-cluster WAN
+    topology (paper §V wide-area setting); writes BENCH_simulator.json.
+
+    Each engine gets one full warm-up run (XLA compiles excluded — both
+    engines keep per-process jit caches) before the timed run.  The batched
+    engine must come out >= 5x faster at M=64 (ISSUE 2 acceptance).
+    """
+    import time as _time
+
+    from repro.core.nettime import LinkTimeModel, Topology
+    from repro.data.partition import uniform_partition
+    from repro.data.synthetic import train_eval_split
+    from repro.train.simulator import SimConfig, simulate
+
+    x, y, ex, ey = train_eval_split(4000, 800, 32, 10, seed=0)
+    results = {}
+    for M in sizes:
+        topo = Topology.multi_cluster(M)
+        parts = uniform_partition(len(y), M, seed=0)
+
+        def timed(engine):
+            def once():
+                link = LinkTimeModel(topo, jitter=0.02, seed=5)
+                # Small per-worker batch = the regime the paper's async
+                # gossip targets (and where engine overhead, not GEMM time,
+                # dominates — the thing this suite compares).
+                cfg = SimConfig(algorithm="netmax", n_workers=M,
+                                total_events=events, lr=0.05, batch_size=16,
+                                monitor_period=20.0, seed=0, engine=engine)
+                t0 = _time.time()
+                res = simulate(cfg, link, x, y, parts, ex, ey,
+                               record_every=events)
+                return res, _time.time() - t0
+
+            once()  # warm-up: compile every cohort bucket / the event step
+            res, dt = once()
+            return dict(
+                wall_s=round(dt, 4),
+                events_per_s=round(events / dt, 1),
+                cohorts=res.cohorts,
+                virtual_time_s=round(res.times[-1], 2),
+                final_loss=round(res.losses[-1], 4),
+            )
+
+        row = {e: timed(e) for e in ("reference", "batched")}
+        row["speedup"] = round(
+            row["reference"]["wall_s"] / row["batched"]["wall_s"], 2
+        )
+        results[f"M={M}"] = row
+        print(f"simengine/M={M},{row['batched']['wall_s'] * 1e6 / events:.0f},"
+              f"speedup={row['speedup']}x_cohorts={row['batched']['cohorts']}_"
+              f"ref_evps={row['reference']['events_per_s']:.0f}_"
+              f"bat_evps={row['batched']['events_per_s']:.0f}")
+
+    out = {
+        "suite": "simulator-engines",
+        "algorithm": "netmax",
+        "topology": "multi_cluster(workers_per_host=4, hosts_per_pod=2, "
+                    "pods_per_cluster=2)",
+        "total_events": events,
+        "batch_size": 16,
+        "results": results,
+    }
+    path = Path(out_path) if out_path else ROOT / "BENCH_simulator.json"
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote {path}")
+    return results
+
+
 def bench_roofline_summary():
     """Summarize dry-run artifacts (if present) into roofline terms."""
     from repro.analysis.roofline import from_record
@@ -127,7 +199,8 @@ def bench_roofline_summary():
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--suite", default="all",
-                    choices=["all", "paper", "kernels", "roofline", "quick", "algos"])
+                    choices=["all", "paper", "kernels", "roofline", "quick",
+                             "algos", "simulator"])
     ap.add_argument("--events", type=int, default=4000)
     args = ap.parse_args()
 
@@ -140,6 +213,8 @@ def main() -> None:
         out["algorithms"] = bench_algorithms(
             events=min(args.events, 1200) if args.suite == "quick" else args.events
         )
+    if args.suite in ("all", "simulator"):
+        out["simulator_engines"] = bench_simulator_engines()
     if args.suite in ("all", "paper"):
         out["policy_generation"] = pt.bench_policy_generation()
         out["epoch_time_hetero"] = pt.bench_epoch_time(hetero=True)

@@ -50,6 +50,9 @@ def main():
     algos = list_algorithms()
     print(f"\nTraining the same model under all {len(algos)} registered "
           "protocols (virtual time):")
+    print("  (engine='auto': gossip families run on the batched cohort "
+          "engine,\n   synchronous/PS families on the reference loop — "
+          "DESIGN.md §11)")
     results = {}
     for algo in algos:
         link = LinkTimeModel(topo, jitter=0.02, seed=5, slow_interval=120.0)
@@ -57,9 +60,10 @@ def main():
                         lr=0.01, monitor_period=10.0, seed=0)
         r = simulate(cfg, link, x, y, parts, ex, ey, record_every=200)
         results[algo] = r
+        eng = f"{r.engine[:3]}/{r.cohorts}c" if r.cohorts else r.engine[:3]
         print(f"  {algo:12s} final_loss={r.losses[-1]:.4f} "
               f"acc={r.accs[-1]:.3f}  virtual_time={r.times[-1]:7.1f}s "
-              f"policy_updates={r.policy_updates}")
+              f"policy_updates={r.policy_updates} [{eng}]")
 
     target = max(r.losses[-1] for r in results.values()) * 1.3
     t_nm = results["netmax"].time_to_loss(target)

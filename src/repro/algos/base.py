@@ -138,6 +138,29 @@ class Algorithm(abc.ABC):
     synchronous: bool = False  # round-based barrier loop vs event-driven
     reports_ema: bool = True  # workers feed IterationTimeEMA (Alg. 2 l.19-22)
 
+    @property
+    def supports_batched(self) -> bool:
+        """Whether the batched cohort engine (train/engine.py) can execute
+        this strategy: asynchronous gossip whose ``apply_comm`` is the
+        default pull+mix (so a cohort of causally-independent events can be
+        replayed as one stacked vmapped call).  Strategies with side effects
+        on the peer replica (ps-async) or round barriers (collective,
+        ps-sync) must override/stay on the reference engine."""
+        return self.family == "gossip" and not self.synchronous
+
+    def cache_token(self) -> tuple:
+        """Hashable identity of this strategy's *traced* behavior
+        (``delta_transform`` / mixing math).  The batched engine keys its
+        compiled cohort-step cache on this, so two strategies with the same
+        token share one XLA executable — in particular every identity-delta
+        gossip algorithm (netmax / adpsgd / adpsgd+mon differ only in
+        host-side peer/weight policy) compiles exactly once per process.
+        Override when the constructor takes parameters that change traced
+        computation (e.g. top-k ratio)."""
+        if type(self).delta_transform is Algorithm.delta_transform:
+            return ("identity-delta",)
+        return (type(self).__module__, type(self).__qualname__)
+
     def __init__(self):
         self._mix_jit = None
         self._mix_stacked_jit = None
@@ -205,21 +228,28 @@ class Algorithm(abc.ABC):
             self._mix_jit = jax.jit(fn)
         return self._mix_jit(x_half, pulled, jnp.float32(w))
 
+    def mix_stacked_tree(self, x_half, pulled, weights):
+        """Un-jitted stacked consensus mix — THE leaf rule of this strategy.
+
+        Leaves carry a leading worker/cohort axis; ``weights`` is (M,) f32.
+        This single function is traced by three consumers: the jitted
+        ``mix_stacked`` wrapper (SPMD trainer), ``stacked_round`` (parity
+        reference), and the batched cohort engine's fused step
+        (train/engine.py) — keeping them bit-for-bit consistent.
+        """
+
+        def leaf(h, p):
+            # Cast weights into the param dtype so bf16 replicas stay
+            # bf16 (matches dist/gossip.mix and optimizer.apply).
+            w = weights.reshape((-1,) + (1,) * (h.ndim - 1)).astype(h.dtype)
+            return h + w * jax.vmap(self.delta_transform)(p - h)
+
+        return jax.tree_util.tree_map(leaf, x_half, pulled)
+
     def mix_stacked(self, x_half, pulled, weights):
-        """Stacked consensus mix: leaves carry a leading worker axis; the
-        leaf rule is the same ``delta_transform`` as the per-replica path."""
+        """Jitted ``mix_stacked_tree`` (the SPMD trainer's entry point)."""
         if self._mix_stacked_jit is None:
-
-            def fn(h_tree, p_tree, weights):
-                def leaf(h, p):
-                    # Cast weights into the param dtype so bf16 replicas stay
-                    # bf16 (matches dist/gossip.mix and optimizer.apply).
-                    w = weights.reshape((-1,) + (1,) * (h.ndim - 1)).astype(h.dtype)
-                    return h + w * jax.vmap(self.delta_transform)(p - h)
-
-                return jax.tree_util.tree_map(leaf, h_tree, p_tree)
-
-            self._mix_stacked_jit = jax.jit(fn)
+            self._mix_stacked_jit = jax.jit(self.mix_stacked_tree)
         return self._mix_stacked_jit(x_half, pulled, weights)
 
     def stacked_round(self, params, grads, neighbors, weights, alpha):
@@ -233,15 +263,14 @@ class Algorithm(abc.ABC):
         if self._stacked_round_jit is None:
 
             def fn(params, grads, neighbors, weights, alpha):
-                def leaf(x, g):
-                    pulled = jnp.take(x, neighbors, axis=0)
-                    x_half = x - jnp.asarray(alpha, x.dtype) * g
-                    w = weights.reshape((-1,) + (1,) * (x.ndim - 1)).astype(x.dtype)
-                    return x_half + w * jax.vmap(self.delta_transform)(
-                        pulled - x_half
-                    )
-
-                return jax.tree_util.tree_map(leaf, params, grads)
+                pulled = jax.tree_util.tree_map(
+                    lambda x: jnp.take(x, neighbors, axis=0), params
+                )
+                x_half = jax.tree_util.tree_map(
+                    lambda x, g: x - jnp.asarray(alpha, x.dtype) * g,
+                    params, grads,
+                )
+                return self.mix_stacked_tree(x_half, pulled, weights)
 
             self._stacked_round_jit = jax.jit(fn)
         return self._stacked_round_jit(params, grads, neighbors, weights, alpha)
@@ -267,13 +296,19 @@ class Algorithm(abc.ABC):
         return True
 
     # -- event application (async families) ---------------------------------
+    def would_communicate(self, state: AlgoState, i: int, m: int | None) -> bool:
+        """Host-side predicate: does worker i's event with peer m cross the
+        network?  Must agree with ``apply_comm``'s return value — the batched
+        engine uses it to price events *before* executing a cohort."""
+        return m is not None and m != i and bool(state.d[i, m])
+
     def apply_comm(self, state: AlgoState, cfg, replicas, i, m, x_half):
         """Fold worker i's communication into the replica list.
 
         Default (gossip): replicas[i] <- mix(x_half, pre-event replicas[m]).
         Returns True when a transfer actually crossed the network.
         """
-        if m is not None and m != i and state.d[i, m]:
+        if self.would_communicate(state, i, m):
             w = self.mix_weight(state, cfg, i, m)
             replicas[i] = self.mix(x_half, replicas[m], w)
             return True

@@ -21,6 +21,9 @@ from repro.algos.base import (
 
 
 class SynchronousAlgorithm(Algorithm):
+    # Round-barrier semantics: executed by the simulator's synchronous loop
+    # (supports_batched is False — the cohort engine is async-only; rounds
+    # are already batch-executed via reduce_groups).
     family = "collective"
     synchronous = True
     reports_ema = False

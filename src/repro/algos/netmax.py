@@ -12,7 +12,12 @@ from repro.algos.base import Algorithm, AlgoState, register
 
 
 class GossipAlgorithm(Algorithm):
-    """Shared event-driven gossip behavior: neighbor ~ P[i], pull + mix."""
+    """Shared event-driven gossip behavior: neighbor ~ P[i], pull + mix.
+
+    The whole family is pull-only (``apply_comm`` touches replicas[i] alone),
+    so it inherits ``supports_batched = True`` and runs on the vectorized
+    cohort engine (train/engine.py) as well as the reference event loop.
+    """
 
     family = "gossip"
     synchronous = False

@@ -30,6 +30,11 @@ class NetMaxTopK(NetMax):
         assert 0.0 < ratio <= 1.0
         self.ratio = float(ratio)
 
+    def cache_token(self) -> tuple:
+        # ratio changes the traced delta_transform (static k), so instances
+        # with different ratios must not share a compiled cohort step.
+        return super().cache_token() + (self.ratio,)
+
     def delta_transform(self, delta):
         flat = delta.reshape(-1)
         k = max(1, int(self.ratio * flat.size))

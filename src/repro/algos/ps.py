@@ -61,6 +61,16 @@ class PSAsync(Algorithm):
     def supports_trainer(self) -> bool:
         return False  # per-worker async push/pull has no lockstep SPMD form
 
+    @property
+    def supports_batched(self) -> bool:
+        # apply_comm mutates the PS replica too (push), so events sharing
+        # the PS are never causally independent: batching would break the
+        # running-average semantics.  Reference engine only.
+        return False
+
+    def would_communicate(self, state: AlgoState, i, m) -> bool:
+        return m is not None  # every non-PS worker talks to the PS
+
     def select_peer(self, state: AlgoState, i: int, rng):
         ps = state.extras.get("ps_node", 0)
         return ps if i != ps else None

@@ -4,8 +4,15 @@ Models the per-iteration time t_{i,m} = max(C_i, N_{i,m}) of worker i pulling
 from worker m: local compute overlapped with the network transfer (the paper
 parallelizes them, §II-B).  Topology tiers map the paper's "intra-machine vs
 inter-machine vs WAN" onto pod hardware: intra-host ICI, intra-pod ICI,
-inter-pod DCN.  Dynamic perturbations reproduce the paper's evaluation setup
-("randomly slow down one link by 2x-100x, change the slow link every 5 min").
+inter-pod DCN, and — for the paper-§V wide-area scenarios at M=64+ — an
+inter-cluster WAN tier (``Topology.pods_per_cluster``).  Dynamic
+perturbations reproduce the paper's evaluation setup ("randomly slow down
+one link by 2x-100x, change the slow link every 5 min").
+
+Tier invariants (pinned by tests/test_properties.py): per-tier base times
+are ordered intra_host <= intra_pod <= inter_pod <= inter_cluster, every
+iteration time is >= the compute time, and the dynamic slow-link factor
+stays within ``slowdown_range``.
 """
 
 from __future__ import annotations
@@ -15,13 +22,25 @@ from dataclasses import dataclass, field
 import numpy as np
 
 
+#: Topology tiers from nearest to farthest; LinkTimeModel.base_times must be
+#: non-decreasing along this order.
+TIERS = ("intra_host", "intra_pod", "inter_pod", "inter_cluster")
+
+
 @dataclass
 class Topology:
-    """Placement of M workers onto a pod/host hierarchy."""
+    """Placement of M workers onto a cluster/pod/host hierarchy.
+
+    ``pods_per_cluster=None`` (default) keeps the legacy single-cluster
+    three-tier model; setting it partitions pods into WAN-separated clusters
+    whose cross-links resolve to the ``inter_cluster`` tier (paper §V
+    wide-area setting).
+    """
 
     n_workers: int
     workers_per_host: int = 4
     hosts_per_pod: int = 2
+    pods_per_cluster: int | None = None  # None = one cluster, no WAN tier
 
     def host_of(self, i: int) -> int:
         return i // self.workers_per_host
@@ -29,12 +48,38 @@ class Topology:
     def pod_of(self, i: int) -> int:
         return self.host_of(i) // self.hosts_per_pod
 
+    def cluster_of(self, i: int) -> int:
+        if not self.pods_per_cluster:
+            return 0
+        return self.pod_of(i) // self.pods_per_cluster
+
     def tier(self, i: int, m: int) -> str:
         if self.host_of(i) == self.host_of(m):
             return "intra_host"
         if self.pod_of(i) == self.pod_of(m):
             return "intra_pod"
-        return "inter_pod"
+        if self.cluster_of(i) == self.cluster_of(m):
+            return "inter_pod"
+        return "inter_cluster"
+
+    @property
+    def n_clusters(self) -> int:
+        return self.cluster_of(self.n_workers - 1) + 1
+
+    @classmethod
+    def multi_cluster(
+        cls,
+        n_workers: int,
+        workers_per_host: int = 4,
+        hosts_per_pod: int = 2,
+        pods_per_cluster: int = 2,
+    ) -> "Topology":
+        """Paper-§V-style wide-area placement: clusters of
+        ``workers_per_host * hosts_per_pod * pods_per_cluster`` workers
+        joined by WAN links."""
+        return cls(n_workers, workers_per_host=workers_per_host,
+                   hosts_per_pod=hosts_per_pod,
+                   pods_per_cluster=pods_per_cluster)
 
 
 @dataclass
@@ -53,6 +98,9 @@ class LinkTimeModel:
             "intra_host": 0.010,
             "intra_pod": 0.040,
             "inter_pod": 0.120,
+            # WAN links between clusters (paper §V wide-area): another ~4x
+            # over the DCN tier, keeping the Fig.-3-style tier ratios.
+            "inter_cluster": 0.480,
         }
     )
     jitter: float = 0.05  # lognormal-ish multiplicative noise

@@ -10,6 +10,13 @@ fused kernel streams x, u, pulled through VMEM once:
 which at 819 GB/s HBM is the dominant non-matmul cost of a NetMax round at
 small per-worker batch.  Block layout: flat 1-D tiles of 64k elements (f32)
 — bandwidth-bound, no MXU alignment needed, lane-dim 128-aligned.
+
+Two entry points share the kernel body:
+
+* ``gossip_mix``       — one replica, scalar w (the trainer's per-slice path)
+* ``gossip_mix_rows``  — a stacked (R, ...) block with per-row weights, one
+  grid row per worker/cohort member (the batched engine / stacked trainer
+  path; w lives in SMEM indexed by the row program id).
 """
 
 from __future__ import annotations
@@ -62,3 +69,51 @@ def gossip_mix(x, u, pulled, w, *, interpret: bool = False, block: int = _BLOCK)
         interpret=interpret,
     )(xf, uf, pf, wv)
     return out[:n].reshape(shape)
+
+
+def _mix_rows_kernel(x_ref, u_ref, p_ref, w_ref, o_ref):
+    w = w_ref[0]  # this grid row's weight (SMEM)
+    x_half = x_ref[...].astype(jnp.float32) + u_ref[...].astype(jnp.float32)
+    out = (1.0 - w) * x_half + w * p_ref[...].astype(jnp.float32)
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block"))
+def gossip_mix_rows(x, u, pulled, w, *, interpret: bool = False, block: int = _BLOCK):
+    """Per-row fused mix: out[r] = (1-w[r])*(x[r]+u[r]) + w[r]*pulled[r].
+
+    x/u/pulled: (R, ...) same-shape stacked arrays (any dtype); w: (R,) f32.
+    Grid is (rows, tiles): each program streams one 1-D tile of one row
+    through VMEM with that row's scalar weight prefetched into SMEM, so the
+    batched engine mixes a whole cohort in a single kernel launch instead of
+    R separate ``gossip_mix`` calls.
+    """
+    shape, dtype = x.shape, x.dtype
+    R = shape[0]
+    n = x.size // max(R, 1)
+    # Shrink the tile for small rows (lane-dim 128-aligned) so padding never
+    # dominates; n is static under jit, so this is trace-time arithmetic.
+    block = min(block, max(128, ((n + 127) // 128) * 128))
+    xf, uf, pf = (a.reshape(R, -1) for a in (x, u, pulled))
+    pad = (-n) % block
+    if pad:
+        xf = jnp.pad(xf, ((0, 0), (0, pad)))
+        uf = jnp.pad(uf, ((0, 0), (0, pad)))
+        pf = jnp.pad(pf, ((0, 0), (0, pad)))
+    nb = (n + pad) // block
+    wv = jnp.asarray(w, jnp.float32).reshape(R)
+
+    out = pl.pallas_call(
+        _mix_rows_kernel,
+        grid=(R, nb),
+        in_specs=[
+            pl.BlockSpec((1, block), lambda r, b: (r, b)),
+            pl.BlockSpec((1, block), lambda r, b: (r, b)),
+            pl.BlockSpec((1, block), lambda r, b: (r, b)),
+            pl.BlockSpec((1,), lambda r, b: (r,), memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((1, block), lambda r, b: (r, b)),
+        out_shape=jax.ShapeDtypeStruct((R, n + pad), dtype),
+        interpret=interpret,
+    )(xf, uf, pf, wv)
+    return out[:, :n].reshape(shape)

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.gossip_mix import gossip_mix
+from repro.kernels.gossip_mix import gossip_mix, gossip_mix_rows
 from repro.kernels.rwkv_scan import rwkv_scan
 
 
@@ -51,17 +51,23 @@ def mix(x, u, pulled, w, *, use_pallas=None):
     return ref.reference_gossip_mix(x, u, pulled, w)
 
 
+def mix_rows(x, u, pulled, w, *, use_pallas=None):
+    """Stacked mix with per-row weights (leading worker/cohort axis)."""
+    mode = _default_mode() if use_pallas is None else use_pallas
+    if mode == "interpret":
+        return gossip_mix_rows(x, u, pulled, w, interpret=True)
+    if mode:
+        return gossip_mix_rows(x, u, pulled, w)
+    return ref.reference_gossip_mix_rows(x, u, pulled, w)
+
+
 def gossip_mix_tree(x_half, pulled, weights, *, use_pallas=None):
-    """Tree-level fused mix used by the trainer (x_half already includes the
-    optimizer update, so u = 0): out = (1-w_i) x_half + w_i pulled."""
-    zeros = jax.tree_util.tree_map(jnp.zeros_like, x_half)
+    """Tree-level fused mix used by the trainer and the batched simulator
+    engine (x_half already includes the optimizer update, so u = 0):
+    out = (1-w_i) x_half + w_i pulled, one ``mix_rows`` launch per leaf
+    instead of the former per-worker-slice Python loop."""
 
-    def one(h, z, p):
-        w = weights.reshape((-1,) + (1,) * (h.ndim - 1))
-        out = []
-        # per-worker scalar w -> apply kernel per worker slice
-        for i in range(h.shape[0]):
-            out.append(mix(h[i], z[i], p[i], weights[i], use_pallas=use_pallas))
-        return jnp.stack(out)
+    def one(h, p):
+        return mix_rows(h, jnp.zeros_like(h), p, weights, use_pallas=use_pallas)
 
-    return jax.tree_util.tree_map(one, x_half, zeros, pulled)
+    return jax.tree_util.tree_map(one, x_half, pulled)

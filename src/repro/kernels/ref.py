@@ -48,3 +48,14 @@ def reference_gossip_mix(x, u, pulled, w) -> jnp.ndarray:
     xf = x.astype(jnp.float32) + u.astype(jnp.float32)
     out = (1.0 - w) * xf + w * pulled.astype(jnp.float32)
     return out.astype(x.dtype)
+
+
+def reference_gossip_mix_rows(x, u, pulled, w) -> jnp.ndarray:
+    """Per-row mix: out[r] = (1-w[r])*(x[r]+u[r]) + w[r]*pulled[r].
+
+    x/u/pulled: (R, ...); w: (R,) broadcast over the trailing dims.
+    """
+    wf = jnp.asarray(w, jnp.float32).reshape((-1,) + (1,) * (x.ndim - 1))
+    xf = x.astype(jnp.float32) + u.astype(jnp.float32)
+    out = (1.0 - wf) * xf + wf * pulled.astype(jnp.float32)
+    return out.astype(x.dtype)

@@ -1,0 +1,315 @@
+"""Batched cohort engine for the event-driven simulator (DESIGN.md §11).
+
+The reference engine (train/simulator.py) executes one worker event per
+Python iteration — two jitted dispatches over a per-replica pytree each —
+which tops out around 8–16 workers.  This engine keeps the *exact same
+host-side event machinery* (heap order, rng draw order, LinkTimeModel
+draws, EMA updates, Monitor schedule) but stacks all M replicas/momenta
+into leading-M pytrees and executes *cohorts* of causally-independent
+events in one donated, jitted, vmapped call.
+
+Scheduling works in two layers:
+
+* **Windows** — events are *drawn* strictly in heap-pop order (peer
+  selection, batch indices, link-time jitter, EMA updates), so every host
+  rng consumes bits in exactly the reference order.  A window extends until
+  the next *boundary*: a Monitor wake (the policy refresh changes
+  subsequent peer draws), a ``record_every`` evaluation (which must observe
+  the state after exactly that many events), or the event cap.
+* **Cohorts** — each window is level-scheduled into causally-independent
+  event sets.  One fused dispatch gathers every pull from *pre-cohort*
+  replica rows, computes, then scatters all actor rows, so executing a
+  level against pre-cohort state must be indistinguishable from the
+  reference's strictly-sequential execution.  An event's level is one plus
+  the maximum over its hazards, all expressed on replica rows (an event
+  *writes* its actor's row and *reads* its actor + peer rows):
+
+  1. write-after-write / read-after-write on the actor row — a worker's
+     next event both rewrites and grad-reads the row its previous event
+     wrote, so per-worker order is strict;
+  2. read-after-write on the peer row — the reference serves a pull the
+     *post*-update value of any peer event that already ran, so a pull
+     must land in a strictly later level than its peer row's last write;
+  3. write-after-read on the actor row — an earlier-popped pull of this
+     row must not see this event's write, so the write's level is at
+     least the reader's (the *same* level is fine: gathers happen before
+     the scatter).
+
+The two engines therefore produce identical `times`/`events`/`comm_time`
+and near-identical losses (tests/test_engines.py pins both).
+
+Cohorts are padded to ~1.5x-stepped size buckets (≤ M) so only O(log M)
+XLA programs are compiled; pad rows use distinct idle workers with a
+validity mask so the scatter is conflict-free.  The mixing math inside the fused
+step is ``Algorithm.mix_stacked_tree`` — the same leaf rule the SPMD
+trainer jits — or, for identity-delta strategies with
+``SimConfig.use_mix_kernel``, the fused ``kernels/ops.mix_rows`` path
+(Pallas ``gossip_mix_rows`` on TPU).
+"""
+
+from __future__ import annotations
+
+import functools
+import heapq
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.algos.base import Algorithm
+from repro.core.monitor import IterationTimeEMA
+from repro.train import simulator as _sim
+
+tree_map = jax.tree_util.tree_map
+
+# Compiled cohort steps, keyed by (Algorithm.cache_token(), lr, momentum,
+# use_mix_kernel).  Reused across simulate() calls so repeated runs (tests,
+# benchmarks) don't re-trace identical programs.
+_STEP_CACHE: dict = {}
+
+
+def _bucket(n: int, cap: int) -> int:
+    """Smallest ~1.5x-stepped bucket >= n, capped at M (pad rows must be
+    distinct).  Finer than powers of two: the fused step is compute-bound,
+    so padded rows are wasted FLOPs, while each extra bucket only costs one
+    more (small) XLA program."""
+    b = 1
+    while b < n:
+        b = b * 2 if b < 4 else (b * 3 + 1) // 2
+    return min(b, cap)
+
+
+def _make_cohort_step(algo: Algorithm, lr: float, mu: float, use_mix_kernel: bool):
+    """Build the donated, jitted fused step for one strategy.
+
+    Signature: (R, Mom, dx, dy, ints, w) -> (R, Mom) where R/Mom leaves are
+    (M, ...) stacked replicas/momenta, dx/dy the device-resident training
+    set, and the per-cohort operands cross the host boundary as just two
+    arrays: ``ints`` (K, 3+B) i32 packing [actor row, peer row, valid,
+    batch indices...] and ``w`` (K,) f32 mix weights (0 ⇒ no
+    communication).  valid=0 marks padding: the row is written back
+    unchanged.
+    """
+    vgrad = jax.vmap(jax.value_and_grad(_sim.ce_loss))
+    identity_delta = type(algo).delta_transform is Algorithm.delta_transform
+
+    def mix(x_half, pulled, w):
+        if use_mix_kernel and identity_delta:
+            from repro.kernels import ops as kops
+
+            return kops.gossip_mix_tree(x_half, pulled, w)
+        return algo.mix_stacked_tree(x_half, pulled, w)
+
+    @functools.partial(jax.jit, donate_argnums=(0, 1))
+    def cohort_step(R, Mom, dx, dy, ints, w):
+        idx, nb, valid = ints[:, 0], ints[:, 1], ints[:, 2] > 0
+        xb, yb = dx[ints[:, 3:]], dy[ints[:, 3:]]
+        h = tree_map(lambda l: l[idx], R)
+        pulled = tree_map(lambda l: l[nb], R)  # pre-cohort peer rows
+        mom = tree_map(lambda l: l[idx], Mom)
+        _, grads = vgrad(h, xb, yb)
+        new_m = tree_map(lambda m, g: mu * m + g, mom, grads)
+        x_half = tree_map(lambda p, m: p - lr * m, h, new_m)
+        mixed = mix(x_half, pulled, w)
+
+        def keep_valid(new, old):
+            v = valid.reshape((-1,) + (1,) * (new.ndim - 1))
+            return jnp.where(v, new, old)
+
+        mixed = tree_map(keep_valid, mixed, h)
+        new_m = tree_map(keep_valid, new_m, mom)
+        R = tree_map(lambda l, v: l.at[idx].set(v), R, mixed)
+        Mom = tree_map(lambda l, v: l.at[idx].set(v), Mom, new_m)
+        return R, Mom
+
+    return cohort_step
+
+
+def _cohort_step_for(algo: Algorithm, lr: float, mu: float, use_mix_kernel: bool):
+    key = (algo.cache_token(), float(lr), float(mu), bool(use_mix_kernel))
+    fn = _STEP_CACHE.get(key)
+    if fn is None:
+        fn = _make_cohort_step(algo, lr, mu, use_mix_kernel)
+        _STEP_CACHE[key] = fn
+    return fn
+
+
+@jax.jit
+def _eval_stacked(R, eval_x, eval_y):
+    mean_p = tree_map(lambda l: l.mean(axis=0), R)
+    loss = _sim.ce_loss(mean_p, eval_x, eval_y)
+    logits = _sim.mlp_apply(mean_p, eval_x)
+    acc = (jnp.argmax(logits, -1) == eval_y).mean()
+    return loss, acc
+
+
+def run_batched(
+    algo: Algorithm,
+    cfg,
+    state,
+    rng: np.random.Generator,
+    p0,
+    link_model,
+    data_x: np.ndarray,
+    data_y: np.ndarray,
+    part_idx,
+    eval_x: np.ndarray,
+    eval_y: np.ndarray,
+    record_every: int,
+    res,
+    cohort_log: list | None = None,
+):
+    """Run the async event loop on stacked state; mutates and returns ``res``.
+
+    ``cohort_log``, when a list, receives one dict per cohort (actors,
+    peers, event range, boundary flag) — the scheduler-invariant tests
+    introspect it.
+    """
+    M = cfg.n_workers
+    total = cfg.total_events
+
+    # Stacked replicas: all workers start from the same p0, like the
+    # reference engine's per-replica copies.
+    R = tree_map(lambda l: jnp.array(jnp.broadcast_to(l[None], (M,) + l.shape)), p0)
+    Mom = tree_map(lambda l: jnp.zeros((M,) + l.shape, l.dtype), p0)
+    step = _cohort_step_for(algo, cfg.lr, cfg.momentum, cfg.use_mix_kernel)
+
+    emas = [IterationTimeEMA(M, beta=cfg.ema_beta) for _ in range(M)]
+    monitor = algo.make_monitor(cfg, M, d=state.d) if algo.wants_monitor(cfg) else None
+    next_monitor = monitor.schedule_period if monitor else float("inf")
+
+    ex, ey = jnp.asarray(eval_x), jnp.asarray(eval_y)
+    # Training set lives on device; per-cohort batches are gathered there
+    # from (K, B) index arrays instead of shipping (K, B, D) floats.
+    dx, dy = jnp.asarray(data_x), jnp.asarray(data_y)
+
+    def eval_now(t, ev):
+        loss, acc = _eval_stacked(R, ex, ey)
+        res.times.append(t)
+        res.losses.append(float(loss))
+        res.accs.append(float(acc))
+        res.events.append(ev)
+
+    bsz = [min(cfg.batch_size, len(part_idx[i])) for i in range(M)]
+
+    heap = []
+    for i in range(M):
+        heapq.heappush(heap, (rng.exponential(0.005), i))
+
+    ev = 0
+    t = 0.0
+    window_cap = max(4 * M, 64)  # backstop when record_every is huge
+
+    def draw_event():
+        """Pop + fully draw the next event, consuming every host rng in
+        reference order (peer, batch, link jitter, EMA, reschedule)."""
+        nonlocal ev, t
+        t_ev, i = heapq.heappop(heap)
+        ev += 1
+        m = algo.select_peer(state, i, rng)
+        bidx = rng.choice(part_idx[i], size=bsz[i])
+        communicated = algo.would_communicate(state, i, m)
+        w = algo.mix_weight(state, cfg, i, m) if communicated else 0.0
+        timing = algo.event_timing(state, cfg, link_model, i, m, communicated, t_ev)
+        res.comm_time += timing.comm
+        res.compute_time += timing.compute
+        if algo.reports_ema and m is not None:
+            emas[i].update(m, timing.duration)
+        heapq.heappush(heap, (t_ev + timing.duration, i))
+        t = t_ev
+        return (t_ev, i, m, float(w), communicated, bidx, ev)
+
+    def schedule_window(window):
+        """Level-schedule a window into causally-independent cohorts.
+
+        One O(1)-per-event pass in pop order; see the module docstring for
+        the three hazard rules.  Returns cohorts ordered by level, each a
+        pop-ordered event list with all-distinct actors; executing them in
+        order with gather-before-scatter semantics reproduces the
+        reference's sequential result exactly.
+        """
+        last_write: dict[int, int] = {}  # row -> level of its latest write
+        max_read: dict[int, int] = {}  # row -> highest level that read it
+        groups: list[list] = []
+        level_blen: list = []  # batch length per level (one dispatch each)
+        for e in window:
+            _, i, m, _, communicated, bidx, _ = e
+            lvl = last_write.get(i, 0) + 1  # rules 1 (WAW/RAW on actor row)
+            if communicated:
+                lvl = max(lvl, last_write.get(m, 0) + 1)  # rule 2 (RAW peer)
+                # rule 3 bookkeeping happens below via max_read
+            lvl = max(lvl, max_read.get(i, 0))  # rule 3 (WAR on actor row)
+            # One fused call needs a uniform batch length, and rule 3's
+            # same-level exemption is only sound if the whole level IS one
+            # call (gather-before-scatter) — so batch length is part of a
+            # level's identity.  Raising a level past a mismatched one is
+            # always safe: every hazard above is a lower bound, and the
+            # bookkeeping below records the *final* level.
+            blen = len(bidx)
+            while lvl <= len(level_blen) and level_blen[lvl - 1] != blen:
+                lvl += 1
+            last_write[i] = lvl
+            if communicated:
+                max_read[m] = max(max_read.get(m, 0), lvl)
+            while len(groups) < lvl:  # lvl <= len(groups)+1: no gaps
+                groups.append([])
+                level_blen.append(blen)
+            groups[lvl - 1].append(e)
+        return groups
+
+    def execute(cohort):
+        """One fused dispatch for one cohort (padded to a size bucket)."""
+        nonlocal R, Mom
+        K = len(cohort)
+        B = _bucket(K, M)
+        actors = {e[1] for e in cohort}
+        blen = len(cohort[0][5])
+        ints = np.zeros((B, 3 + blen), np.int32)
+        w = np.zeros(B, np.float32)
+        for k, e in enumerate(cohort):
+            # self-pull (w=0) for non-communicating events
+            ints[k, 0] = e[1]
+            ints[k, 1] = e[2] if e[4] else e[1]
+            ints[k, 2] = 1
+            ints[k, 3:] = e[5]
+            w[k] = e[3]
+        if B > K:  # pad rows: distinct idle workers, written back unchanged
+            free = np.fromiter(
+                (r for r in range(M) if r not in actors), np.int32, M - K
+            )[: B - K]
+            ints[K:, 0] = free
+            ints[K:, 1] = free
+        R, Mom = step(R, Mom, dx, dy, ints, w)
+        res.cohorts += 1
+        if cohort_log is not None:
+            cohort_log.append([(e[6], e[1], e[2] if e[4] else None) for e in cohort])
+
+    while ev < total:
+        # ---- draw one window of events, stopping at the next boundary ----
+        window = []
+        while len(window) < window_cap and ev < total:
+            e = draw_event()
+            window.append(e)
+            if (monitor is not None and e[0] >= next_monitor) or e[6] % record_every == 0:
+                break
+        t_last, ev_last = window[-1][0], window[-1][6]
+
+        # ---- execute the whole window, level by level ----
+        for cohort in schedule_window(window):
+            execute(cohort)
+
+        # ---- boundaries fire after the window, exactly as the reference
+        # loop fires them after the boundary event (Monitor first, then the
+        # periodic evaluation) ----
+        if monitor is not None and t_last >= next_monitor:
+            monitor.collect({j: emas[j].snapshot() for j in range(M)})
+            pol = monitor.step()
+            algo.on_policy(state, pol)
+            res.policy_updates += 1
+            next_monitor += monitor.schedule_period
+        if ev_last % record_every == 0:
+            eval_now(t_last, ev_last)
+
+    eval_now(t, ev)
+    res.engine = "batched"
+    return res

@@ -15,6 +15,19 @@ registered strategy (or carries an ``Algorithm`` instance directly):
     for name in list_algorithms():
         simulate(SimConfig(algorithm=name, ...), ...)
 
+Two interchangeable engines execute the asynchronous families
+(``SimConfig.engine``; DESIGN.md §11):
+
+* ``"reference"`` — the original loop: one Python iteration + one jitted
+  dispatch per event, per-replica pytrees.  Slow but maximally simple; the
+  ground truth every strategy can be cross-checked against.
+* ``"batched"``  — the cohort engine (train/engine.py): replicas stacked
+  into leading-M pytrees, causally-independent event cohorts executed in one
+  donated vmapped call.  Parity with the reference engine is pinned by
+  tests/test_engines.py.
+* ``"auto"`` (default) — batched when the strategy supports it
+  (``Algorithm.supports_batched``), reference otherwise.
+
 Models are real JAX models (small MLPs) trained on real (synthetic) data —
 losses/accuracies are measured, not modeled.
 """
@@ -103,6 +116,15 @@ class SimConfig:
     ps_node: int = 0  # which worker doubles as the PS (ps-* algorithms)
     ps_congestion: float = 0.4
     seed: int = 0
+    # Execution engine for async strategies: "auto" | "reference" | "batched"
+    # (see module docstring).  Explicitly requesting "batched" for a
+    # strategy without supports_batched (synchronous or ps-async) raises;
+    # "auto" routes those to the reference/round loop.
+    engine: str = "auto"
+    # Batched engine only: route identity-delta mixes through the fused
+    # kernels/ops.mix_rows path (Pallas gossip_mix on TPU, jnp reference on
+    # CPU) instead of the tree-map leaf rule.
+    use_mix_kernel: bool = False
 
 
 @dataclass
@@ -114,6 +136,8 @@ class SimResult:
     comm_time: float = 0.0
     compute_time: float = 0.0
     policy_updates: int = 0
+    engine: str = "reference"  # which engine produced this result
+    cohorts: int = 0  # batched engine: number of fused dispatches
 
     def time_to_loss(self, target: float) -> float:
         for t, l in zip(self.times, self.losses):
@@ -134,6 +158,7 @@ def simulate(
     eval_x: np.ndarray,
     eval_y: np.ndarray,
     record_every: int = 100,
+    _cohort_log: list | None = None,
 ) -> SimResult:
     algo = get_algorithm(cfg.algorithm)
     M = cfg.n_workers
@@ -141,11 +166,32 @@ def simulate(
     key = jax.random.PRNGKey(cfg.seed)
     dims = [data_x.shape[1], 128, 64, int(data_y.max()) + 1]
     p0 = mlp_init(key, dims)
-    replicas = [jax.tree_util.tree_map(jnp.array, p0) for _ in range(M)]
-    momenta = [jax.tree_util.tree_map(jnp.zeros_like, p0) for _ in range(M)]
 
     state = algo.init_state(cfg, M)
     res = SimResult()
+
+    # ---------------- engine selection (async families only) -----------------
+    engine = cfg.engine
+    if engine == "auto":
+        engine = "batched" if algo.supports_batched else "reference"
+    if engine not in ("reference", "batched"):
+        raise ValueError(f"unknown engine {cfg.engine!r}")
+    if engine == "batched":
+        if not algo.supports_batched:
+            raise ValueError(
+                f"engine='batched' cannot execute {algo.name!r} "
+                "(Algorithm.supports_batched is False); use engine='reference'"
+            )
+        from repro.train.engine import run_batched
+
+        return run_batched(
+            algo, cfg, state, rng, p0, link_model,
+            data_x, data_y, part_idx, eval_x, eval_y,
+            record_every, res, cohort_log=_cohort_log,
+        )
+
+    replicas = [jax.tree_util.tree_map(jnp.array, p0) for _ in range(M)]
+    momenta = [jax.tree_util.tree_map(jnp.zeros_like, p0) for _ in range(M)]
 
     def eval_now(t, ev):
         mean_p = mean_params(replicas)

@@ -170,9 +170,9 @@ def test_netmax_topk_learns_and_spends_less_comm_time():
 
     def run(algo):
         link = LinkTimeModel(topo, jitter=0.02, seed=5, slow_interval=120.0)
-        cfg = SimConfig(algorithm=algo, n_workers=M, total_events=900, lr=0.05,
+        cfg = SimConfig(algorithm=algo, n_workers=M, total_events=700, lr=0.05,
                         monitor_period=20.0, seed=0)
-        return simulate(cfg, link, x, y, parts, ex, ey, record_every=300)
+        return simulate(cfg, link, x, y, parts, ex, ey, record_every=350)
 
     sparse = run("netmax-topk")
     dense = run("netmax")

@@ -1,0 +1,250 @@
+"""Engine-parity suite: the batched cohort engine vs the reference loop.
+
+The batched engine's whole value proposition is that it is *faithful*: for
+every gossip-family algorithm, the same seed must produce the same virtual
+timeline (host-side state is bit-identical by construction) and the same
+training trajectory (device math agrees to float tolerance).  These tests
+are the PR's contract — see DESIGN.md §11.
+"""
+
+import numpy as np
+import pytest
+
+from repro.algos import get_algorithm, list_algorithms
+from repro.core.nettime import LinkTimeModel, Topology
+from repro.data.partition import uniform_partition
+from repro.data.synthetic import train_eval_split
+from repro.train.simulator import SimConfig, simulate
+
+# Enumerated from the registry so a newly @register'd gossip strategy is
+# covered automatically (and the suite fails loudly if it can't be).
+GOSSIP = [n for n in list_algorithms() if get_algorithm(n).family == "gossip"]
+NON_BATCHED = [n for n in list_algorithms() if not get_algorithm(n).supports_batched]
+
+
+@pytest.fixture(scope="module")
+def data():
+    return train_eval_split(1600, 400, 32, 10, seed=0)
+
+
+def _sim(algo, engine, data, M=8, events=450, seed=0, topo=None,
+         record_every=150, monitor_period=0.6, log=None, parts=None, **kw):
+    x, y, ex, ey = data
+    topo = topo or Topology(n_workers=M, workers_per_host=4, hosts_per_pod=1)
+    link = LinkTimeModel(topo, jitter=0.02, seed=5, slow_interval=60.0)
+    if parts is None:
+        parts = uniform_partition(len(y), M, seed=0)
+    cfg = SimConfig(algorithm=algo, n_workers=M, total_events=events, lr=0.05,
+                    monitor_period=monitor_period, seed=seed, engine=engine, **kw)
+    return simulate(cfg, link, x, y, parts, ex, ey,
+                    record_every=record_every, _cohort_log=log)
+
+
+def _skewed_parts(data, M):
+    """Shards so small that per-worker batch sizes differ (bsz = min(batch,
+    |shard|)) — exercises the scheduler's batch-length level splitting."""
+    from repro.data.partition import size_skewed_partition
+
+    _, y, _, _ = data
+    return size_skewed_partition(len(y), M, segments=[1 + i % 3 for i in range(M)])
+
+
+def _assert_parity(ref, bat, loss_tol=5e-4):
+    """Host-side trajectory identical; device math within tolerance."""
+    assert ref.engine == "reference" and bat.engine == "batched"
+    assert bat.events == ref.events
+    # Virtual time is produced purely host-side from identical rng draw
+    # order, so it must match exactly — not approximately.
+    np.testing.assert_array_equal(np.asarray(bat.times), np.asarray(ref.times))
+    assert bat.comm_time == ref.comm_time
+    assert bat.compute_time == ref.compute_time
+    assert bat.policy_updates == ref.policy_updates
+    np.testing.assert_allclose(bat.losses, ref.losses, rtol=loss_tol, atol=loss_tol)
+    np.testing.assert_allclose(bat.accs, ref.accs, atol=0.02)
+
+
+# --------------------------------------------------------------------------
+# Parity: every gossip-family algorithm, both with and without the Monitor
+# --------------------------------------------------------------------------
+
+
+def test_every_gossip_algorithm_is_batchable():
+    """The parity suite below must cover the whole gossip family."""
+    assert GOSSIP, "registry lost its gossip algorithms?"
+    for name in GOSSIP:
+        assert get_algorithm(name).supports_batched, name
+
+
+@pytest.mark.parametrize("name", GOSSIP)
+def test_engine_parity(name, data):
+    ref = _sim(name, "reference", data)
+    bat = _sim(name, "batched", data)
+    assert bat.cohorts > 0 and bat.cohorts < bat.events[-1]
+    if get_algorithm(name).wants_monitor(SimConfig()):
+        assert bat.policy_updates > 0  # the Monitor path is exercised too
+    _assert_parity(ref, bat)
+
+
+@pytest.mark.parametrize("name", ["netmax", "adpsgd"])
+def test_engine_parity_multi_cluster(name, data):
+    """Parity on the paper-§V wide-area topology (inter_cluster WAN tier).
+
+    WAN links stretch virtual time ~10x, so the Monitor period is raised
+    accordingly — Alg.-3 policy generation at every virtual second would
+    dominate the test's wall clock on both engines alike.
+    """
+    M = 16
+    topo = Topology.multi_cluster(M, workers_per_host=4, hosts_per_pod=1,
+                                  pods_per_cluster=2)
+    assert topo.n_clusters == 2
+    assert topo.tier(0, M - 1) == "inter_cluster"
+    ref = _sim(name, "reference", data, M=M, topo=topo, monitor_period=6.0)
+    bat = _sim(name, "batched", data, M=M, topo=topo, monitor_period=6.0)
+    if name == "netmax":
+        assert bat.policy_updates > 0
+    _assert_parity(ref, bat)
+
+
+def test_engine_parity_non_uniform_batch_sizes(data):
+    """Shard-size skew makes per-worker batch sizes differ, so cohorts must
+    stay batch-length-homogeneous without breaking causal order (the
+    same-level WAR exemption is only sound within a single dispatch)."""
+    parts = _skewed_parts(data, 8)
+    kw = dict(parts=parts, batch_size=150)
+    sizes = {min(150, len(p)) for p in parts}
+    assert len(sizes) > 1  # the skew actually produces mixed batch lengths
+    ref = _sim("netmax", "reference", data, **kw)
+    bat = _sim("netmax", "batched", data, **kw)
+    _assert_parity(ref, bat)
+
+
+def test_cohort_invariants_non_uniform_batch_sizes(data):
+    """The causal-order invariants must also hold on the batch-length
+    splitting path (regression: a same-level split used to let a writer
+    overtake an earlier-popped reader of its row)."""
+    parts = _skewed_parts(data, 8)
+    log = []
+    _sim("netmax", "batched", data, events=450, parts=parts, batch_size=150,
+         log=log)
+    placed = {}
+    for ci, cohort in enumerate(log):
+        for ev_id, i, peer in cohort:
+            placed[ev_id] = (ci, i, peer)
+    for ev_a in sorted(placed):
+        ca, ia, ma = placed[ev_a]
+        for ev_b in range(ev_a + 1, min(ev_a + 60, len(placed) + 1)):
+            cb, ib, mb = placed[ev_b]
+            if cb < ca:
+                assert ib != ia and mb != ia and ib != ma
+            elif cb == ca:
+                assert ib != ia and mb != ia
+
+
+def test_engine_parity_with_mix_kernel(data):
+    """The kernels/ops.mix_rows path computes (1-w)h + w p instead of
+    h + w(p-h) — algebraically identical, so slightly looser tolerance."""
+    ref = _sim("netmax", "reference", data)
+    bat = _sim("netmax", "batched", data, use_mix_kernel=True)
+    _assert_parity(ref, bat, loss_tol=2e-3)
+
+
+def test_auto_engine_picks_batched_for_gossip_reference_for_rest(data):
+    bat = _sim("netmax", "auto", data, events=200)
+    assert bat.engine == "batched"
+    ref = _sim("ps-async", "auto", data, events=200)
+    assert ref.engine == "reference"
+
+
+def test_batched_engine_rejects_unsupported_algorithms(data):
+    for name in NON_BATCHED:
+        with pytest.raises(ValueError, match="batched"):
+            _sim(name, "batched", data, events=100)
+
+
+def test_unknown_engine_rejected(data):
+    with pytest.raises(ValueError, match="engine"):
+        _sim("netmax", "definitely-not-an-engine", data, events=100)
+
+
+# --------------------------------------------------------------------------
+# Determinism: same seed ⇒ identical results, on both engines
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("engine", ["reference", "batched"])
+def test_same_seed_is_deterministic(engine, data):
+    a = _sim("netmax", engine, data, events=250, seed=3)
+    b = _sim("netmax", engine, data, events=250, seed=3)
+    assert a.times == b.times
+    assert a.losses == b.losses
+    assert a.accs == b.accs
+    assert a.events == b.events
+    assert a.comm_time == b.comm_time
+    assert a.policy_updates == b.policy_updates
+
+
+def test_different_seeds_diverge(data):
+    a = _sim("netmax", "batched", data, events=250, seed=0)
+    b = _sim("netmax", "batched", data, events=250, seed=1)
+    assert a.times != b.times
+
+
+# --------------------------------------------------------------------------
+# Cohort-scheduler invariants (the causal-independence contract)
+# --------------------------------------------------------------------------
+
+
+def test_cohort_scheduler_invariants(data):
+    log = []
+    bat = _sim("netmax", "batched", data, events=600, log=log)
+    assert sum(len(c) for c in log) == 600  # every event executed once
+    assert bat.cohorts == len(log)
+    assert max(len(c) for c in log) > 1  # it actually batches
+
+    last_cohort_of_worker: dict[int, int] = {}
+    seen_ev = set()
+    for ci, cohort in enumerate(log):
+        actors = [i for (_, i, _) in cohort]
+        # (1) a cohort never contains the same actor twice
+        assert len(set(actors)) == len(actors)
+        for ev_id, i, peer in cohort:
+            assert ev_id not in seen_ev
+            seen_ev.add(ev_id)
+            # (2) per-worker event order is preserved across cohorts
+            assert last_cohort_of_worker.get(i, -1) < ci
+            last_cohort_of_worker[i] = ci
+    # (3) full causal check against reference order: for any two events
+    # a, b with a earlier in pop order but b scheduled no later than a's
+    # cohort, b must not act as, pull from, or overwrite what a touches.
+    placed = {}  # ev_id -> (cohort, actor, peer)
+    for ci, cohort in enumerate(log):
+        for ev_id, i, peer in cohort:
+            placed[ev_id] = (ci, i, peer)
+    for ev_a in sorted(placed):
+        ca, ia, ma = placed[ev_a]
+        for ev_b in range(ev_a + 1, min(ev_a + 50, len(placed) + 1)):
+            cb, ib, mb = placed[ev_b]
+            if cb < ca:  # b executed strictly before the earlier-popped a
+                assert ib != ia  # per-worker order (covered above too)
+                assert mb != ia  # b must not read a's pre-update row late
+                assert ib != ma  # b must not overwrite what a still reads
+            elif cb == ca:
+                assert ib != ia
+                assert mb != ia  # same cohort: a's write invisible to b
+
+
+def test_cohorts_respect_record_boundaries(data):
+    """No cohort spans a record_every boundary: the evaluation must observe
+    the state after exactly k*record_every events."""
+    log = []
+    _sim("netmax", "batched", data, events=600, record_every=100, log=log)
+    for cohort in log:
+        evs = [e for (e, _, _) in cohort]
+        assert (min(evs) - 1) // 100 == (max(evs) - 1) // 100
+
+
+def test_batched_faster_dispatch_count(data):
+    """The whole point: far fewer device dispatches than events."""
+    bat = _sim("netmax", "batched", data, M=16, events=800, record_every=800,
+               monitor_period=1e9)
+    assert bat.cohorts <= 800 / 2  # at least 2x fewer dispatches than events

@@ -187,6 +187,49 @@ def test_gossip_mix_matches_reference(shape, dtype, w):
     )
 
 
+MIX_ROWS_CASES = [
+    ((4, 1024), jnp.float32),
+    ((3, 127, 33), jnp.float32),   # non-divisible trailing -> padding path
+    ((8, 64, 32), jnp.bfloat16),
+    ((1, 70000), jnp.float32),     # multi-block row
+]
+
+
+@pytest.mark.parametrize("shape,dtype", MIX_ROWS_CASES)
+def test_gossip_mix_rows_matches_reference(shape, dtype):
+    from repro.kernels.gossip_mix import gossip_mix_rows
+
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    x = _rand(ks[0], shape, dtype)
+    u = _rand(ks[1], shape, dtype) * 0.01
+    p = _rand(ks[2], shape, dtype)
+    w = jnp.asarray(np.linspace(0.0, 1.0, shape[0]), jnp.float32)
+    got = gossip_mix_rows(x, u, p, w, interpret=True, block=4096)
+    want = ref.reference_gossip_mix_rows(x, u, p, w)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-6
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=tol, rtol=tol
+    )
+
+
+def test_gossip_mix_rows_agrees_with_per_row_scalar_kernel():
+    """The rows kernel is exactly R stacked scalar-kernel calls."""
+    from repro.kernels.gossip_mix import gossip_mix_rows
+
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    R, n = 5, 777
+    x = _rand(ks[0], (R, n), jnp.float32)
+    u = _rand(ks[1], (R, n), jnp.float32)
+    p = _rand(ks[2], (R, n), jnp.float32)
+    w = jnp.asarray([0.0, 0.25, 0.5, 0.9, 1.0], jnp.float32)
+    got = gossip_mix_rows(x, u, p, w, interpret=True, block=512)
+    for r in range(R):
+        want = gossip_mix(x[r], u[r], p[r], w[r], interpret=True, block=512)
+        np.testing.assert_allclose(
+            np.asarray(got[r]), np.asarray(want), atol=1e-6, rtol=1e-6
+        )
+
+
 @settings(max_examples=10, deadline=None)
 @given(st.integers(0, 10_000))
 def test_gossip_mix_property(seed):

@@ -1,0 +1,164 @@
+"""Property-based invariants for the timing model and policy guards.
+
+Uses tests/_hypothesis_stub.py: with hypothesis installed these fuzz the
+invariants; without it they collect and skip (the tier-1 contract).  A few
+non-random spot checks ride along so the invariants keep *some* coverage
+either way.
+"""
+
+import numpy as np
+import pytest
+from _hypothesis_stub import HAVE_HYPOTHESIS, given, settings, st
+
+from repro.algos.base import guard_policy_rows
+from repro.core.nettime import TIERS, LinkTimeModel, Topology
+
+# --------------------------------------------------------------------------
+# LinkTimeModel invariants
+# --------------------------------------------------------------------------
+
+
+def test_default_tier_times_are_ordered():
+    """Base times non-decreasing from intra_host out to inter_cluster WAN."""
+    bt = LinkTimeModel(Topology(8)).base_times
+    assert list(bt) == list(TIERS)
+    vals = [bt[t] for t in TIERS]
+    assert vals == sorted(vals)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.integers(2, 24),   # workers
+    st.integers(1, 4),    # workers_per_host
+    st.integers(1, 3),    # hosts_per_pod
+    st.integers(1, 2),    # pods_per_cluster
+    st.integers(0, 10_000),
+)
+def test_iteration_time_at_least_compute_time(M, wph, hpp, ppc, seed):
+    """t_{i,m} = max(C_i, N_{i,m}) >= C_i for every pair, time, and draw."""
+    rng = np.random.default_rng(seed)
+    topo = Topology(M, workers_per_host=wph, hosts_per_pod=hpp,
+                    pods_per_cluster=ppc)
+    model = LinkTimeModel(topo, jitter=float(rng.uniform(0, 0.2)), seed=seed)
+    for _ in range(20):
+        i, m = rng.integers(M), rng.integers(M)
+        if i == m:
+            continue
+        now = float(rng.uniform(0, 1000))
+        assert model.iteration_time(int(i), int(m), now=now) >= model.compute_time
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 32), st.integers(0, 10_000))
+def test_tier_ordering_monotone_in_placement_distance(M, seed):
+    """Nearer placement never costs more than farther placement (no jitter,
+    no slow link): the tier hierarchy is monotone."""
+    topo = Topology(M, workers_per_host=2, hosts_per_pod=2, pods_per_cluster=2)
+    model = LinkTimeModel(topo, jitter=0.0, slowdown_range=(1.0, 1.0), seed=seed)
+    rank = {t: k for k, t in enumerate(TIERS)}
+    rng = np.random.default_rng(seed)
+    pairs = [(int(a), int(b)) for a, b in rng.integers(0, M, (30, 2)) if a != b]
+    for (i, m), (j, n) in zip(pairs, pairs[1:]):
+        ti, tj = topo.tier(i, m), topo.tier(j, n)
+        ni, nj = model.network_time(i, m), model.network_time(j, n)
+        if rank[ti] <= rank[tj]:
+            assert ni <= nj
+        else:
+            assert ni >= nj
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 16), st.integers(0, 10_000))
+def test_slowdown_factor_bounded_by_range(M, seed):
+    """The dynamic slow link inflates by a factor within slowdown_range."""
+    lo, hi = 2.0, 100.0
+    topo = Topology(M)
+    model = LinkTimeModel(topo, jitter=0.0, slowdown_range=(lo, hi), seed=seed)
+    for now in (0.0, 400.0, 1200.0):
+        model.advance_to(now)
+        assert lo <= model._slow_factor <= hi
+        # And observably: every link costs base * factor with factor in
+        # {1} ∪ [lo, hi].
+        for i in range(M):
+            for m in range(M):
+                if i == m:
+                    continue
+                ratio = model.network_time(i, m, now=now) / \
+                    model.base_times[topo.tier(i, m)]
+                assert ratio == pytest.approx(1.0) or lo <= ratio <= hi * 1.0001
+
+
+def test_slow_link_redraw_changes_edge_over_time():
+    """Paper §V setup: the slowed link moves every slow_interval seconds."""
+    model = LinkTimeModel(Topology(8), jitter=0.0, slow_interval=10.0, seed=3)
+    model.advance_to(0.0)
+    edges = set()
+    for k in range(20):
+        model.advance_to(10.0 * k + 1.0)
+        edges.add(model._slow_edge)
+    assert len(edges) > 1
+
+
+# --------------------------------------------------------------------------
+# guard_policy_rows: every row stays a usable sampling distribution
+# --------------------------------------------------------------------------
+
+
+def _random_masked_policy(rng, M):
+    d = (rng.uniform(size=(M, M)) < 0.6).astype(float)
+    np.fill_diagonal(d, 0.0)
+    # ensure every row has at least one edge (a disconnected worker has no
+    # valid distribution under any guard)
+    for i in range(M):
+        if d[i].sum() == 0:
+            j = (i + 1) % M
+            d[i, j] = 1.0
+    P = rng.uniform(size=(M, M)) * d
+    dead = rng.uniform(size=M) < 0.3
+    P[dead] = 0.0  # rows the Monitor zeroed out entirely
+    return P, d
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 20), st.integers(0, 10_000))
+def test_guard_policy_rows_row_stochastic(M, seed):
+    rng = np.random.default_rng(seed)
+    P, d = _random_masked_policy(rng, M)
+    G = guard_policy_rows(P, d)
+    assert (G >= 0).all()
+    assert (G.sum(axis=1) > 0).all()  # every row samplable
+    bad = P.sum(axis=1) <= 0
+    # repaired rows carry uniform 1/(M-1) mass on exactly the d-edges
+    expect = np.where(d[bad] > 0, 1.0 / max(M - 1, 1), 0.0)
+    np.testing.assert_allclose(G[bad], expect)
+    # healthy rows pass through untouched
+    np.testing.assert_array_equal(G[~bad], P[~bad])
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 20), st.integers(0, 10_000))
+def test_guard_policy_rows_stochastic_on_full_graph(M, seed):
+    """On a fully-connected mask, repaired rows are exact distributions
+    (sum to 1) — the row-stochasticity the Monitor relies on."""
+    rng = np.random.default_rng(seed)
+    d = np.ones((M, M)) - np.eye(M)
+    P = rng.uniform(size=(M, M)) * d
+    P[rng.uniform(size=M) < 0.5] = 0.0
+    G = guard_policy_rows(P, d)
+    bad = P.sum(axis=1) <= 0
+    np.testing.assert_allclose(G[bad].sum(axis=1), 1.0)
+    assert (G.sum(axis=1) > 0).all()
+
+
+def test_guard_policy_rows_spot_check():
+    d = np.ones((3, 3)) - np.eye(3)
+    P = np.array([[0.0, 0.7, 0.3], [0.0, 0.0, 0.0], [0.5, 0.5, 0.0]])
+    G = guard_policy_rows(P, d)
+    np.testing.assert_allclose(G[1], [0.5, 0.0, 0.5])
+    np.testing.assert_array_equal(G[0], P[0])
+    np.testing.assert_array_equal(G[2], P[2])
+
+
+def test_stub_mode_visible():
+    """Sanity: record whether this environment runs the fuzzed versions."""
+    assert HAVE_HYPOTHESIS in (True, False)

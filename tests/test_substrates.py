@@ -110,6 +110,7 @@ def test_stacked_worker_momenta_independent():
 # ------------------------------------------------------------------ ckpt
 
 
+@pytest.mark.slow
 def test_checkpoint_roundtrip_bitexact(tmp_path):
     cfg = all_archs()["tinyllama-1.1b"].reduced()
     opt = sgd(momentum=0.9)

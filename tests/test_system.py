@@ -17,6 +17,7 @@ import pytest
 ROOT = Path(__file__).resolve().parents[1]
 
 
+@pytest.mark.slow
 def test_end_to_end_netmax_lm_with_monitor(tmp_path):
     """Train a tiny LM under NetMax-DP with a live Network Monitor and
     checkpointing; verify loss decreases, the policy adapts, and restart

@@ -21,9 +21,9 @@ def tiny_cfg():
                    n_layers=2, d_model=64)
 
 
-def _run_training(cfg, step_cfg, M=4, rounds=30, lr=0.05, seed=0):
+def _run_training(cfg, step_cfg=None, M=4, rounds=30, lr=0.05, seed=0, algo=None):
     opt = sgd(momentum=0.9)
-    step = jax.jit(make_train_step(cfg, opt, M, step_cfg))
+    step = jax.jit(make_train_step(cfg, opt, M, algo, step_cfg=step_cfg))
     params, opt_state = init_stacked(cfg, opt, M, jax.random.PRNGKey(0))
     stream = TokenStream(vocab_size=cfg.vocab_size, seq_len=32, batch_size=4, seed=seed)
     rng = np.random.default_rng(seed)
@@ -44,6 +44,7 @@ def _run_training(cfg, step_cfg, M=4, rounds=30, lr=0.05, seed=0):
     return params, losses
 
 
+@pytest.mark.slow
 def test_netmax_lm_training_converges(tiny_cfg):
     params, losses = _run_training(
         tiny_cfg, TrainStepConfig(gossip_mode="gather"), rounds=60, lr=0.1
@@ -52,6 +53,7 @@ def test_netmax_lm_training_converges(tiny_cfg):
     assert np.isfinite(losses).all()
 
 
+@pytest.mark.slow
 def test_replicas_stay_close(tiny_cfg):
     """Consensus: max replica deviation stays bounded during training."""
     params, _ = _run_training(tiny_cfg, TrainStepConfig(gossip_mode="gather"), rounds=40)
@@ -63,9 +65,7 @@ def test_replicas_stay_close(tiny_cfg):
 
 
 def test_allreduce_baseline_keeps_replicas_identical(tiny_cfg):
-    params, losses = _run_training(
-        tiny_cfg, TrainStepConfig(allreduce=True), rounds=10
-    )
+    params, losses = _run_training(tiny_cfg, algo="allreduce", rounds=10)
     for l in jax.tree_util.tree_leaves(params):
         lf = np.asarray(l, np.float32)
         np.testing.assert_allclose(lf, np.broadcast_to(lf[:1], lf.shape), atol=1e-5)
@@ -73,10 +73,28 @@ def test_allreduce_baseline_keeps_replicas_identical(tiny_cfg):
 
 
 def test_prague_groups_average_within_group(tiny_cfg):
+    from repro.algos import get_algorithm
+
     params, losses = _run_training(
-        tiny_cfg, TrainStepConfig(prague_groups=2), rounds=8
+        tiny_cfg, algo=get_algorithm("prague", trainer_groups=2), rounds=8
     )
     assert np.isfinite(losses).all()
+
+
+def test_legacy_flag_shim_still_warns_and_maps(tiny_cfg):
+    """The pre-registry TrainStepConfig booleans stay usable: they warn and
+    resolve to the equivalent registered strategies (the only test keeping
+    the deprecated spelling alive on purpose)."""
+    from repro.train.trainer import resolve_algorithm
+
+    with pytest.deprecated_call():
+        assert resolve_algorithm(None, TrainStepConfig(allreduce=True)).name == "allreduce"
+    with pytest.deprecated_call():
+        algo = resolve_algorithm(None, TrainStepConfig(prague_groups=2))
+    assert algo.name == "prague" and algo.trainer_groups == 2
+    # and make_train_step accepts the legacy spelling end to end
+    with pytest.deprecated_call():
+        make_train_step(tiny_cfg, sgd(momentum=0.9), 4, TrainStepConfig(allreduce=True))
 
 
 def test_masked_psum_equals_gather(tiny_cfg):
