@@ -50,9 +50,9 @@ def main():
     algos = list_algorithms()
     print(f"\nTraining the same model under all {len(algos)} registered "
           "protocols (virtual time):")
-    print("  (engine='auto': gossip families run on the batched cohort "
-          "engine,\n   synchronous/PS families on the reference loop — "
-          "DESIGN.md §11)")
+    print("  (engine='auto': every registered strategy runs on the batched "
+          "engine —\n   gossip cohorts, serialized-PS ps-async, stacked "
+          "synchronous rounds;\n   DESIGN.md §11-§12)")
     results = {}
     for algo in algos:
         link = LinkTimeModel(topo, jitter=0.02, seed=5, slow_interval=120.0)

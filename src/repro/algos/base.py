@@ -140,13 +140,51 @@ class Algorithm(abc.ABC):
 
     @property
     def supports_batched(self) -> bool:
-        """Whether the batched cohort engine (train/engine.py) can execute
-        this strategy: asynchronous gossip whose ``apply_comm`` is the
-        default pull+mix (so a cohort of causally-independent events can be
-        replayed as one stacked vmapped call).  Strategies with side effects
-        on the peer replica (ps-async) or round barriers (collective,
-        ps-sync) must override/stay on the reference engine."""
-        return self.family == "gossip" and not self.synchronous
+        """Whether the batched engine (train/engine.py) can execute this
+        strategy.  Decided from *capabilities*, not family names:
+
+        * synchronous strategies batch whenever their group averaging is the
+          default ``reduce_groups`` (it has a one-segment-mean stacked form,
+          ``reduce_groups_stacked``, so every round is a single dispatch);
+        * asynchronous strategies batch when ``apply_comm`` is the default
+          pull+mix (a cohort of causally-independent events replays as one
+          stacked vmapped call), or when they declare a non-default
+          ``batched_variant`` describing their fused-cohort semantics
+          (e.g. ps-async's serialized-PS-row formulation).
+
+        A strategy with an exotic ``apply_comm``/``reduce_groups`` override
+        and no batched variant stays on the reference engine."""
+        if self.synchronous:
+            # The two reduction forms must be a consistent pair: both
+            # default (the segment-mean stacked form reproduces the default
+            # mean exactly) or both overridden (the strategy vouches for
+            # its own pair).  Overriding only one would let the engines
+            # silently diverge — route that to the reference loop.
+            default_ref = type(self).reduce_groups is Algorithm.reduce_groups
+            default_stacked = (
+                type(self).reduce_groups_stacked
+                is Algorithm.reduce_groups_stacked
+            )
+            return default_ref == default_stacked
+        return (
+            type(self).apply_comm is Algorithm.apply_comm
+            or self.batched_variant != "gossip"
+        )
+
+    @property
+    def batched_variant(self) -> str:
+        """Which fused cohort step the batched engine builds for async
+        strategies: ``"gossip"`` (gather pre-cohort peer rows, pull + mix)
+        or ``"ps-serial"`` (every communicating event pushes into one
+        serialized row — the PS — folded in pop order inside the dispatch;
+        see ``serial_row``)."""
+        return "gossip"
+
+    def serial_row(self, state: AlgoState) -> int | None:
+        """The replica row the ``"ps-serial"`` batched variant serializes
+        inside a fused cohort dispatch (all communicating events read-modify-
+        write it in pop order).  ``None`` for variants without one."""
+        return None
 
     def cache_token(self) -> tuple:
         """Hashable identity of this strategy's *traced* behavior
@@ -338,13 +376,34 @@ class Algorithm(abc.ABC):
 
     # -- round application (sync families) ----------------------------------
     def reduce_groups(self, replicas, groups):
-        """Average replicas within each reduction group (pure JAX)."""
+        """Average replicas within each reduction group (pure JAX).
+
+        Reference-engine form: per-replica pytrees, one Python mean per
+        group.  The batched engine executes the same semantics through
+        ``reduce_groups_stacked`` — overriding this method without also
+        overriding the stacked form drops the strategy back to the
+        reference engine (``supports_batched``)."""
         for grp in groups:
             if len(grp) < 2:
                 continue
             mean_p = mean_params([replicas[i] for i in grp])
             for i in grp:
                 replicas[i] = mean_p
+
+    def reduce_groups_stacked(self, x, gid):
+        """Stacked-tree group averaging: one segment-mean per leaf.
+
+        ``x`` leaves are (M, ...) stacked replicas; ``gid`` is an (M,) i32
+        segment id per worker (workers sharing an id form one reduction
+        group; singletons map to themselves and pass through exactly).
+        This is the one-dispatch form of ``reduce_groups`` the batched sync
+        engine jits (DESIGN.md §12)."""
+        from repro.kernels import ops as kops
+
+        M = gid.shape[0]
+        return jax.tree_util.tree_map(
+            lambda l: kops.segment_mean_rows(l, gid, M), x
+        )
 
     def __repr__(self):
         return f"<Algorithm {self.name} family={self.family}>"

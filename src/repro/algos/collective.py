@@ -21,9 +21,11 @@ from repro.algos.base import (
 
 
 class SynchronousAlgorithm(Algorithm):
-    # Round-barrier semantics: executed by the simulator's synchronous loop
-    # (supports_batched is False — the cohort engine is async-only; rounds
-    # are already batch-executed via reduce_groups).
+    # Round-barrier semantics.  Both engines share the same host-side round
+    # machinery (select_groups -> round_timing -> per-worker grad step ->
+    # group averaging); the batched engine executes each round as a single
+    # jitted dispatch over stacked trees via reduce_groups_stacked
+    # (supports_batched is True as long as reduce_groups stays the default).
     family = "collective"
     synchronous = True
     reports_ema = False

@@ -51,7 +51,16 @@ class PSSync(Algorithm):
 @register("ps-async")
 class PSAsync(Algorithm):
     """Asynchronous parameter server: each event, worker i pushes its fresh
-    replica to the PS; the PS absorbs and returns the running average."""
+    replica to the PS; the PS absorbs and returns the running average.
+
+    ``apply_comm`` mutates the *peer* (PS) replica, so pushes sharing the PS
+    are never causally independent and the default gossip cohort step cannot
+    replay them.  The batched engine instead uses the ``"ps-serial"``
+    variant: a cohort's grad steps run as one stacked vmapped call, and the
+    PS running average is folded as a serialized chain over the cohort's
+    ``x_half`` rows in exact pop order inside the same dispatch
+    (``s <- s + w (x_k - s)``), which is bit-for-bit the reference's
+    event-at-a-time ``mix`` recurrence (DESIGN.md §12)."""
 
     family = "ps"
     synchronous = False
@@ -62,11 +71,11 @@ class PSAsync(Algorithm):
         return False  # per-worker async push/pull has no lockstep SPMD form
 
     @property
-    def supports_batched(self) -> bool:
-        # apply_comm mutates the PS replica too (push), so events sharing
-        # the PS are never causally independent: batching would break the
-        # running-average semantics.  Reference engine only.
-        return False
+    def batched_variant(self) -> str:
+        return "ps-serial"
+
+    def serial_row(self, state: AlgoState) -> int:
+        return state.extras.get("ps_node", 0)
 
     def would_communicate(self, state: AlgoState, i, m) -> bool:
         return m is not None  # every non-PS worker talks to the PS

@@ -72,22 +72,19 @@ def build_Y(
     p = worker_activation_probs(P, T, d)
     g = gamma_matrix(P, d)
     ar = alpha * rho
-    off = np.zeros((M, M))
     # p_{i,m} * gamma_{i,m} = (d_{i,m}+d_{m,i})/2 when p>0 — a constant per edge.
     pg = np.where(P > 0, P * g, 0.0)
     pg2 = np.where(P > 0, P * g * g, 0.0)
-    for i in range(M):
-        for m in range(M):
-            if m == i:
-                continue
-            lin = ar * (p[i] * pg[i, m] + p[m] * pg[m, i])
-            quad = ar * ar * (p[i] * pg2[i, m] + p[m] * pg2[m, i])
-            off[i, m] = lin - quad
-    Y = off.copy()
-    for i in range(M):
-        lin = 2.0 * ar * (p[i] * pg[i, :]).sum()
-        quad = ar * ar * ((p[i] * pg2[i, :]) + (p * pg2[:, i])).sum()
-        Y[i, i] = 1.0 - lin + quad
+    # Vectorized over all (i, m) at once (this sits inside Algorithm 3's
+    # K·R grid, so the former Python double loop was O(K·R·M²)).  gamma's
+    # zero diagonal keeps rowl/rowq diagonals exactly 0, matching the
+    # loop's skipped m == i entries.
+    rowl = p[:, None] * pg  # rowl[i, m] = p_i pg_{i,m};  rowl.T[i, m] = p_m pg_{m,i}
+    rowq = p[:, None] * pg2
+    Y = ar * (rowl + rowl.T) - ar * ar * (rowq + rowq.T)
+    lin_d = 2.0 * ar * rowl.sum(axis=1)
+    quad_d = ar * ar * (rowq + rowq.T).sum(axis=1)
+    Y[np.arange(M), np.arange(M)] = 1.0 - lin_d + quad_d
     return Y
 
 

@@ -7,7 +7,10 @@ inter-machine vs WAN" onto pod hardware: intra-host ICI, intra-pod ICI,
 inter-pod DCN, and — for the paper-§V wide-area scenarios at M=64+ — an
 inter-cluster WAN tier (``Topology.pods_per_cluster``).  Dynamic
 perturbations reproduce the paper's evaluation setup ("randomly slow down
-one link by 2x-100x, change the slow link every 5 min").
+one link by 2x-100x, change the slow link every 5 min"); the WAN tier can
+additionally carry temporally-correlated congestion jitter and asymmetric
+per-direction bandwidth (``wan_jitter`` / ``wan_asymmetry``, default-off,
+drawn from a dedicated seedable stream so existing traces stay pinned).
 
 Tier invariants (pinned by tests/test_properties.py): per-tier base times
 are ordered intra_host <= intra_pod <= inter_pod <= inter_cluster, every
@@ -107,16 +110,47 @@ class LinkTimeModel:
     slowdown_range: tuple = (2.0, 100.0)  # paper §V: 2x-100x on one link
     slow_interval: float = 300.0  # change the slow link every 5 minutes
     seed: int = 0
+    # -- WAN scenario depth (paper §V wide-area; all default-OFF so the
+    # engine-parity pins and every historical trace stay bit-identical:
+    # when zero, no extra rng is consumed and no factor is applied) -------
+    # Temporally-correlated (AR(1)) multiplicative jitter on inter_cluster
+    # links: one latent state per unordered cluster pair, refreshed every
+    # ``wan_jitter_interval`` virtual seconds with coefficient
+    # ``wan_jitter_corr``, applied as exp(wan_jitter * state) to both
+    # directions.  Models slow WAN congestion waves rather than iid noise.
+    wan_jitter: float = 0.0
+    wan_jitter_corr: float = 0.9
+    wan_jitter_interval: float = 60.0
+    # Static per-direction bandwidth skew on inter_cluster links: an
+    # antisymmetric per-cluster-pair draw s, applied as exp(+wan_asymmetry*s)
+    # one way and exp(-wan_asymmetry*s) the other (uplink != downlink).
+    wan_asymmetry: float = 0.0
+    # WAN draws come from their own stream so toggling them never perturbs
+    # the base jitter/slow-link sequence.  None -> derived from ``seed``.
+    wan_seed: int | None = None
 
     def __post_init__(self):
         self._rng = np.random.default_rng(self.seed)
         self._slow_edge: tuple[int, int] | None = None
         self._slow_factor: float = 1.0
         self._next_change: float = 0.0
+        nc = self.topology.n_clusters
+        self._wan_rng = np.random.default_rng(
+            self.seed + 1 if self.wan_seed is None else self.wan_seed
+        )
+        # Antisymmetric direction skew and AR(1) states, drawn up front for
+        # every cluster pair so determinism is independent of query order.
+        self._wan_dir = np.zeros((nc, nc))
+        if self.wan_asymmetry > 0 and nc > 1:
+            s = np.triu(self._wan_rng.standard_normal((nc, nc)), k=1)
+            self._wan_dir = s - s.T
+        self._wan_state = np.zeros((nc, nc))
+        self._wan_next: float = 0.0
 
     # -- dynamics -----------------------------------------------------------
     def advance_to(self, now: float) -> None:
-        """Re-draw the slowed link if the change interval elapsed."""
+        """Re-draw the slowed link if the change interval elapsed; advance
+        the correlated-WAN-jitter AR(1) states on their own cadence."""
         while now >= self._next_change:
             M = self.topology.n_workers
             i = int(self._rng.integers(M))
@@ -126,11 +160,34 @@ class LinkTimeModel:
             lo, hi = self.slowdown_range
             self._slow_factor = float(self._rng.uniform(lo, hi))
             self._next_change += self.slow_interval
+        if self.wan_jitter > 0 and self.topology.n_clusters > 1:
+            nc = self.topology.n_clusters
+            rho = self.wan_jitter_corr
+            while now >= self._wan_next:
+                noise = np.triu(self._wan_rng.standard_normal((nc, nc)), k=1)
+                noise = noise + noise.T  # shared by both directions
+                self._wan_state = (
+                    rho * self._wan_state + np.sqrt(1.0 - rho * rho) * noise
+                )
+                self._wan_next += self.wan_jitter_interval
+
+    def _wan_factor(self, i: int, m: int) -> float:
+        """Current inter_cluster multiplier for the directed link i -> m."""
+        ci, cm = self.topology.cluster_of(i), self.topology.cluster_of(m)
+        f = 1.0
+        if self.wan_asymmetry > 0:
+            f *= float(np.exp(self.wan_asymmetry * self._wan_dir[ci, cm]))
+        if self.wan_jitter > 0:
+            f *= float(np.exp(self.wan_jitter * self._wan_state[ci, cm]))
+        return f
 
     # -- queries ------------------------------------------------------------
     def network_time(self, i: int, m: int, now: float = 0.0) -> float:
         self.advance_to(now)
-        t = self.base_times[self.topology.tier(i, m)]
+        tier = self.topology.tier(i, m)
+        t = self.base_times[tier]
+        if tier == "inter_cluster" and (self.wan_jitter > 0 or self.wan_asymmetry > 0):
+            t *= self._wan_factor(i, m)
         if self._slow_edge in ((i, m), (m, i)):
             t *= self._slow_factor
         if self.jitter > 0:
@@ -146,11 +203,17 @@ class LinkTimeModel:
         self.advance_to(now)
         M = self.topology.n_workers
         T = np.zeros((M, M))
+        wan = self.wan_jitter > 0 or self.wan_asymmetry > 0
         for i in range(M):
             for m in range(M):
                 if i == m:
                     continue
-                t = self.base_times[self.topology.tier(i, m)]
+                tier = self.topology.tier(i, m)
+                t = self.base_times[tier]
+                if wan and tier == "inter_cluster":
+                    # Slow-moving expected factors (direction skew + current
+                    # AR(1) congestion state); only the iid jitter is left out.
+                    t *= self._wan_factor(i, m)
                 if self._slow_edge in ((i, m), (m, i)):
                     t *= self._slow_factor
                 T[i, m] = max(self.compute_time, t)

@@ -48,62 +48,61 @@ def _solve_policy_lp(
     Eq. (13): rows sum to one (diagonal included).
     """
     M = T.shape[0]
-    idx: dict[tuple[int, int], int] = {}
-    for i in range(M):
-        idx[(i, i)] = len(idx)
-        for m in range(M):
-            if m != i and d[i, m]:
-                idx[(i, m)] = len(idx)
-    n = len(idx)
+    eye = np.eye(M, dtype=bool)
+    edge = (d != 0) & ~eye
+    # Variable layout matches the historical per-(i, m) Python loop exactly:
+    # for each worker i the diagonal p_{i,i} first, then p_{i,m} over edges
+    # in ascending m.  (The simplex pivot path — hence the solution bits —
+    # depends on variable order, so the vectorized build must preserve it.)
+    n_per_row = 1 + edge.sum(axis=1)
+    start = np.concatenate(([0], np.cumsum(n_per_row)[:-1]))  # (i,i) slots
+    ii, mm = np.nonzero(edge)  # row-major: ascending i, ascending m per row
+    pos = start[ii] + edge.cumsum(axis=1)[ii, mm]  # edge slots
+    n = int(n_per_row.sum())
     c = np.zeros(n)
+    c[start] = 1.0  # objective: minimize self-selection
     lb = np.zeros(n)
     ub = np.ones(n)
-    for (i, m), j in idx.items():
-        if i == m:
-            c[j] = 1.0  # objective: minimize self-selection
-        else:
-            lb[j] = alpha * rho * (d[i, m] + d[m, i]) + _FLOOR_MARGIN
+    lb[pos] = alpha * rho * (d[ii, mm] + d[mm, ii]) + _FLOOR_MARGIN
     A = np.zeros((2 * M, n))
     b = np.zeros(2 * M)
-    for i in range(M):
-        # Eq. (10): sum_m t_{i,m} p_{i,m} d_{i,m} = M * t_bar.
-        for m in range(M):
-            if m != i and d[i, m]:
-                A[i, idx[(i, m)]] = T[i, m]
-        b[i] = M * t_bar
-        # Eq. (13): sum_m p_{i,m} = 1.
-        A[M + i, idx[(i, i)]] = 1.0
-        for m in range(M):
-            if m != i and d[i, m]:
-                A[M + i, idx[(i, m)]] = 1.0
-        b[M + i] = 1.0
+    # Eq. (10): sum_m t_{i,m} p_{i,m} d_{i,m} = M * t_bar.
+    A[ii, pos] = T[ii, mm]
+    b[:M] = M * t_bar
+    # Eq. (13): sum_m p_{i,m} = 1 (diagonal included).
+    A[M + np.arange(M), start] = 1.0
+    A[M + ii, pos] = 1.0
+    b[M:] = 1.0
     res = solve_lp(c, A, b, lb=lb, ub=ub)
     if not res.ok:
         return None
+    x = np.maximum(res.x, 0.0)
     P = np.zeros((M, M))
-    for (i, m), j in idx.items():
-        P[i, m] = max(res.x[j], 0.0)
+    P[ii, mm] = x[pos]
+    P[np.arange(M), np.arange(M)] = x[start]
     return P
 
 
 def _t_bar_interval(
     T: np.ndarray, d: np.ndarray, alpha: float, rho: float
 ) -> tuple[float, float]:
-    """Feasible [L, U] for t_bar (Appendix A, Eqs. 26/28)."""
+    """Feasible [L, U] for t_bar (Appendix A, Eqs. 26/28).
+
+    Broadcast over all worker rows at once — the former per-(i, m) Python
+    loops made this the O(K·M²) floor of Algorithm 3 at M=64+.  The per-row
+    reduction goes through ``np.cumsum`` (a sequential accumulation), so it
+    is bit-identical to the historical left-to-right Python ``sum`` — the
+    parity test in tests/test_policy.py pins exact equality."""
     M = T.shape[0]
-    L = 0.0
-    U = np.inf
-    for i in range(M):
-        Li = alpha * rho / M * sum(
-            T[i, m] * (d[i, m] + d[m, i]) for m in range(M) if m != i
-        )
-        edge_times = [T[i, m] for m in range(M) if m != i and d[i, m]]
-        if not edge_times:
-            return (np.inf, -np.inf)  # isolated node: infeasible
-        Ui = max(edge_times) / M
-        L = max(L, Li)
-        U = min(U, Ui)
-    return L, U
+    eye = np.eye(M, dtype=bool)
+    terms = T * (d + d.T)
+    terms[eye] = 0.0  # the loop skipped m == i
+    L_rows = alpha * rho / M * np.cumsum(terms, axis=1)[:, -1]
+    edge = (d != 0) & ~eye
+    if not edge.any(axis=1).all():
+        return (np.inf, -np.inf)  # isolated node: infeasible
+    U_rows = np.where(edge, T, -np.inf).max(axis=1) / M
+    return max(0.0, float(L_rows.max())), float(U_rows.min())
 
 
 def inner_loop(
@@ -124,7 +123,14 @@ def inner_loop(
     for r in range(1, R + 1):
         t_bar = L + (U - L) * r / R
         n_solved += 1
-        P = _solve_policy_lp(T, d, alpha, rho, t_bar)
+        try:
+            P = _solve_policy_lp(T, d, alpha, rho, t_bar)
+        except (RuntimeError, MemoryError):
+            # Simplex iteration cap / tableau too large for this grid point
+            # (dense solver at M=128 full graphs): score it infeasible so
+            # the Monitor degrades to other grid points or the uniform
+            # fallback instead of dying mid-run.
+            P = None
         if P is None:
             grid.append((rho, t_bar, None, np.inf))
             continue
@@ -230,9 +236,9 @@ def generate_policy_matrix(
 def uniform_policy(d: np.ndarray) -> np.ndarray:
     """AD-PSGD-style uniform neighbor selection (no self-loops)."""
     M = d.shape[0]
+    mask = (d != 0) & ~np.eye(M, dtype=bool)
+    cnt = mask.sum(axis=1)
     P = np.zeros((M, M))
-    for i in range(M):
-        nbrs = [m for m in range(M) if m != i and d[i, m]]
-        for m in nbrs:
-            P[i, m] = 1.0 / len(nbrs)
+    rows = cnt > 0
+    P[rows] = mask[rows] / cnt[rows, None]
     return P

@@ -61,6 +61,21 @@ def mix_rows(x, u, pulled, w, *, use_pallas=None):
     return ref.reference_gossip_mix_rows(x, u, pulled, w)
 
 
+def segment_mean_rows(x, seg, num_segments):
+    """Replace each row of ``x`` by the mean of the rows sharing its segment.
+
+    ``x`` is (M, ...) stacked replicas, ``seg`` an (M,) i32 segment id per
+    row.  Rows alone in their segment pass through exactly (sum of one row
+    divided by 1.0).  This is the one-dispatch group averaging the batched
+    sync engine and ``Algorithm.reduce_groups_stacked`` build on — a single
+    segment-sum + gather instead of a Python loop over groups."""
+    ones = jnp.ones((x.shape[0],), x.dtype)
+    sums = jax.ops.segment_sum(x, seg, num_segments=num_segments)
+    counts = jax.ops.segment_sum(ones, seg, num_segments=num_segments)
+    cnt = counts[seg].reshape((-1,) + (1,) * (x.ndim - 1))
+    return sums[seg] / cnt
+
+
 def gossip_mix_tree(x_half, pulled, weights, *, use_pallas=None):
     """Tree-level fused mix used by the trainer and the batched simulator
     engine (x_half already includes the optimizer update, so u = 0):

@@ -1,14 +1,28 @@
-"""Batched cohort engine for the event-driven simulator (DESIGN.md §11).
+"""Batched engine for the event-driven simulator (DESIGN.md §11-§12).
 
-The reference engine (train/simulator.py) executes one worker event per
-Python iteration — two jitted dispatches over a per-replica pytree each —
-which tops out around 8–16 workers.  This engine keeps the *exact same
-host-side event machinery* (heap order, rng draw order, LinkTimeModel
-draws, EMA updates, Monitor schedule) but stacks all M replicas/momenta
-into leading-M pytrees and executes *cohorts* of causally-independent
-events in one donated, jitted, vmapped call.
+The reference engine (train/simulator.py) executes one worker event (or one
+synchronous-round grad step) per Python iteration — a couple of jitted
+dispatches over a per-replica pytree each — which tops out around 8–16
+workers.  This engine keeps the *exact same host-side machinery* (heap
+order, rng draw order, LinkTimeModel draws, EMA updates, Monitor schedule,
+round barriers) but stacks all M replicas/momenta into leading-M pytrees
+and executes many events per device dispatch.  It covers every registered
+strategy:
 
-Scheduling works in two layers:
+* **async gossip** (netmax / adpsgd family) — cohorts of causally-
+  independent events, one donated jitted vmapped call per cohort
+  (``Algorithm.batched_variant == "gossip"``);
+* **ps-async** — the ``"ps-serial"`` variant: a cohort's grad steps run
+  stacked, and the PS running average is folded as a *serialized chain*
+  over the cohort's ``x_half`` rows in exact pop order inside the same
+  dispatch (``s <- s + w (x_k - s)`` — bit-for-bit the reference's
+  event-at-a-time recurrence, only the grad math is vmapped);
+* **synchronous rounds** (ps-sync / allreduce / prague) — ``run_batched_sync``
+  executes each round as one dispatch: vmapped grad steps + a one-segment-
+  mean ``reduce_groups_stacked``; rounds between record boundaries are
+  additionally scan-fused.
+
+Scheduling of the async families works in two layers:
 
 * **Windows** — events are *drawn* strictly in heap-pop order (peer
   selection, batch indices, link-time jitter, EMA updates), so every host
@@ -35,13 +49,30 @@ Scheduling works in two layers:
      least the reader's (the *same* level is fine: gathers happen before
      the scatter).
 
-The two engines therefore produce identical `times`/`events`/`comm_time`
-and near-identical losses (tests/test_engines.py pins both).
+  The ``"ps-serial"`` variant relaxes rule 2 on the serialized row: pushes
+  into the PS may share a level (the fused step folds them in pop order),
+  they only need their level to be *non-decreasing* in pop order; the PS
+  node's own grad step reads the PS row outside the chain, so it must land
+  strictly after every prior push's level.
+
+* **Chains** — consecutive batch-length-homogeneous levels whose row
+  buckets stay within a 2x band are fused into one ``lax.scan`` dispatch
+  carrying the donated ``(R, Mom)`` stacked trees, with a uniform row
+  bucket per chain (the band's max, so wasted pad rows stay <= ~1/2) and
+  the chain length padded to ~1.5x-stepped buckets via no-op levels
+  (valid=0 rows).  Both the wide plateau at the head of a window and the
+  busiest worker's long sequential tail of tiny levels collapse into a
+  handful of dispatches (`SimResult.dispatches` vs the logical
+  `SimResult.cohorts`).
+
+The engines produce identical `times`/`events`/`comm_time` and
+near-identical losses (tests/test_engines.py pins every registered
+strategy).
 
 Cohorts are padded to ~1.5x-stepped size buckets (≤ M) so only O(log M)
 XLA programs are compiled; pad rows use distinct idle workers with a
-validity mask so the scatter is conflict-free.  The mixing math inside the fused
-step is ``Algorithm.mix_stacked_tree`` — the same leaf rule the SPMD
+validity mask so the scatter is conflict-free.  The mixing math inside the
+fused step is ``Algorithm.mix_stacked_tree`` — the same leaf rule the SPMD
 trainer jits — or, for identity-delta strategies with
 ``SimConfig.use_mix_kernel``, the fused ``kernels/ops.mix_rows`` path
 (Pallas ``gossip_mix_rows`` on TPU).
@@ -49,7 +80,6 @@ trainer jits — or, for identity-delta strategies with
 
 from __future__ import annotations
 
-import functools
 import heapq
 
 import jax
@@ -63,8 +93,11 @@ from repro.train import simulator as _sim
 tree_map = jax.tree_util.tree_map
 
 # Compiled cohort steps, keyed by (Algorithm.cache_token(), lr, momentum,
-# use_mix_kernel).  Reused across simulate() calls so repeated runs (tests,
-# benchmarks) don't re-trace identical programs.
+# use_mix_kernel, batched_variant, serial row).  Reused across simulate()
+# calls so repeated runs (tests, benchmarks) don't re-trace identical
+# programs.  Each entry is a (step, chain_step) pair sharing one traced
+# body: ``step`` executes a single cohort, ``chain_step`` a lax.scan over a
+# stacked run of cohorts.
 _STEP_CACHE: dict = {}
 
 
@@ -79,59 +112,267 @@ def _bucket(n: int, cap: int) -> int:
     return min(b, cap)
 
 
-def _make_cohort_step(algo: Algorithm, lr: float, mu: float, use_mix_kernel: bool):
-    """Build the donated, jitted fused step for one strategy.
+#: Longest run of cohorts one scan-fused dispatch may carry; longer runs
+#: flush and start a new chain (bounds per-dispatch host packing and the
+#: scan's unrolled cost).
+_CHAIN_CAP = 64
+
+#: Shortest singleton-level run worth the dedicated burst dispatch (below
+#: this the band chain packs them just as well).
+_BURST_MIN = 4
+
+#: Longest singleton run one burst dispatch may carry.  Bursts move one row
+#: per step, so they can afford longer scans than full-stack chains.
+_BURST_CAP = 128
+
+
+def _chain_bucket(n: int, cap: int = _CHAIN_CAP) -> int:
+    """~1.5x-stepped bucket for chain (scan) lengths, capped: pad levels
+    are cheap no-ops but each distinct length is one XLA program."""
+    b = 2
+    while b < n:
+        b = (b * 3 + 1) // 2
+    return min(b, cap)
+
+
+def _make_cohort_body(algo: Algorithm, lr: float, mu: float,
+                      use_mix_kernel: bool, sr: int | None):
+    """Build the untraced fused-step body for one strategy.
 
     Signature: (R, Mom, dx, dy, ints, w) -> (R, Mom) where R/Mom leaves are
     (M, ...) stacked replicas/momenta, dx/dy the device-resident training
     set, and the per-cohort operands cross the host boundary as just two
-    arrays: ``ints`` (K, 3+B) i32 packing [actor row, peer row, valid,
-    batch indices...] and ``w`` (K,) f32 mix weights (0 ⇒ no
-    communication).  valid=0 marks padding: the row is written back
-    unchanged.
+    arrays: ``ints`` (K, 3+B) i32 packing [actor row, peer row (gossip) or
+    push flag (ps-serial), valid, batch indices...] and ``w`` (K,) f32 mix
+    weights (0 ⇒ no communication).  valid=0 marks padding: the row is
+    written back unchanged.
     """
     vgrad = jax.vmap(jax.value_and_grad(_sim.ce_loss))
     identity_delta = type(algo).delta_transform is Algorithm.delta_transform
+    variant = algo.batched_variant
 
-    def mix(x_half, pulled, w):
-        if use_mix_kernel and identity_delta:
-            from repro.kernels import ops as kops
-
-            return kops.gossip_mix_tree(x_half, pulled, w)
-        return algo.mix_stacked_tree(x_half, pulled, w)
-
-    @functools.partial(jax.jit, donate_argnums=(0, 1))
-    def cohort_step(R, Mom, dx, dy, ints, w):
-        idx, nb, valid = ints[:, 0], ints[:, 1], ints[:, 2] > 0
-        xb, yb = dx[ints[:, 3:]], dy[ints[:, 3:]]
-        h = tree_map(lambda l: l[idx], R)
-        pulled = tree_map(lambda l: l[nb], R)  # pre-cohort peer rows
-        mom = tree_map(lambda l: l[idx], Mom)
-        _, grads = vgrad(h, xb, yb)
-        new_m = tree_map(lambda m, g: mu * m + g, mom, grads)
-        x_half = tree_map(lambda p, m: p - lr * m, h, new_m)
-        mixed = mix(x_half, pulled, w)
-
-        def keep_valid(new, old):
+    def keep_valid(valid):
+        def f(new, old):
             v = valid.reshape((-1,) + (1,) * (new.ndim - 1))
             return jnp.where(v, new, old)
 
-        mixed = tree_map(keep_valid, mixed, h)
-        new_m = tree_map(keep_valid, new_m, mom)
-        R = tree_map(lambda l, v: l.at[idx].set(v), R, mixed)
-        Mom = tree_map(lambda l, v: l.at[idx].set(v), Mom, new_m)
-        return R, Mom
+        return f
 
-    return cohort_step
+    def grad_half(R, Mom, dx, dy, ints):
+        """Shared front half: stacked vmapped grad + momentum + local step."""
+        idx = ints[:, 0]
+        valid = ints[:, 2] > 0
+        xb, yb = dx[ints[:, 3:]], dy[ints[:, 3:]]
+        h = tree_map(lambda l: l[idx], R)
+        mom = tree_map(lambda l: l[idx], Mom)
+        _, grads = vgrad(h, xb, yb)
+        new_m = tree_map(lambda m_, g: mu * m_ + g, mom, grads)
+        x_half = tree_map(lambda p, m_: p - lr * m_, h, new_m)
+        return idx, valid, h, mom, new_m, x_half
+
+    if variant == "ps-serial":
+
+        def body(R, Mom, dx, dy, ints, w):
+            idx, valid, h, mom, new_m, x_half = grad_half(R, Mom, dx, dy, ints)
+            is_push = (ints[:, 1] > 0) & valid
+            is_set = valid & ~is_push & (idx == sr)
+            s0 = tree_map(lambda l: l[sr], R)
+
+            def chain_op(s, xs):
+                xk, pk, tk, wk = xs
+
+                def leaf_s(s_l, x_l):
+                    wl = wk.astype(s_l.dtype)
+                    # == Algorithm.mix(s, x, w), delta_transform included
+                    fold = s_l + wl * algo.delta_transform(x_l - s_l)
+                    return jnp.where(pk, fold, jnp.where(tk, x_l, s_l))
+
+                s_new = tree_map(leaf_s, s, xk)
+                val = tree_map(
+                    lambda sn, x_l: jnp.where(pk, sn, x_l), s_new, xk
+                )
+                return s_new, val
+
+            s_fin, vals = jax.lax.scan(chain_op, s0, (x_half, is_push, is_set, w))
+            vals = tree_map(keep_valid(valid), vals, h)
+            new_m = tree_map(keep_valid(valid), new_m, mom)
+            R = tree_map(lambda l, v: l.at[idx].set(v), R, vals)
+            Mom = tree_map(lambda l, v: l.at[idx].set(v), Mom, new_m)
+            wrote = jnp.any(is_push | is_set)
+            R = tree_map(
+                lambda l, sf: l.at[sr].set(jnp.where(wrote, sf, l[sr])), R, s_fin
+            )
+            return R, Mom
+
+    else:
+
+        def mix(x_half, pulled, w):
+            if use_mix_kernel and identity_delta:
+                from repro.kernels import ops as kops
+
+                return kops.gossip_mix_tree(x_half, pulled, w)
+            return algo.mix_stacked_tree(x_half, pulled, w)
+
+        def body(R, Mom, dx, dy, ints, w):
+            idx, valid, h, mom, new_m, x_half = grad_half(R, Mom, dx, dy, ints)
+            pulled = tree_map(lambda l: l[ints[:, 1]], R)  # pre-cohort peers
+            mixed = mix(x_half, pulled, w)
+            mixed = tree_map(keep_valid(valid), mixed, h)
+            new_m = tree_map(keep_valid(valid), new_m, mom)
+            R = tree_map(lambda l, v: l.at[idx].set(v), R, mixed)
+            Mom = tree_map(lambda l, v: l.at[idx].set(v), Mom, new_m)
+            return R, Mom
+
+    return body
 
 
-def _cohort_step_for(algo: Algorithm, lr: float, mu: float, use_mix_kernel: bool):
-    key = (algo.cache_token(), float(lr), float(mu), bool(use_mix_kernel))
-    fn = _STEP_CACHE.get(key)
-    if fn is None:
-        fn = _make_cohort_step(algo, lr, mu, use_mix_kernel)
-        _STEP_CACHE[key] = fn
-    return fn
+def _make_burst_body(algo: Algorithm, lr: float, mu: float, sr: int | None):
+    """Singleton-run chain step: a stretch of consecutive singleton levels.
+
+    A full-tree dispatch per singleton level moves the whole (M, ...) stack
+    to advance one row — the dominant cost in two real regimes: the busiest
+    gossip worker's inherently-sequential tail, and ps-async's congested-PS
+    limit where the PS node's fast local steps outnumber pushes ~20:1.
+    Burst bodies instead scan over the run carrying only the state that
+    actually chains, touching the stacked tree O(1) times:
+
+    * gossip — the run belongs to ONE worker: carry its (row, momentum);
+      peers are gathered from the scan-constant pre-burst stack (sound: the
+      run's levels contain no other events, so no peer row changes
+      mid-burst).  Signature (R, Mom, dx, dy, i, ints, w), ``i`` the actor,
+      ``ints`` (L, 2+B) i32 [peer row, valid, batch indices...].
+    * ps-serial — the run may mix actors (PS local steps + pushes from
+      distinct workers): carry the serialized (PS row, PS momentum); each
+      pusher's row/momentum is gathered from the pre-burst stack (sound:
+      the host-side run grouping breaks the run before any non-PS actor
+      repeats), its post-push value emitted as a scan output and scattered
+      once after the scan (PS-local steps scatter nothing — their effect is
+      the carry).  Signature (R, Mom, dx, dy, ints, w), ``ints`` (L, 3+B)
+      i32 [actor row, push flag, valid, batch indices...].
+    """
+    grad = jax.value_and_grad(_sim.ce_loss)
+
+    def keep(valid, new, old):
+        return tree_map(lambda a, b: jnp.where(valid, a, b), new, old)
+
+    def grad_half(row, mom, xb, yb):
+        _, g = grad(row, xb, yb)
+        mom2 = tree_map(lambda m_, gg: mu * m_ + gg, mom, g)
+        x_half = tree_map(lambda p, m_: p - lr * m_, row, mom2)
+        return mom2, x_half
+
+    if algo.batched_variant == "ps-serial":
+
+        def body(R, Mom, dx, dy, ints, w):
+            s0 = tree_map(lambda l: l[sr], R)
+            ms0 = tree_map(lambda l: l[sr], Mom)
+
+            def f(carry, xs):
+                s, mom_s = carry
+                ints_k, wk = xs
+                actor = ints_k[0]
+                valid = ints_k[2] > 0
+                push = (ints_k[1] > 0) & valid
+                is_ps = valid & ~push & (actor == sr)
+                # PS-local steps read the carried chain state; pushes read
+                # their own (pre-burst) row.
+                row = tree_map(
+                    lambda l, s_l: jnp.where(is_ps, s_l, l[actor]), R, s
+                )
+                mom = tree_map(
+                    lambda l, m_l: jnp.where(is_ps, m_l, l[actor]), Mom, mom_s
+                )
+                mom2, xh = grad_half(row, mom, dx[ints_k[3:]], dy[ints_k[3:]])
+                s2 = tree_map(
+                    lambda s_l, x_l: jnp.where(
+                        push,
+                        # == Algorithm.mix(s, x, w), delta_transform included
+                        s_l
+                        + wk.astype(s_l.dtype) * algo.delta_transform(x_l - s_l),
+                        jnp.where(is_ps, x_l, s_l),
+                    ),
+                    s, xh,
+                )
+                mom_s2 = keep(is_ps, mom2, mom_s)
+                row_out = tree_map(
+                    lambda s_l, x_l: jnp.where(push, s_l, x_l), s2, xh
+                )
+                # Rows to scatter post-scan: pushes (and any plain non-PS
+                # local step); PS-local steps ride the carry.  Out-of-range
+                # sentinel + mode="drop" skips the rest.
+                sc = jnp.where(valid & ~is_ps, actor, jnp.int32(2**30))
+                return (s2, mom_s2), (row_out, mom2, sc)
+
+            (s, mom_s), (rows, moms, sc) = jax.lax.scan(f, (s0, ms0), (ints, w))
+            R = tree_map(lambda l, v: l.at[sc].set(v, mode="drop"), R, rows)
+            Mom = tree_map(lambda l, v: l.at[sc].set(v, mode="drop"), Mom, moms)
+            R = tree_map(lambda l, v: l.at[sr].set(v), R, s)
+            Mom = tree_map(lambda l, v: l.at[sr].set(v), Mom, mom_s)
+            return R, Mom
+
+    else:
+
+        def body(R, Mom, dx, dy, i, ints, w):
+            row = tree_map(lambda l: l[i], R)
+            mom = tree_map(lambda l: l[i], Mom)
+
+            def f(carry, xs):
+                row, mom = carry
+                ints_k, wk = xs
+                valid = ints_k[1] > 0
+                mom2, xh = grad_half(row, mom, dx[ints_k[2:]], dy[ints_k[2:]])
+                pulled = tree_map(lambda l: l[ints_k[0]], R)  # pre-burst peers
+                # THE leaf rule (Algorithm.mix_stacked_tree), applied to a
+                # single row via a length-1 leading axis so an overridden
+                # mix stays consistent with the cohort path.
+                mixed = tree_map(
+                    lambda l: l[0],
+                    algo.mix_stacked_tree(
+                        tree_map(lambda l: l[None], xh),
+                        tree_map(lambda l: l[None], pulled),
+                        wk[None],
+                    ),
+                )
+                return (keep(valid, mixed, row), keep(valid, mom2, mom)), None
+
+            (row, mom), _ = jax.lax.scan(f, (row, mom), (ints, w))
+            R = tree_map(lambda l, v: l.at[i].set(v), R, row)
+            Mom = tree_map(lambda l, v: l.at[i].set(v), Mom, mom)
+            return R, Mom
+
+    return body
+
+
+def _steps_for(algo: Algorithm, lr: float, mu: float, use_mix_kernel: bool,
+               sr: int | None):
+    if algo.batched_variant not in ("gossip", "ps-serial"):
+        # A variant this engine doesn't implement must fail loudly — falling
+        # through to the gossip body would silently compute wrong updates.
+        raise NotImplementedError(
+            f"batched_variant {algo.batched_variant!r} of {algo.name!r} is "
+            "not implemented by the batched engine; use engine='reference'"
+        )
+    key = (algo.cache_token(), float(lr), float(mu), bool(use_mix_kernel),
+           algo.batched_variant, sr)
+    entry = _STEP_CACHE.get(key)
+    if entry is None:
+        body = _make_cohort_body(algo, lr, mu, use_mix_kernel, sr)
+        step = jax.jit(body, donate_argnums=(0, 1))
+
+        def chain_body(R, Mom, dx, dy, ints_seq, w_seq):
+            def f(carry, xs):
+                ints, w = xs
+                return body(carry[0], carry[1], dx, dy, ints, w), None
+
+            carry, _ = jax.lax.scan(f, (R, Mom), (ints_seq, w_seq))
+            return carry
+
+        chain = jax.jit(chain_body, donate_argnums=(0, 1))
+        burst = jax.jit(_make_burst_body(algo, lr, mu, sr),
+                        donate_argnums=(0, 1))
+        entry = (step, chain, burst)
+        _STEP_CACHE[key] = entry
+    return entry
 
 
 @jax.jit
@@ -163,16 +404,23 @@ def run_batched(
 
     ``cohort_log``, when a list, receives one dict per cohort (actors,
     peers, event range, boundary flag) — the scheduler-invariant tests
-    introspect it.
+    introspect it.  Chain fusion never changes the logical cohort structure
+    (the log and ``res.cohorts`` are identical with ``cfg.fuse_chains`` on
+    or off); it only packs consecutive levels into fewer device dispatches
+    (``res.dispatches``).
     """
     M = cfg.n_workers
     total = cfg.total_events
+    variant = algo.batched_variant
+    sr = algo.serial_row(state) if variant == "ps-serial" else None
+    fuse = getattr(cfg, "fuse_chains", True)
 
     # Stacked replicas: all workers start from the same p0, like the
     # reference engine's per-replica copies.
     R = tree_map(lambda l: jnp.array(jnp.broadcast_to(l[None], (M,) + l.shape)), p0)
     Mom = tree_map(lambda l: jnp.zeros((M,) + l.shape, l.dtype), p0)
-    step = _cohort_step_for(algo, cfg.lr, cfg.momentum, cfg.use_mix_kernel)
+    step, chain_step, burst_step = _steps_for(algo, cfg.lr, cfg.momentum,
+                                              cfg.use_mix_kernel, sr)
 
     emas = [IterationTimeEMA(M, beta=cfg.ema_beta) for _ in range(M)]
     monitor = algo.make_monitor(cfg, M, d=state.d) if algo.wants_monitor(cfg) else None
@@ -223,21 +471,35 @@ def run_batched(
         """Level-schedule a window into causally-independent cohorts.
 
         One O(1)-per-event pass in pop order; see the module docstring for
-        the three hazard rules.  Returns cohorts ordered by level, each a
+        the three hazard rules (plus the serialized-row relaxation for the
+        ps-serial variant).  Returns cohorts ordered by level, each a
         pop-ordered event list with all-distinct actors; executing them in
-        order with gather-before-scatter semantics reproduces the
-        reference's sequential result exactly.
+        order with gather-before-scatter semantics (and in-dispatch
+        pop-order folding of the serialized row) reproduces the reference's
+        strictly-sequential result exactly.
         """
         last_write: dict[int, int] = {}  # row -> level of its latest write
         max_read: dict[int, int] = {}  # row -> highest level that read it
+        last_sw = 0  # level of the serialized row's latest write (ps-serial)
         groups: list[list] = []
         level_blen: list = []  # batch length per level (one dispatch each)
         for e in window:
             _, i, m, _, communicated, bidx, _ = e
             lvl = last_write.get(i, 0) + 1  # rules 1 (WAW/RAW on actor row)
             if communicated:
-                lvl = max(lvl, last_write.get(m, 0) + 1)  # rule 2 (RAW peer)
-                # rule 3 bookkeeping happens below via max_read
+                if sr is not None and m == sr:
+                    # Serialized push: may share the last writer's level —
+                    # the fused step folds same-level pushes in pop order —
+                    # but must never land in an earlier one.
+                    lvl = max(lvl, last_sw)
+                else:
+                    lvl = max(lvl, last_write.get(m, 0) + 1)  # rule 2 (RAW peer)
+                    # rule 3 bookkeeping happens below via max_read
+            elif sr is not None and i == sr:
+                # The PS node's own grad step reads the PS row *outside* the
+                # chain (pre-level gather), so every prior push must have
+                # scattered already.
+                lvl = max(lvl, last_sw + 1)
             lvl = max(lvl, max_read.get(i, 0))  # rule 3 (WAR on actor row)
             # One fused call needs a uniform batch length, and rule 3's
             # same-level exemption is only sound if the whole level IS one
@@ -250,26 +512,32 @@ def run_batched(
                 lvl += 1
             last_write[i] = lvl
             if communicated:
-                max_read[m] = max(max_read.get(m, 0), lvl)
+                if sr is not None and m == sr:
+                    last_sw = max(last_sw, lvl)
+                else:
+                    max_read[m] = max(max_read.get(m, 0), lvl)
+            if sr is not None and i == sr:
+                last_sw = max(last_sw, lvl)  # PS-local event rewrites the row
             while len(groups) < lvl:  # lvl <= len(groups)+1: no gaps
                 groups.append([])
                 level_blen.append(blen)
             groups[lvl - 1].append(e)
         return groups
 
-    def execute(cohort):
-        """One fused dispatch for one cohort (padded to a size bucket)."""
-        nonlocal R, Mom
+    def pack(cohort, B):
+        """Pack one cohort into (ints, w) operands padded to bucket B."""
         K = len(cohort)
-        B = _bucket(K, M)
         actors = {e[1] for e in cohort}
         blen = len(cohort[0][5])
         ints = np.zeros((B, 3 + blen), np.int32)
         w = np.zeros(B, np.float32)
         for k, e in enumerate(cohort):
-            # self-pull (w=0) for non-communicating events
             ints[k, 0] = e[1]
-            ints[k, 1] = e[2] if e[4] else e[1]
+            if sr is not None:
+                ints[k, 1] = 1 if e[4] else 0  # push flag
+            else:
+                # self-pull (w=0) for non-communicating events
+                ints[k, 1] = e[2] if e[4] else e[1]
             ints[k, 2] = 1
             ints[k, 3:] = e[5]
             w[k] = e[3]
@@ -278,11 +546,159 @@ def run_batched(
                 (r for r in range(M) if r not in actors), np.int32, M - K
             )[: B - K]
             ints[K:, 0] = free
-            ints[K:, 1] = free
-        R, Mom = step(R, Mom, dx, dy, ints, w)
-        res.cohorts += 1
-        if cohort_log is not None:
-            cohort_log.append([(e[6], e[1], e[2] if e[4] else None) for e in cohort])
+            if sr is None:
+                ints[K:, 1] = free
+        return ints, w
+
+    chain_acc: list = []  # consecutive fusable cohorts awaiting one dispatch
+    chain_lo = chain_hi = 0  # row-bucket band of the accumulating chain
+
+    def flush_chain():
+        nonlocal R, Mom
+        if not chain_acc:
+            return
+        if len(chain_acc) == 1:
+            ints, w = pack(chain_acc[0], _bucket(len(chain_acc[0]), M))
+            R, Mom = step(R, Mom, dx, dy, ints, w)
+        else:
+            blen = len(chain_acc[0][0][5])
+            B = chain_hi  # uniform bucket per chain (the band's max)
+            L = _chain_bucket(len(chain_acc))
+            ints_seq = np.zeros((L, B, 3 + blen), np.int32)  # pads: valid=0
+            w_seq = np.zeros((L, B), np.float32)
+            for l, c in enumerate(chain_acc):
+                ints_seq[l], w_seq[l] = pack(c, B)
+            R, Mom = chain_step(R, Mom, dx, dy, ints_seq, w_seq)
+        res.dispatches += 1
+        chain_acc.clear()
+
+    def dispatch_burst(run):
+        """One serial-chain dispatch over a pop-ordered event run (see
+        ``_make_burst_body``)."""
+        nonlocal R, Mom
+        blen = len(run[0][5])
+        L = _chain_bucket(len(run), _BURST_CAP)
+        w = np.zeros(L, np.float32)
+        if sr is not None:  # ps-serial: [actor, push, valid, batch...]
+            ints = np.zeros((L, 3 + blen), np.int32)  # pads: valid=0 no-ops
+            for l, e in enumerate(run):
+                ints[l, 0] = e[1]
+                ints[l, 1] = 1 if e[4] else 0
+                ints[l, 2] = 1
+                ints[l, 3:] = e[5]
+                w[l] = e[3]
+            R, Mom = burst_step(R, Mom, dx, dy, ints, w)
+        else:  # gossip: one actor; [peer, valid, batch...]
+            ints = np.zeros((L, 2 + blen), np.int32)
+            for l, e in enumerate(run):
+                ints[l, 0] = e[2] if e[4] else e[1]
+                ints[l, 1] = 1
+                ints[l, 2:] = e[5]
+                w[l] = e[3]
+            R, Mom = burst_step(R, Mom, dx, dy, np.int32(run[0][1]), ints, w)
+        res.dispatches += 1
+
+    def chain_in(cohort):
+        """Feed one level into the band chain, flushing when it won't fit.
+
+        A chain accepts a level while the row buckets stay within a 2x
+        band (every level pads to the band's max, so the band bounds the
+        wasted rows at ~1/2) — this fuses both the wide plateau at the head
+        of a window and the tail of small levels, each into few dispatches,
+        without padding tail levels up to head-size buckets.
+        """
+        nonlocal chain_lo, chain_hi
+        B = _bucket(len(cohort), M)
+        blen = len(cohort[0][5])
+        if chain_acc and not (
+            len(chain_acc) < _CHAIN_CAP
+            and len(chain_acc[0][0][5]) == blen
+            and max(chain_hi, B) <= 2 * min(chain_lo, B)
+        ):
+            flush_chain()
+        if not chain_acc:
+            chain_lo = chain_hi = B
+        else:
+            chain_lo, chain_hi = min(chain_lo, B), max(chain_hi, B)
+        chain_acc.append(cohort)
+
+    def execute_window(levels, window):
+        """Dispatch one window.
+
+        Levels are always counted/logged (the logical cohort structure is
+        execution-independent).  Execution is fused three ways:
+
+        * ps-serial + fusion — the serialized row makes the *whole stream*
+          sequential, so the window executes as pop-ordered serial bursts
+          (one scan carrying the PS row + momentum), broken only where a
+          non-PS actor repeats (its second grad must re-read its own
+          written row), the batch length changes, or ``_BURST_CAP``.
+        * gossip + fusion — runs of >= _BURST_MIN consecutive singleton
+          levels of one worker go through the single-row burst scan;
+          everything else accumulates into band chains (``chain_in``).
+        * fusion off — one dispatch per level.
+        """
+        nonlocal R, Mom
+        for cohort in levels:
+            res.cohorts += 1
+            if cohort_log is not None:
+                cohort_log.append(
+                    [(e[6], e[1], e[2] if e[4] else None) for e in cohort]
+                )
+        if not fuse:
+            for cohort in levels:
+                ints, w = pack(cohort, _bucket(len(cohort), M))
+                R, Mom = step(R, Mom, dx, dy, ints, w)
+                res.dispatches += 1
+            return
+        if sr is not None:
+            run: list = []
+            actors: set[int] = set()
+            for e in window:
+                if run and (
+                    len(run) >= _BURST_CAP
+                    or len(e[5]) != len(run[0][5])
+                    or (e[1] != sr and e[1] in actors)
+                ):
+                    dispatch_burst(run)
+                    run, actors = [], set()
+                run.append(e)
+                if e[1] != sr:
+                    actors.add(e[1])
+            if run:
+                dispatch_burst(run)
+            return
+        # Gossip: group levels into maximal single-actor singleton runs
+        # (the busiest worker's sequential tail) vs the rest.  With
+        # use_mix_kernel the cohort path mixes through kernels/ops.mix_rows
+        # while bursts use the leaf rule — keep every dispatch on one rule
+        # by skipping bursts there (band chains still fuse).
+        burst_ok = not cfg.use_mix_kernel
+        runs: list[list] = []
+        for cohort in levels:
+            if (
+                len(cohort) == 1
+                and runs
+                and runs[-1][0] == "burst"
+                and len(runs[-1][1]) < _BURST_CAP
+                and runs[-1][1][-1][1] == cohort[0][1]
+                and len(runs[-1][1][-1][5]) == len(cohort[0][5])
+            ):
+                runs[-1][1].append(cohort[0])
+            elif len(cohort) == 1:
+                runs.append(["burst", [cohort[0]]])
+            else:
+                runs.append(["normal", cohort])
+        for kind, item in runs:
+            if kind == "burst" and len(item) >= _BURST_MIN and burst_ok:
+                flush_chain()  # preserve level order across dispatch paths
+                dispatch_burst(item)
+            elif kind == "burst":
+                for e in item:  # short run: ride the band chain instead
+                    chain_in([e])
+            else:
+                chain_in(item)
+        flush_chain()
 
     while ev < total:
         # ---- draw one window of events, stopping at the next boundary ----
@@ -294,9 +710,8 @@ def run_batched(
                 break
         t_last, ev_last = window[-1][0], window[-1][6]
 
-        # ---- execute the whole window, level by level ----
-        for cohort in schedule_window(window):
-            execute(cohort)
+        # ---- execute the whole window, level by level (chains fused) ----
+        execute_window(schedule_window(window), window)
 
         # ---- boundaries fire after the window, exactly as the reference
         # loop fires them after the boundary event (Monitor first, then the
@@ -311,5 +726,161 @@ def run_batched(
             eval_now(t_last, ev_last)
 
     eval_now(t, ev)
+    res.engine = "batched"
+    return res
+
+
+# --------------------------------------------------------------------------
+# Synchronous families: stacked round executor
+# --------------------------------------------------------------------------
+
+
+def _make_sync_round_body(algo: Algorithm, lr: float, mu: float):
+    """One synchronous round on stacked trees: vmapped masked grad steps +
+    the one-segment-mean group averaging (``reduce_groups_stacked``).
+
+    Signature: (R, Mom, dx, dy, mask, gid, idx) -> (R, Mom) with R/Mom
+    leaves (M, ...), ``idx`` (M, B) i32 per-worker batch indices, ``mask``
+    (M, B) f32 marking real samples (per-worker batch sizes may differ when
+    shards are smaller than cfg.batch_size), and ``gid`` (M,) i32 reduction
+    group ids.
+    """
+
+    def masked_ce(params, x, y, mask):
+        logits = _sim.mlp_apply(params, x)
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+        return ((logz - gold) * mask).sum() / mask.sum()
+
+    vgrad = jax.vmap(jax.value_and_grad(masked_ce))
+
+    def body(R, Mom, dx, dy, mask, gid, idx):
+        xb, yb = dx[idx], dy[idx]
+        _, grads = vgrad(R, xb, yb, mask)
+        Mom = tree_map(lambda m_, g: mu * m_ + g, Mom, grads)
+        x_half = tree_map(lambda p, m_: p - lr * m_, R, Mom)
+        R = algo.reduce_groups_stacked(x_half, gid)
+        return R, Mom
+
+    return body
+
+
+def _sync_steps_for(algo: Algorithm, lr: float, mu: float):
+    stacked = type(algo).reduce_groups_stacked is Algorithm.reduce_groups_stacked
+    key = (algo.cache_token(), "sync", float(lr), float(mu),
+           stacked or type(algo).__qualname__)
+    entry = _STEP_CACHE.get(key)
+    if entry is None:
+        body = _make_sync_round_body(algo, lr, mu)
+        step = jax.jit(body, donate_argnums=(0, 1))
+
+        def chain_body(R, Mom, dx, dy, mask, gid_seq, idx_seq):
+            def f(carry, xs):
+                gid, idx = xs
+                return body(carry[0], carry[1], dx, dy, mask, gid, idx), None
+
+            carry, _ = jax.lax.scan(f, (R, Mom), (gid_seq, idx_seq))
+            return carry
+
+        chain = jax.jit(chain_body, donate_argnums=(0, 1))
+        entry = (step, chain)
+        _STEP_CACHE[key] = entry
+    return entry
+
+
+def run_batched_sync(
+    algo: Algorithm,
+    cfg,
+    state,
+    rng: np.random.Generator,
+    p0,
+    link_model,
+    data_x: np.ndarray,
+    data_y: np.ndarray,
+    part_idx,
+    eval_x: np.ndarray,
+    eval_y: np.ndarray,
+    record_every: int,
+    res,
+):
+    """Round-based strategies on stacked trees; mutates and returns ``res``.
+
+    Host-side machinery is drawn in exactly the reference sync loop's order
+    (``select_groups`` -> ``round_timing`` -> per-worker batch draws), so
+    ``times``/``comm_time``/``compute_time`` are bit-identical; only the
+    device math is reassociated (vmapped grads, segment means).  Rounds
+    between record boundaries are scan-fused into one dispatch carrying the
+    donated (R, Mom) when ``cfg.fuse_chains`` is on.
+    """
+    M = cfg.n_workers
+    rounds = cfg.total_events // M
+    fuse = getattr(cfg, "fuse_chains", True)
+
+    R = tree_map(lambda l: jnp.array(jnp.broadcast_to(l[None], (M,) + l.shape)), p0)
+    Mom = tree_map(lambda l: jnp.zeros((M,) + l.shape, l.dtype), p0)
+    step, chain_step = _sync_steps_for(algo, cfg.lr, cfg.momentum)
+
+    bsz = [min(cfg.batch_size, len(part_idx[i])) for i in range(M)]
+    Bmax = max(bsz)
+    mask = np.zeros((M, Bmax), np.float32)
+    for i in range(M):
+        mask[i, : bsz[i]] = 1.0
+    maskj = jnp.asarray(mask)
+
+    ex, ey = jnp.asarray(eval_x), jnp.asarray(eval_y)
+    dx, dy = jnp.asarray(data_x), jnp.asarray(data_y)
+
+    def eval_now(t, ev):
+        loss, acc = _eval_stacked(R, ex, ey)
+        res.times.append(t)
+        res.losses.append(float(loss))
+        res.accs.append(float(acc))
+        res.events.append(ev)
+
+    every = max(1, record_every // M)
+    t = 0.0
+    r = 0
+    while r < rounds:
+        # ---- draw a block of rounds, ending at the next record boundary,
+        # consuming every host rng in reference order ----
+        gids, idxs = [], []
+        fire = False
+        while r < rounds:
+            groups = algo.select_groups(state, rng)
+            timing = algo.round_timing(state, cfg, link_model, groups, t)
+            t += timing.duration
+            res.comm_time += timing.comm
+            res.compute_time += timing.compute
+            gid = np.arange(M, dtype=np.int32)
+            for grp in groups:
+                if len(grp) >= 2:
+                    gid[grp] = min(grp)
+            idx = np.zeros((M, Bmax), np.int32)
+            for i in range(M):
+                idx[i, : bsz[i]] = rng.choice(part_idx[i], size=bsz[i])
+            gids.append(gid)
+            idxs.append(idx)
+            fire = r % every == 0
+            r += 1
+            if fire:
+                break
+
+        # ---- execute the block: one dispatch per block (scan over rounds),
+        # or per round with fusion off ----
+        if len(gids) > 1 and fuse:
+            R, Mom = chain_step(R, Mom, dx, dy, maskj,
+                                jnp.asarray(np.stack(gids)),
+                                jnp.asarray(np.stack(idxs)))
+            res.dispatches += 1
+        else:
+            for gid, idx in zip(gids, idxs):
+                R, Mom = step(R, Mom, dx, dy, maskj,
+                              jnp.asarray(gid), jnp.asarray(idx))
+                res.dispatches += 1
+        res.cohorts += len(gids)
+
+        if fire:
+            eval_now(t, r * M)
+    eval_now(t, rounds * M)
     res.engine = "batched"
     return res

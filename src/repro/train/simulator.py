@@ -15,18 +15,24 @@ registered strategy (or carries an ``Algorithm`` instance directly):
     for name in list_algorithms():
         simulate(SimConfig(algorithm=name, ...), ...)
 
-Two interchangeable engines execute the asynchronous families
-(``SimConfig.engine``; DESIGN.md §11):
+Two interchangeable engines execute every registered strategy
+(``SimConfig.engine``; DESIGN.md §11-§12):
 
-* ``"reference"`` — the original loop: one Python iteration + one jitted
-  dispatch per event, per-replica pytrees.  Slow but maximally simple; the
-  ground truth every strategy can be cross-checked against.
-* ``"batched"``  — the cohort engine (train/engine.py): replicas stacked
-  into leading-M pytrees, causally-independent event cohorts executed in one
-  donated vmapped call.  Parity with the reference engine is pinned by
-  tests/test_engines.py.
-* ``"auto"`` (default) — batched when the strategy supports it
-  (``Algorithm.supports_batched``), reference otherwise.
+* ``"reference"`` — the original loops: one Python iteration + one jitted
+  dispatch per event (async) or per worker per round (sync), per-replica
+  pytrees.  Slow but maximally simple; the ground truth every strategy is
+  cross-checked against.
+* ``"batched"``  — the batched engine (train/engine.py): replicas stacked
+  into leading-M pytrees.  Async families run causally-independent event
+  cohorts in one donated vmapped call each (ps-async through its
+  serialized-PS-row variant), consecutive small cohorts scan-fused into
+  single dispatches; synchronous families run each round as one dispatch
+  (segment-mean group averaging), rounds scan-fused between record
+  boundaries.  Parity with the reference engine is pinned by
+  tests/test_engines.py for every registered strategy.
+* ``"auto"`` (default) — consults ``Algorithm.supports_batched`` at
+  dispatch time (a capability check, not a family list): batched whenever
+  the strategy supports it, reference otherwise.
 
 Models are real JAX models (small MLPs) trained on real (synthetic) data —
 losses/accuracies are measured, not modeled.
@@ -116,15 +122,24 @@ class SimConfig:
     ps_node: int = 0  # which worker doubles as the PS (ps-* algorithms)
     ps_congestion: float = 0.4
     seed: int = 0
-    # Execution engine for async strategies: "auto" | "reference" | "batched"
-    # (see module docstring).  Explicitly requesting "batched" for a
-    # strategy without supports_batched (synchronous or ps-async) raises;
-    # "auto" routes those to the reference/round loop.
+    # Execution engine: "auto" | "reference" | "batched" (see module
+    # docstring).  Explicitly requesting "batched" for a strategy whose
+    # supports_batched capability check fails (exotic apply_comm or
+    # reduce_groups override without a batched form) raises; "auto" routes
+    # those to the reference loops.
     engine: str = "auto"
     # Batched engine only: route identity-delta mixes through the fused
     # kernels/ops.mix_rows path (Pallas gossip_mix on TPU, jnp reference on
     # CPU) instead of the tree-map leaf rule.
     use_mix_kernel: bool = False
+    # Batched engine only: fuse consecutive batch-length-homogeneous
+    # cohorts (async) / rounds between record boundaries (sync) into single
+    # lax.scan dispatches carrying (R, Mom), plus serial-burst scans for
+    # singleton-level runs.  Off = one dispatch per cohort or round; the
+    # logical cohort structure and all host-side results (times, events,
+    # comm/compute) are identical either way, device math to float
+    # tolerance (only SimResult.dispatches differs materially).
+    fuse_chains: bool = True
 
 
 @dataclass
@@ -137,7 +152,9 @@ class SimResult:
     compute_time: float = 0.0
     policy_updates: int = 0
     engine: str = "reference"  # which engine produced this result
-    cohorts: int = 0  # batched engine: number of fused dispatches
+    cohorts: int = 0  # batched engine: logical cohorts (levels / rounds)
+    dispatches: int = 0  # batched engine: actual device dispatches (<= cohorts
+    #                      when chain fusion packs several cohorts per call)
 
     def time_to_loss(self, target: float) -> float:
         for t, l in zip(self.times, self.losses):
@@ -170,7 +187,11 @@ def simulate(
     state = algo.init_state(cfg, M)
     res = SimResult()
 
-    # ---------------- engine selection (async families only) -----------------
+    # ---------------- engine selection --------------------------------------
+    # "auto" consults the strategy's supports_batched *capability* at
+    # dispatch time — there is no hard-coded family list, so a newly
+    # registered strategy rides the batched engine as soon as its semantics
+    # have a batched form.
     engine = cfg.engine
     if engine == "auto":
         engine = "batched" if algo.supports_batched else "reference"
@@ -182,8 +203,14 @@ def simulate(
                 f"engine='batched' cannot execute {algo.name!r} "
                 "(Algorithm.supports_batched is False); use engine='reference'"
             )
-        from repro.train.engine import run_batched
+        from repro.train.engine import run_batched, run_batched_sync
 
+        if algo.synchronous:
+            return run_batched_sync(
+                algo, cfg, state, rng, p0, link_model,
+                data_x, data_y, part_idx, eval_x, eval_y,
+                record_every, res,
+            )
         return run_batched(
             algo, cfg, state, rng, p0, link_model,
             data_x, data_y, part_idx, eval_x, eval_y,

@@ -1,10 +1,12 @@
-"""Engine-parity suite: the batched cohort engine vs the reference loop.
+"""Engine-parity suite: the batched engine vs the reference loops.
 
 The batched engine's whole value proposition is that it is *faithful*: for
-every gossip-family algorithm, the same seed must produce the same virtual
-timeline (host-side state is bit-identical by construction) and the same
-training trajectory (device math agrees to float tolerance).  These tests
-are the PR's contract — see DESIGN.md §11.
+every registered algorithm — async gossip, the serialized-PS-row ps-async
+variant, and the stacked synchronous round executor — the same seed must
+produce the same virtual timeline (host-side state is bit-identical by
+construction) and the same training trajectory (device math agrees to
+float tolerance).  These tests are the PR's contract — see DESIGN.md
+§11-§12.
 """
 
 import numpy as np
@@ -16,10 +18,14 @@ from repro.data.partition import uniform_partition
 from repro.data.synthetic import train_eval_split
 from repro.train.simulator import SimConfig, simulate
 
-# Enumerated from the registry so a newly @register'd gossip strategy is
-# covered automatically (and the suite fails loudly if it can't be).
+# Enumerated from the registry so a newly @register'd strategy is covered
+# automatically (and the suite fails loudly if it can't be).
 GOSSIP = [n for n in list_algorithms() if get_algorithm(n).family == "gossip"]
-NON_BATCHED = [n for n in list_algorithms() if not get_algorithm(n).supports_batched]
+SYNC = [n for n in list_algorithms() if get_algorithm(n).synchronous]
+ASYNC_NON_GOSSIP = [
+    n for n in list_algorithms()
+    if not get_algorithm(n).synchronous and get_algorithm(n).family != "gossip"
+]
 
 
 @pytest.fixture(scope="module")
@@ -68,10 +74,12 @@ def _assert_parity(ref, bat, loss_tol=5e-4):
 # --------------------------------------------------------------------------
 
 
-def test_every_gossip_algorithm_is_batchable():
-    """The parity suite below must cover the whole gossip family."""
-    assert GOSSIP, "registry lost its gossip algorithms?"
-    for name in GOSSIP:
+def test_every_registered_strategy_is_batchable():
+    """Full coverage: every registered strategy rides the batched engine
+    (the acceptance criterion of the full-coverage refactor)."""
+    names = list_algorithms()
+    assert len(names) >= 8, names
+    for name in names:
         assert get_algorithm(name).supports_batched, name
 
 
@@ -140,6 +148,126 @@ def test_cohort_invariants_non_uniform_batch_sizes(data):
                 assert ib != ia and mb != ia
 
 
+# --------------------------------------------------------------------------
+# Parity: the serialized-PS-row variant (ps-async) and the stacked
+# synchronous round executor (ps-sync / allreduce / prague)
+# --------------------------------------------------------------------------
+
+
+def test_engine_parity_ps_async(data):
+    """ps-async's peer-replica mutation batches through the ps-serial
+    variant: cohort grad steps vmapped, the PS running average folded as a
+    pop-ordered chain inside the dispatch."""
+    ref = _sim("ps-async", "reference", data)
+    bat = _sim("ps-async", "batched", data)
+    assert bat.cohorts > 0 and bat.cohorts < bat.events[-1]
+    _assert_parity(ref, bat)
+
+
+def test_engine_parity_ps_async_skewed_batches(data):
+    parts = _skewed_parts(data, 8)
+    kw = dict(parts=parts, batch_size=150)
+    ref = _sim("ps-async", "reference", data, **kw)
+    bat = _sim("ps-async", "batched", data, **kw)
+    _assert_parity(ref, bat)
+
+
+def test_engine_parity_ps_async_multi_cluster(data):
+    M = 16
+    topo = Topology.multi_cluster(M, workers_per_host=4, hosts_per_pod=1,
+                                  pods_per_cluster=2)
+    ref = _sim("ps-async", "reference", data, M=M, topo=topo)
+    bat = _sim("ps-async", "batched", data, M=M, topo=topo)
+    _assert_parity(ref, bat)
+
+
+def test_ps_serial_cohort_invariants(data):
+    """ps-serial scheduling contract: every event executed exactly once,
+    per-worker order preserved, distinct actors per cohort, and a PS-node
+    local step never shares a cohort with an earlier-popped push (its grad
+    step must observe every prior push's effect on the PS row)."""
+    log = []
+    bat = _sim("ps-async", "batched", data, events=450, log=log)
+    assert sum(len(c) for c in log) == 450
+    assert bat.cohorts == len(log)
+    assert max(len(c) for c in log) > 1  # pushes actually batch
+    ps = 0  # default cfg.ps_node
+    last_cohort_of_worker: dict[int, int] = {}
+    seen = set()
+    for ci, cohort in enumerate(log):
+        actors = [i for (_, i, _) in cohort]
+        assert len(set(actors)) == len(actors)
+        for k, (ev_id, i, peer) in enumerate(cohort):
+            assert ev_id not in seen
+            seen.add(ev_id)
+            assert last_cohort_of_worker.get(i, -1) < ci
+            last_cohort_of_worker[i] = ci
+            if i == ps and peer is None:
+                # PS local step: no earlier-popped push may share the cohort
+                assert all(p is None for (_, _, p) in cohort[:k])
+
+
+@pytest.mark.parametrize("name", SYNC)
+def test_engine_parity_sync(name, data):
+    """Synchronous rounds execute as stacked one-segment-mean dispatches;
+    host-side timing/group/batch draws are bit-identical to the reference
+    round loop."""
+    assert name in ("allreduce", "prague", "ps-sync")  # suite covers all
+    ref = _sim(name, "reference", data)
+    bat = _sim(name, "batched", data)
+    assert bat.cohorts == ref.events[-1] // 8  # one logical cohort per round
+    assert bat.dispatches < bat.cohorts  # rounds scan-fuse between records
+    _assert_parity(ref, bat)
+
+
+def test_engine_parity_sync_skewed_batches(data):
+    """Per-worker batch sizes differ -> the masked-mean grad path."""
+    parts = _skewed_parts(data, 8)
+    kw = dict(parts=parts, batch_size=150)
+    ref = _sim("prague", "reference", data, **kw)
+    bat = _sim("prague", "batched", data, **kw)
+    _assert_parity(ref, bat)
+
+
+# --------------------------------------------------------------------------
+# Chain fusion: scan-fused execution is an implementation detail — the
+# logical cohort structure and results are identical with it on or off
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["netmax", "ps-async"])
+def test_chain_fusion_preserves_cohort_structure(name, data):
+    log_f, log_u = [], []
+    fused = _sim(name, "batched", data, log=log_f)  # fuse_chains defaults on
+    plain = _sim(name, "batched", data, log=log_u, fuse_chains=False)
+    assert log_f == log_u
+    assert fused.cohorts == plain.cohorts == len(log_f)
+    assert plain.dispatches == plain.cohorts  # unfused: one dispatch/cohort
+    assert fused.dispatches < fused.cohorts  # fusion actually packs
+    assert fused.times == plain.times
+    assert fused.events == plain.events
+    assert fused.comm_time == plain.comm_time
+    np.testing.assert_allclose(fused.losses, plain.losses, rtol=1e-5, atol=1e-6)
+
+
+def test_chain_fusion_dispatch_reduction(data):
+    """ISSUE 3 acceptance: chain fusion cuts device dispatches >= 2x vs the
+    one-dispatch-per-cohort baseline."""
+    bat = _sim("netmax", "batched", data, M=16, events=800, record_every=800,
+               monitor_period=1e9)
+    assert bat.dispatches * 2 <= bat.cohorts
+
+
+def test_sync_fusion_preserves_results(data):
+    fused = _sim("ps-sync", "batched", data)
+    plain = _sim("ps-sync", "batched", data, fuse_chains=False)
+    assert fused.cohorts == plain.cohorts
+    assert plain.dispatches == plain.cohorts
+    assert fused.dispatches < fused.cohorts
+    assert fused.times == plain.times
+    np.testing.assert_allclose(fused.losses, plain.losses, rtol=1e-5, atol=1e-6)
+
+
 def test_engine_parity_with_mix_kernel(data):
     """The kernels/ops.mix_rows path computes (1-w)h + w p instead of
     h + w(p-h) — algebraically identical, so slightly looser tolerance."""
@@ -148,17 +276,73 @@ def test_engine_parity_with_mix_kernel(data):
     _assert_parity(ref, bat, loss_tol=2e-3)
 
 
-def test_auto_engine_picks_batched_for_gossip_reference_for_rest(data):
-    bat = _sim("netmax", "auto", data, events=200)
-    assert bat.engine == "batched"
-    ref = _sim("ps-async", "auto", data, events=200)
-    assert ref.engine == "reference"
+def test_auto_engine_consults_supports_batched(data):
+    """engine='auto' is a capability check at dispatch time, not a family
+    list: every registered strategy routes batched, and a strategy whose
+    capability check fails (exotic apply_comm override, no batched variant)
+    routes to the reference loop."""
+    for name in ("netmax", "ps-async", "ps-sync", "allreduce"):
+        assert _sim(name, "auto", data, events=160).engine == "batched", name
+
+    from repro.algos.netmax import GossipAlgorithm
+
+    class ExoticComm(GossipAlgorithm):
+        name = "exotic-comm"
+
+        def apply_comm(self, state, cfg, replicas, i, m, x_half):
+            replicas[i] = x_half  # side effects the engine can't replay
+            return False
+
+    algo = ExoticComm()
+    assert not algo.supports_batched
+    assert _sim(algo, "auto", data, events=160).engine == "reference"
 
 
 def test_batched_engine_rejects_unsupported_algorithms(data):
-    for name in NON_BATCHED:
+    """Explicit engine='batched' still refuses strategies whose overridden
+    per-event/round semantics have no batched form."""
+    from repro.algos.collective import Allreduce
+    from repro.algos.netmax import GossipAlgorithm
+
+    class ExoticComm(GossipAlgorithm):
+        name = "exotic-comm"
+
+        def apply_comm(self, state, cfg, replicas, i, m, x_half):
+            replicas[i] = x_half
+            return False
+
+    class ExoticReduce(Allreduce):
+        name = "exotic-reduce"
+
+        def reduce_groups(self, replicas, groups):
+            pass  # non-default group semantics
+
+    for algo in (ExoticComm(), ExoticReduce()):
+        assert not algo.supports_batched
         with pytest.raises(ValueError, match="batched"):
-            _sim(name, "batched", data, events=100)
+            _sim(algo, "batched", data, events=100)
+
+
+def test_unknown_batched_variant_fails_loudly(data):
+    """A declared-but-unimplemented batched_variant must raise, not fall
+    through to gossip semantics."""
+    from repro.algos.netmax import GossipAlgorithm
+
+    class PushSum(GossipAlgorithm):
+        name = "push-sum"
+
+        @property
+        def batched_variant(self):
+            return "push-sum"
+
+        def apply_comm(self, state, cfg, replicas, i, m, x_half):
+            replicas[i] = x_half
+            return False
+
+    algo = PushSum()
+    assert algo.supports_batched  # the declared variant claims capability
+    with pytest.raises(NotImplementedError, match="push-sum"):
+        _sim(algo, "batched", data, events=100)
 
 
 def test_unknown_engine_rejected(data):

@@ -127,6 +127,174 @@ def test_uniform_policy_rows():
     assert np.all(np.diag(P) == 0)
 
 
+# --------------------------------------------------------------------------
+# Vectorization parity: the broadcasted Algorithm-3 hot path must match the
+# historical per-(i, m) Python-loop implementation EXACTLY (bit-for-bit),
+# including the simplex input (variable order changes pivot paths).
+# --------------------------------------------------------------------------
+
+
+def _t_bar_interval_loop(T, d, alpha, rho):
+    """Pre-vectorization reference implementation (verbatim)."""
+    M = T.shape[0]
+    L = 0.0
+    U = np.inf
+    for i in range(M):
+        Li = alpha * rho / M * sum(
+            T[i, m] * (d[i, m] + d[m, i]) for m in range(M) if m != i
+        )
+        edge_times = [T[i, m] for m in range(M) if m != i and d[i, m]]
+        if not edge_times:
+            return (np.inf, -np.inf)
+        Ui = max(edge_times) / M
+        L = max(L, Li)
+        U = min(U, Ui)
+    return L, U
+
+
+def _solve_policy_lp_loop(T, d, alpha, rho, t_bar):
+    """Pre-vectorization reference implementation (verbatim)."""
+    from repro.core.policy import _FLOOR_MARGIN
+    from repro.solver.lp import solve_lp
+
+    M = T.shape[0]
+    idx = {}
+    for i in range(M):
+        idx[(i, i)] = len(idx)
+        for m in range(M):
+            if m != i and d[i, m]:
+                idx[(i, m)] = len(idx)
+    n = len(idx)
+    c = np.zeros(n)
+    lb = np.zeros(n)
+    ub = np.ones(n)
+    for (i, m), j in idx.items():
+        if i == m:
+            c[j] = 1.0
+        else:
+            lb[j] = alpha * rho * (d[i, m] + d[m, i]) + _FLOOR_MARGIN
+    A = np.zeros((2 * M, n))
+    b = np.zeros(2 * M)
+    for i in range(M):
+        for m in range(M):
+            if m != i and d[i, m]:
+                A[i, idx[(i, m)]] = T[i, m]
+        b[i] = M * t_bar
+        A[M + i, idx[(i, i)]] = 1.0
+        for m in range(M):
+            if m != i and d[i, m]:
+                A[M + i, idx[(i, m)]] = 1.0
+        b[M + i] = 1.0
+    res = solve_lp(c, A, b, lb=lb, ub=ub)
+    if not res.ok:
+        return None
+    P = np.zeros((M, M))
+    for (i, m), j in idx.items():
+        P[i, m] = max(res.x[j], 0.0)
+    return P
+
+
+def _build_Y_loop(P, alpha, rho, d, T=None):
+    """Pre-vectorization reference implementation (verbatim)."""
+    M = P.shape[0]
+    p = consensus.worker_activation_probs(P, T, d)
+    g = consensus.gamma_matrix(P, d)
+    ar = alpha * rho
+    off = np.zeros((M, M))
+    pg = np.where(P > 0, P * g, 0.0)
+    pg2 = np.where(P > 0, P * g * g, 0.0)
+    for i in range(M):
+        for m in range(M):
+            if m == i:
+                continue
+            lin = ar * (p[i] * pg[i, m] + p[m] * pg[m, i])
+            quad = ar * ar * (p[i] * pg2[i, m] + p[m] * pg2[m, i])
+            off[i, m] = lin - quad
+    Y = off.copy()
+    for i in range(M):
+        lin = 2.0 * ar * (p[i] * pg[i, :]).sum()
+        quad = ar * ar * ((p[i] * pg2[i, :]) + (p * pg2[:, i])).sum()
+        Y[i, i] = 1.0 - lin + quad
+    return Y
+
+
+def _random_instance(seed, M):
+    rng = np.random.default_rng(seed)
+    T = hetero_times(M, seed)
+    d = np.ones((M, M)) - np.eye(M)
+    if seed % 3 == 0:  # masked topologies too (symmetric, no isolated rows)
+        d = (rng.uniform(size=(M, M)) < 0.7).astype(float)
+        d = np.maximum(d, d.T)
+        np.fill_diagonal(d, 0.0)
+        for i in range(M):
+            if d[i].sum() == 0:
+                j = (i + 1) % M
+                d[i, j] = d[j, i] = 1.0
+    return T, d
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 1000), st.sampled_from([4, 6, 8, 12]))
+def test_vectorized_policy_math_exactly_matches_loop_reference(seed, M):
+    T, d = _random_instance(seed, M)
+    alpha = 0.1
+    rng = np.random.default_rng(seed + 1)
+    rho = float(rng.uniform(0.05, 1.0))
+    L, U = policy._t_bar_interval(T, d, alpha, rho)
+    Lr, Ur = _t_bar_interval_loop(T, d, alpha, rho)
+    assert L == Lr and U == Ur  # exact, not approx
+    if not np.isfinite(U) or U <= L:
+        return
+    for frac in (0.25, 0.75):
+        t_bar = L + (U - L) * frac
+        Pn = policy._solve_policy_lp(T, d, alpha, rho, t_bar)
+        Pr = _solve_policy_lp_loop(T, d, alpha, rho, t_bar)
+        assert (Pn is None) == (Pr is None)
+        if Pn is None:
+            continue
+        np.testing.assert_array_equal(Pn, Pr)  # bit-identical
+        np.testing.assert_array_equal(
+            consensus.build_Y(Pn, alpha, rho, d),
+            _build_Y_loop(Pn, alpha, rho, d),
+        )
+
+
+def test_vectorized_policy_math_spot_check():
+    """Non-hypothesis spot checks so the exact-parity pin runs in stub mode
+    (the tier-1 contract) too."""
+    for seed, M in ((0, 4), (3, 6), (7, 8), (12, 12)):
+        T, d = _random_instance(seed, M)
+        rho = 0.3
+        assert policy._t_bar_interval(T, d, 0.1, rho) == _t_bar_interval_loop(
+            T, d, 0.1, rho
+        )
+        L, U = policy._t_bar_interval(T, d, 0.1, rho)
+        if np.isfinite(U) and U > L:
+            t_bar = L + (U - L) * 0.5
+            Pn = policy._solve_policy_lp(T, d, 0.1, rho, t_bar)
+            Pr = _solve_policy_lp_loop(T, d, 0.1, rho, t_bar)
+            assert (Pn is None) == (Pr is None)
+            if Pn is not None:
+                np.testing.assert_array_equal(Pn, Pr)
+                np.testing.assert_array_equal(
+                    consensus.build_Y(Pn, 0.1, rho, d),
+                    _build_Y_loop(Pn, 0.1, rho, d),
+                )
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 1000), st.sampled_from([3, 5, 9, 16]))
+def test_vectorized_uniform_policy_exactly_matches_loop(seed, M):
+    _, d = _random_instance(seed, M)
+    P = policy.uniform_policy(d)
+    ref = np.zeros((M, M))
+    for i in range(M):
+        nbrs = [m for m in range(M) if m != i and d[i, m]]
+        for m in nbrs:
+            ref[i, m] = 1.0 / len(nbrs)
+    np.testing.assert_array_equal(P, ref)
+
+
 def test_approximation_ratio_finite():
     M = 8
     T = hetero_times(M, 0)

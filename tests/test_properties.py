@@ -100,6 +100,92 @@ def test_slow_link_redraw_changes_edge_over_time():
 
 
 # --------------------------------------------------------------------------
+# WAN scenario options (correlated jitter + per-direction asymmetry):
+# default-off keeps every historical trace pinned; enabled they are
+# seedable, directional, and temporally correlated — on WAN links only.
+# --------------------------------------------------------------------------
+
+
+def _wan_topo(M=32):
+    return Topology.multi_cluster(M, workers_per_host=4, hosts_per_pod=1,
+                                  pods_per_cluster=2)
+
+
+def test_wan_options_default_off_is_bit_identical():
+    """Default-off must not change any draw: no extra rng consumed, no
+    factor applied.  Pinned against values frozen *before* the WAN options
+    existed (a same-config A/B comparison could not catch a regression
+    that perturbs both models in lockstep)."""
+    topo = _wan_topo()
+    frozen = [  # LinkTimeModel(topo, seed=7).network_time(0, 31, now=13k),
+        # recorded pre-wan-options; numpy Generator draws are
+        # platform-stable, so exact equality is the contract.
+        0.473465577094706,
+        0.45909470234202004,
+        0.4692110018667875,
+        0.4567808686163859,
+        0.48144561899128135,
+    ]
+    a = LinkTimeModel(topo, seed=7)
+    b = LinkTimeModel(topo, seed=7, wan_jitter=0.0, wan_asymmetry=0.0)
+    for k, expect in enumerate(frozen):
+        now = 13.0 * k
+        assert a.network_time(0, 31, now=now) == expect
+        assert b.network_time(0, 31, now=now) == expect
+
+
+def test_wan_stream_isolated_from_base_draws():
+    """Enabling WAN options must not perturb the base jitter / slow-link
+    sequence (they draw from a dedicated stream)."""
+    topo = _wan_topo()
+    plain = LinkTimeModel(topo, seed=3)
+    wan = LinkTimeModel(topo, seed=3, wan_jitter=0.25, wan_asymmetry=0.4)
+    for k in range(20):
+        now = 40.0 * k
+        plain.advance_to(now)
+        wan.advance_to(now)
+        assert plain._slow_edge == wan._slow_edge
+        assert plain._slow_factor == wan._slow_factor
+        # intra-cluster links are untouched by the WAN factors entirely
+        assert plain.network_time(0, 1, now=now) == wan.network_time(0, 1, now=now)
+
+
+def test_wan_asymmetry_directional_deterministic_and_mean_preserving():
+    topo = _wan_topo()
+    kw = dict(jitter=0.0, slowdown_range=(1.0, 1.0), wan_asymmetry=0.5)
+    a = LinkTimeModel(topo, seed=7, **kw)
+    b = LinkTimeModel(topo, seed=7, **kw)
+    up, down = a.network_time(0, 31), a.network_time(31, 0)
+    assert up != down  # per-direction bandwidth skew
+    assert up == b.network_time(0, 31)  # seedable
+    base = a.base_times["inter_cluster"]
+    # antisymmetric in log space: up * down == base^2
+    assert up * down == pytest.approx(base * base, rel=1e-12)
+    # wan_seed overrides the derived stream
+    c = LinkTimeModel(topo, seed=7, wan_seed=99, **kw)
+    assert c.network_time(0, 31) != up
+
+
+def test_wan_jitter_correlated_and_seedable():
+    topo = _wan_topo()
+    kw = dict(jitter=0.0, slowdown_range=(1.0, 1.0), wan_jitter=0.3,
+              wan_jitter_corr=0.9, wan_jitter_interval=60.0)
+    a = LinkTimeModel(topo, seed=7, **kw)
+    b = LinkTimeModel(topo, seed=7, **kw)
+    sa = [a.network_time(0, 31, now=60.0 * k) for k in range(60)]
+    sb = [b.network_time(0, 31, now=60.0 * k) for k in range(60)]
+    assert sa == sb  # seedable / deterministic
+    assert len(set(sa)) > 1  # actually moves
+    x = np.log(np.array(sa))
+    lag1 = float(np.corrcoef(x[:-1], x[1:])[0, 1])
+    assert lag1 > 0.3  # AR(1) with corr=0.9: strong temporal correlation
+    # both directions share the congestion state (it models the shared link)
+    assert a.network_time(0, 31, now=3600.0) == a.network_time(31, 0, now=3600.0)
+    # iteration_time still respects the compute floor with WAN factors on
+    assert a.iteration_time(0, 31, now=3660.0) >= a.compute_time
+
+
+# --------------------------------------------------------------------------
 # guard_policy_rows: every row stays a usable sampling distribution
 # --------------------------------------------------------------------------
 
