@@ -185,6 +185,134 @@ def bench_simulator_engines(sizes=(8, 32, 64, 128), events=2000,
     return results
 
 
+def bench_policy_solver(sizes=(16, 32, 64, 128), K=8, R=8, dense_cap=32,
+                        out_path=None):
+    """Algorithm-3 policy-generation cost across the LP solver stack
+    (ISSUE 4 acceptance): revised simplex with warm-started (rho, t_bar)
+    sweeps vs cold restarts vs the dense two-phase oracle, on full graphs
+    and multi-cluster (sparse-connectivity) masks; writes BENCH_policy.json.
+
+    The dense oracle builds an O(M^2) x O(M^2) tableau, so it is only run
+    up to ``dense_cap`` workers — beyond that its cell records the reason
+    instead of a number (at M=128 a full-graph tableau alone is ~6 GB and
+    the pre-PR behaviour was an iteration-cap blowup into the uniform
+    AD-PSGD fallback).
+    """
+    import time as _time
+
+    import numpy as np
+
+    from repro.core import policy
+    from repro.core.nettime import Topology
+    from repro.solver.lp import lp_method
+
+    def hetero_T(M, seed=0):
+        rng = np.random.default_rng(seed)
+        T = rng.uniform(0.01, 0.05, size=(M, M))
+        T = (T + T.T) / 2
+        i, m = rng.choice(M, size=2, replace=False)
+        T[i, m] = T[m, i] = T[i, m] * 10.0
+        np.fill_diagonal(T, 0.0)
+        return T
+
+    def multi_cluster_instance(M, seed=0):
+        """Tiered times from Topology.multi_cluster; connectivity = full
+        mesh inside a cluster + gateway links (host-0 workers) across —
+        the sparse regime where the live-edge variable set shrinks."""
+        topo = Topology.multi_cluster(M)
+        tier_t = {"intra_host": 0.005, "intra_pod": 0.02,
+                  "inter_pod": 0.05, "inter_cluster": 0.4}
+        rng = np.random.default_rng(seed)
+        jit = rng.uniform(0.9, 1.1, size=(M, M))
+        jit = (jit + jit.T) / 2
+        T = np.zeros((M, M))
+        d = np.zeros((M, M))
+        cluster_size = max(1, M // max(1, topo.n_clusters))
+        for i in range(M):
+            for m in range(M):
+                if i == m:
+                    continue
+                T[i, m] = tier_t[topo.tier(i, m)] * jit[i, m]
+                same = topo.cluster_of(i) == topo.cluster_of(m)
+                gateway = (i % cluster_size == 0) and (m % cluster_size == 0)
+                if same or gateway:
+                    d[i, m] = 1.0
+        return T, d
+
+    results = {}
+    for topo_name in ("full", "multi_cluster"):
+        results[topo_name] = {}
+        for M in sizes:
+            if topo_name == "full":
+                T, d = hetero_T(M), None
+            else:
+                T, d = multi_cluster_instance(M)
+
+            def timed(**kw):
+                t0 = _time.time()
+                res = policy.generate_policy_matrix(0.1, K=K, R=R, T=T, d=d, **kw)
+                return res, _time.time() - t0
+
+            warm_res, warm_s = timed()
+            cold_res, cold_s = timed(warm_start=False)
+            used_fallback = warm_res.n_lp_feasible == 0 and not any(
+                np.isfinite(g[3]) for g in warm_res.grid
+            )
+            row = dict(
+                warm_s=round(warm_s, 4),
+                cold_s=round(cold_s, 4),
+                pivots_warm=warm_res.n_pivots,
+                pivots_cold=cold_res.n_pivots,
+                warm_hit_rate=round(
+                    warm_res.n_warm_used / max(1, warm_res.n_solves), 3
+                ),
+                lp_solves=warm_res.n_solves,
+                lp_feasible=sum(1 for g in warm_res.grid if np.isfinite(g[3])),
+                lp_grid=len(warm_res.grid),
+                uniform_fallback=bool(used_fallback),
+                T_convergence=round(float(warm_res.T_convergence), 4),
+            )
+            if M <= dense_cap:
+                with lp_method("dense"):
+                    dense_res, dense_s = timed()
+                row["dense_s"] = round(dense_s, 4)
+                row["speedup_vs_dense"] = round(dense_s / warm_s, 1)
+                row["same_grid_point_as_dense"] = bool(
+                    warm_res.rho == dense_res.rho
+                    and warm_res.t_bar == dense_res.t_bar
+                )
+            else:
+                row["dense_s"] = None
+                row["dense_skipped"] = (
+                    f"dense tableau is O(M^4) memory/time at M={M} "
+                    f"(> dense_cap={dense_cap}); pre-PR this path hit the "
+                    "iteration cap and fell back to the uniform policy"
+                )
+            results[topo_name][f"M={M}"] = row
+            msg = (f"policy/{topo_name}/M={M},{warm_s * 1e6:.0f},"
+                   f"warm={warm_s:.3f}s_cold={cold_s:.3f}s_"
+                   f"pivots={row['pivots_warm']}v{row['pivots_cold']}_"
+                   f"hit={row['warm_hit_rate']}")
+            if row.get("dense_s") is not None:
+                msg += f"_dense={row['dense_s']:.3f}s_x{row['speedup_vs_dense']}"
+            print(msg)
+
+    out = {
+        "suite": "policy-solver",
+        "K": K,
+        "R": R,
+        "sizes": list(sizes),
+        "solver": "revised simplex (implicit bounds, warm-started dual "
+                  "restarts) vs dense two-phase oracle",
+        "results": results,
+    }
+    path = Path(out_path) if out_path else ROOT / "BENCH_policy.json"
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote {path}")
+    return results
+
+
 def bench_roofline_summary():
     """Summarize dry-run artifacts (if present) into roofline terms."""
     from repro.analysis.roofline import from_record
@@ -218,8 +346,11 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--suite", default="all",
                     choices=["all", "paper", "kernels", "roofline", "quick",
-                             "algos", "simulator"])
+                             "algos", "simulator", "policy"])
     ap.add_argument("--events", type=int, default=4000)
+    ap.add_argument("--policy-sizes", type=int, nargs="+", default=None,
+                    help="worker counts for --suite policy "
+                         "(default 16 32 64 128; CI smoke passes 16 32)")
     args = ap.parse_args()
 
     from benchmarks import paper_tables as pt
@@ -233,6 +364,9 @@ def main() -> None:
         )
     if args.suite in ("all", "simulator"):
         out["simulator_engines"] = bench_simulator_engines()
+    if args.suite in ("all", "policy"):
+        sizes = tuple(args.policy_sizes) if args.policy_sizes else (16, 32, 64, 128)
+        out["policy_solver"] = bench_policy_solver(sizes=sizes)
     if args.suite in ("all", "paper"):
         out["policy_generation"] = pt.bench_policy_generation()
         out["epoch_time_hetero"] = pt.bench_epoch_time(hetero=True)

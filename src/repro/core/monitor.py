@@ -73,6 +73,11 @@ class NetworkMonitor:
     _missed: np.ndarray = field(init=False)
     policy: PolicyResult | None = field(init=False, default=None)
     history: list = field(init=False, default_factory=list)
+    # Warm-start protocol (DESIGN.md §13): the last refresh's optimal LP
+    # basis, threaded into the next Algorithm-3 sweep so steady-state
+    # re-solves are dual-simplex restarts of a handful of pivots.  Opaque;
+    # the solver validates shape and discards it after membership changes.
+    _basis: object | None = field(init=False, default=None)
 
     def __post_init__(self):
         M = self.n_workers
@@ -113,7 +118,11 @@ class NetworkMonitor:
         np.fill_diagonal(conn, 0.0)
         conn[~live, :] = 0.0
         conn[:, ~live] = 0.0
-        res = generate_policy_matrix(self.alpha, self.K, self.R, T, d=conn, eps=self.eps)
+        res = generate_policy_matrix(
+            self.alpha, self.K, self.R, T, d=conn, eps=self.eps,
+            warm=self._basis,
+        )
+        self._basis = res.basis
         self.policy = res
         self.history.append(
             dict(
@@ -122,6 +131,8 @@ class NetworkMonitor:
                 lambda2=res.lambda2,
                 T_convergence=res.T_convergence,
                 n_live=int(live.sum()),
+                n_pivots=res.n_pivots,
+                n_warm_used=res.n_warm_used,
             )
         )
         return res

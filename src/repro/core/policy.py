@@ -5,6 +5,15 @@ a nested grid search over the mixing weight rho (outer, K points) and the
 target mean iteration time t_bar (inner, R points).  Each grid point solves
 the LP of Eq. (14) — minimize self-selection subject to Eqs. (10)-(13) —
 and is scored by the convergence-time model T = t_bar * ln(eps)/ln(lambda2).
+
+Solver hot path (DESIGN.md §13): every grid point is solved by the
+bounded-variable revised simplex with an **optimal-basis warm start**
+threaded across the whole sweep via ``WarmStartCarry`` — across the t_bar
+grid only ``b`` changes and across rho steps only the Eq.-11 bound floors
+change, so each re-solve is a dual-simplex restart of a handful of pivots
+instead of a from-scratch two-phase solve.  The Monitor threads its carry
+across policy refreshes too (steady-state re-solves start from the last
+optimal basis).
 """
 
 from __future__ import annotations
@@ -14,10 +23,28 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.core import consensus, theory
-from repro.solver.lp import solve_lp
+from repro.solver.lp import BasisState, solve_lp
 
 # Strictness margin for the strict inequality Eq. (11): p > alpha*rho*(d+d').
 _FLOOR_MARGIN = 1e-6
+
+
+@dataclass
+class WarmStartCarry:
+    """Mutable warm-start state threaded across an Eq.-14 grid sweep.
+
+    ``basis`` is the opaque ``BasisState`` of the most recent *feasible*
+    solve (infeasible grid points return no reusable basis); the counters
+    are diagnostics surfaced on ``PolicyResult`` and in BENCH_policy.json.
+    """
+
+    basis: BasisState | None = None
+    n_solves: int = 0
+    n_warm_used: int = 0
+    n_pivots: int = 0
+    # ``enabled=False`` keeps the counters but never feeds the basis back
+    # into a solve — the cold-start baseline for BENCH_policy.json.
+    enabled: bool = True
 
 
 @dataclass
@@ -31,6 +58,14 @@ class PolicyResult:
     n_lp_solved: int = 0
     n_lp_feasible: int = 0
     grid: list = field(default_factory=list)
+    # Warm-start protocol: last optimal LP basis (opaque) + sweep counters.
+    # n_solves counts actual simplex runs across the whole sweep (grid
+    # points skipped by the feasibility pre-check never run one), so it is
+    # the denominator for a warm-start hit rate.
+    basis: BasisState | None = None
+    n_pivots: int = 0
+    n_warm_used: int = 0
+    n_solves: int = 0
 
     @property
     def ok(self) -> bool:
@@ -38,14 +73,22 @@ class PolicyResult:
 
 
 def _solve_policy_lp(
-    T: np.ndarray, d: np.ndarray, alpha: float, rho: float, t_bar: float
+    T: np.ndarray,
+    d: np.ndarray,
+    alpha: float,
+    rho: float,
+    t_bar: float,
+    carry: WarmStartCarry | None = None,
 ) -> np.ndarray | None:
     """LP of Eq. (14): min sum_i p_{i,i} s.t. Eqs. (10)-(13).
 
-    Variables: p_{i,m} for every edge (d_{i,m}=1) plus every diagonal p_{i,i}.
-    Eq. (10): per-worker expected iteration time == M * t_bar (equalizes p_i).
-    Eq. (11): p_{i,m} >= alpha*rho*(d_{i,m}+d_{m,i}) + margin on edges.
-    Eq. (13): rows sum to one (diagonal included).
+    Variables: p_{i,m} for every edge (d_{i,m}=1) plus every diagonal p_{i,i}
+    — sparse connectivity masks shrink the variable set to live edges, which
+    is where multi-cluster topologies win.  Eq. (10): per-worker expected
+    iteration time == M * t_bar (equalizes p_i).  Eq. (11): p_{i,m} >=
+    alpha*rho*(d_{i,m}+d_{m,i}) + margin on edges.  Eq. (13): rows sum to
+    one (diagonal included).  ``carry`` (optional) supplies the warm-start
+    basis for the solve and receives the updated one.
     """
     M = T.shape[0]
     eye = np.eye(M, dtype=bool)
@@ -73,7 +116,14 @@ def _solve_policy_lp(
     A[M + np.arange(M), start] = 1.0
     A[M + ii, pos] = 1.0
     b[M:] = 1.0
-    res = solve_lp(c, A, b, lb=lb, ub=ub)
+    warm = carry.basis if carry is not None and carry.enabled else None
+    res = solve_lp(c, A, b, lb=lb, ub=ub, warm=warm)
+    if carry is not None:
+        carry.n_solves += 1
+        carry.n_pivots += res.pivots
+        carry.n_warm_used += int(res.warm_used)
+        if res.basis is not None:
+            carry.basis = res.basis
     if not res.ok:
         return None
     x = np.maximum(res.x, 0.0)
@@ -105,6 +155,68 @@ def _t_bar_interval(
     return max(0.0, float(L_rows.max())), float(U_rows.min())
 
 
+def _eq14_time_bounds(
+    T: np.ndarray, d: np.ndarray, alpha: float, rho: float
+) -> tuple[float, float]:
+    """Exact feasible range of M*t_bar for the Eq.-14 LP at this rho.
+
+    The LP couples workers only through the shared t_bar (each worker's
+    variables appear in exactly its own Eq.-10 and Eq.-13 rows), so it is
+    feasible iff every worker can realize sum_m T_im p_im == M*t_bar under
+    its floors/caps — a per-row fractional-knapsack range: the minimum puts
+    every edge at its Eq.-11 floor, the maximum greedily spends the
+    remaining row budget (1 - floors, p_ii >= 0) on the slowest edges.
+    Returns (max_i tmin_i, min_i tmax_i); (inf, -inf) when some row's
+    floors alone overflow the row-stochastic budget.  ``inner_loop`` uses
+    this to skip provably infeasible grid points without a simplex run —
+    those cold, iteration-heavy phase-1 solves were most of the Algorithm-3
+    wall time at M=128.
+    """
+    M = T.shape[0]
+    eye = np.eye(M, dtype=bool)
+    edge = (d != 0) & ~eye
+    f = np.where(edge, alpha * rho * (d + d.T) + _FLOOR_MARGIN, 0.0)
+    fsum = f.sum(axis=1)
+    if np.any(fsum > 1.0 + 1e-9):
+        return np.inf, -np.inf
+    Te = np.where(edge, T, 0.0)
+    tmin = (Te * f).sum(axis=1)
+    order = np.argsort(np.where(edge, -T, np.inf), axis=1, kind="stable")
+    Ts = np.take_along_axis(Te, order, axis=1)
+    caps = np.take_along_axis(np.where(edge, 1.0 - f, 0.0), order, axis=1)
+    taken = np.minimum(np.cumsum(caps, axis=1), (1.0 - fsum)[:, None])
+    take = np.diff(taken, axis=1, prepend=0.0)
+    tmax = tmin + (take * Ts).sum(axis=1)
+    return float(tmin.max()), float(tmax.min())
+
+
+def _rho_grid_upper(alpha: float, Tm: np.ndarray, d: np.ndarray) -> float:
+    """Upper end of the outer rho grid (engineering guard, see below).
+
+    Clamp the outer grid to the region where the inner interval [L(rho), U]
+    is non-empty and the Eq.-11 floors can sum to <= 1, so no grid point is
+    wasted on provably infeasible rho.  L(rho) = alpha*rho*A with A below;
+    U is rho-free.  Broadcast over rows — pinned bit-exact against the
+    historical per-row generator loops by tests/test_policy.py.
+    """
+    M = Tm.shape[0]
+    U_rho = 0.5 / alpha
+    dsym = d + d.T
+    deg2 = dsym.sum(axis=1)
+    with np.errstate(invalid="ignore"):
+        A = ((Tm * dsym).sum(axis=1) / M).max()
+    live = d.sum(axis=1) > 0
+    if d.sum() > 0:
+        U_t = ((Tm * d).max(axis=1) / M)[live].min()
+    else:
+        U_t = 0.0
+    if A > 0:
+        U_rho = min(U_rho, U_t / (A * alpha))
+    if deg2.max() > 0:
+        U_rho = min(U_rho, 1.0 / (alpha * deg2.max()) * (1.0 - 1e-6))
+    return U_rho
+
+
 def inner_loop(
     alpha: float,
     rho: float,
@@ -112,24 +224,39 @@ def inner_loop(
     T: np.ndarray,
     d: np.ndarray,
     eps: float = 1e-2,
+    carry: WarmStartCarry | None = None,
 ) -> PolicyResult | None:
-    """Algorithm 3 INNERLOOP: grid over t_bar in [L, U], LP + eig score."""
+    """Algorithm 3 INNERLOOP: grid over t_bar in [L, U], LP + eig score.
+
+    Across the grid only ``b`` changes (b[:M] = M*t_bar), so with ``carry``
+    each solve after the first is a warm dual-simplex restart.
+    """
     L, U = _t_bar_interval(T, d, alpha, rho)
     if not np.isfinite(U) or U <= L:
         return None
+    M = T.shape[0]
+    lo, hi = _eq14_time_bounds(T, d, alpha, rho)
     best: PolicyResult | None = None
     n_solved = n_feasible = 0
     grid = []
     for r in range(1, R + 1):
         t_bar = L + (U - L) * r / R
+        target = M * t_bar
+        tol = 1e-6 * max(1.0, abs(target))
+        if target < lo - tol or target > hi + tol:
+            # Provably infeasible (conservative margin: boundary points
+            # still go to the LP so the verdict matches the solver's).
+            # Skipped points are not counted in n_lp_solved: that counter
+            # means "simplex runs", consistent with the pivot/warm counters.
+            grid.append((rho, t_bar, None, np.inf))
+            continue
         n_solved += 1
         try:
-            P = _solve_policy_lp(T, d, alpha, rho, t_bar)
+            P = _solve_policy_lp(T, d, alpha, rho, t_bar, carry=carry)
         except (RuntimeError, MemoryError):
-            # Simplex iteration cap / tableau too large for this grid point
-            # (dense solver at M=128 full graphs): score it infeasible so
-            # the Monitor degrades to other grid points or the uniform
-            # fallback instead of dying mid-run.
+            # Simplex iteration cap / instance too large for this grid point:
+            # score it infeasible so the Monitor degrades to other grid
+            # points or the uniform fallback instead of dying mid-run.
             P = None
         if P is None:
             grid.append((rho, t_bar, None, np.inf))
@@ -155,6 +282,8 @@ def generate_policy_matrix(
     T: np.ndarray,
     d: np.ndarray | None = None,
     eps: float = 1e-2,
+    warm: BasisState | None = None,
+    warm_start: bool = True,
 ) -> PolicyResult:
     """Algorithm 3 GENERATEPOLICYMATRIX.
 
@@ -163,6 +292,13 @@ def generate_policy_matrix(
     iteration-time matrix T.  ``d`` is the connectivity mask (default: fully
     connected on finite links — entries of T that are inf/nan are treated as
     dead links and masked out, which is how failed nodes are retired).
+
+    ``warm`` seeds the sweep with the previous refresh's optimal basis (the
+    Monitor threads this across Algorithm-1 periods); the returned
+    ``PolicyResult.basis`` is the token for the next call.  A stale or
+    differently-shaped token is validated and discarded by the solver, so
+    callers never need to invalidate it themselves.  ``warm_start=False``
+    forces every grid point to a cold solve (benchmark baseline).
     """
     T = np.asarray(T, dtype=np.float64)
     M = T.shape[0]
@@ -182,38 +318,29 @@ def generate_policy_matrix(
     live = np.where(d.sum(axis=1) > 0)[0]
     if 0 < live.size < M:
         sub = generate_policy_matrix(
-            alpha, K, R, Tm[np.ix_(live, live)], d[np.ix_(live, live)], eps
+            alpha, K, R, Tm[np.ix_(live, live)], d[np.ix_(live, live)], eps,
+            warm=warm,  # shape-checked by the solver; free if stale
+            warm_start=warm_start,
         )
         P = np.zeros((M, M))
         P[np.ix_(live, live)] = sub.P
         return PolicyResult(
             P, sub.rho, sub.t_bar, sub.lambda2, sub.T_convergence,
             sub.n_lp_solved, sub.n_lp_feasible, sub.grid,
+            basis=sub.basis, n_pivots=sub.n_pivots,
+            n_warm_used=sub.n_warm_used, n_solves=sub.n_solves,
         )
 
-    U_rho = 0.5 / alpha
-    # Engineering guard (documented deviation): clamp the outer grid to the
-    # region where the inner interval [L(rho), U] is non-empty and the Eq.-11
-    # floors can sum to <= 1, so no grid point is wasted on provably
-    # infeasible rho.  L(rho) = alpha*rho*A with A below; U is rho-free.
-    deg2 = np.array([(d[i] + d[:, i]).sum() for i in range(M)])
-    with np.errstate(invalid="ignore"):
-        A = max(
-            (Tm[i] * (d[i] + d[:, i])).sum() / M for i in range(M)
-        )
-    U_t = min(
-        (np.max(Tm[i] * d[i]) / M) for i in range(M) if d[i].sum() > 0
-    ) if d.sum() > 0 else 0.0
-    if A > 0:
-        U_rho = min(U_rho, U_t / (A * alpha))
-    if deg2.max() > 0:
-        U_rho = min(U_rho, 1.0 / (alpha * deg2.max()) * (1.0 - 1e-6))
+    U_rho = _rho_grid_upper(alpha, Tm, d)
     delta = U_rho / K
+    carry = WarmStartCarry(basis=warm, enabled=warm_start)
     best: PolicyResult | None = None
     all_grid = []
     for k in range(1, K + 1):
         rho = k * delta
-        res = inner_loop(alpha, rho, R, Tm, d, eps)
+        # Across rho steps only the Eq.-11 bound floors change: the carry's
+        # basis stays dual-feasible and restarts in a handful of pivots.
+        res = inner_loop(alpha, rho, R, Tm, d, eps, carry=carry)
         if res is None:
             continue
         all_grid.extend(res.grid)
@@ -230,6 +357,10 @@ def generate_policy_matrix(
         tbar = float(consensus.mean_iteration_times(P, Tm, d).mean())
         best = PolicyResult(P, rho, tbar, lam2, theory.convergence_time(tbar, lam2, eps))
     best.grid = all_grid
+    best.basis = carry.basis
+    best.n_pivots = carry.n_pivots
+    best.n_warm_used = carry.n_warm_used
+    best.n_solves = carry.n_solves
     return best
 
 

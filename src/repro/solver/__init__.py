@@ -1,3 +1,17 @@
-from repro.solver.lp import LPResult, solve_lp
+from repro.solver.lp import (
+    BasisState,
+    LPResult,
+    lp_method,
+    solve_lp,
+    solve_lp_dense,
+    solve_lp_revised,
+)
 
-__all__ = ["LPResult", "solve_lp"]
+__all__ = [
+    "BasisState",
+    "LPResult",
+    "lp_method",
+    "solve_lp",
+    "solve_lp_dense",
+    "solve_lp_revised",
+]

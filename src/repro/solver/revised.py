@@ -1,0 +1,478 @@
+"""Bounded-variable revised simplex with warm starts.
+
+Solves   min  c @ x
+         s.t. A @ x == b          (m equality rows only)
+              lb <= x <= ub       (ub may be +inf; lb must be finite)
+
+Design (ISSUE 4 tentpole; DESIGN.md §13):
+
+* **Implicit bounds.**  Upper bounds never become rows.  Every nonbasic
+  variable rests at one of its bounds (``AT_LB``/``AT_UB``); a simplex step
+  either pivots or merely *flips* a variable between its bounds.  The basis
+  is therefore always m x m — for the Eq.-14 policy LP that is 2M x 2M
+  instead of the dense oracle's O(M^2) x O(M^2) tableau.
+* **Product-form inverse.**  ``Binv`` is maintained by elementary eta
+  updates (O(m^2) per pivot) and refactorized from scratch every
+  ``refactor_every`` pivots (or whenever an eta pivot element is too small)
+  to bound drift.
+* **Anti-cycling.**  Dantzig pricing (most-negative reduced cost) for
+  speed, with an automatic switch to Bland's rule after a stretch of
+  iterations without objective progress; Bland guarantees termination, the
+  iteration cap (``RuntimeError``, same contract as the dense oracle) is
+  the backstop.
+* **Warm starts.**  ``solve_lp_revised(..., warm=basis)`` accepts the
+  ``BasisState`` returned by a previous solve.  The basis is refactorized
+  against the *current* A (nonsingularity checked), nonbasic statuses are
+  re-forced dual feasible against the *current* costs, and a
+  bounded-variable **dual simplex** drives out any primal infeasibility
+  introduced by changed ``b`` (the t_bar grid) or changed bound floors
+  (the rho grid).  A warm basis is a hint, never a correctness input: any
+  validation failure falls back to a cold start.
+
+Cold starts run the textbook artificial-variable phase 1 (signed unit
+columns, so the initial basis is a diagonal) followed by primal phase 2.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.solver.result import BasisState, LPResult
+
+_EPS = 1e-9      # reduced-cost / pivot-eligibility tolerance
+_FEAS = 1e-8     # primal feasibility tolerance on basic variables
+_PIV_MIN = 1e-10  # smallest acceptable eta pivot before forcing refactor
+
+AT_LB, AT_UB, BASIC = 0, 1, 2
+
+
+def instance_key(A: np.ndarray) -> tuple:
+    """Cheap fingerprint used to match a BasisState to an instance shape.
+
+    Only the (m, n) prefix gates warm-start acceptance (see ``try_warm``);
+    the sums are a debugging aid, O(n) so they stay off the hot path.
+    """
+    m, n = A.shape
+    return (m, n, float(A[0].sum()), float(A[-1].sum()))
+
+
+class _Simplex:
+    """One solve on one instance.  Not reusable across instances."""
+
+    def __init__(self, c, A, b, lb, ub, max_iter=20000, refactor_every=64):
+        self.m, self.n = A.shape
+        m, n = self.m, self.n
+        # Working arrays cover structural columns [0, n) plus one artificial
+        # column per row at [n, n+m) (signed unit vectors; bounds pinned to
+        # [0, 0] outside phase 1 so they can never re-enter).
+        self.A = A
+        self.b = b
+        self.art_sign = np.ones(m)
+        self.cost = np.concatenate([c, np.zeros(m)])
+        self.lbw = np.concatenate([lb, np.zeros(m)])
+        self.ubw = np.concatenate([ub, np.zeros(m)])
+        self.vstat = np.full(n + m, AT_LB, dtype=np.int8)
+        # Nonbasic variables with no finite lower bound rest at their upper
+        # bound; both-infinite (free) variables are unsupported, matching
+        # the dense oracle (whose lb-shift also requires finite lb).
+        no_lb = ~np.isfinite(self.lbw[:n])
+        if np.any(no_lb & ~np.isfinite(self.ubw[:n])):
+            raise ValueError("free variables (lb and ub infinite) unsupported")
+        self.vstat[:n][no_lb] = AT_UB
+        self.basis = np.arange(n, n + m)
+        self.Binv = np.eye(m)
+        self.xB = np.zeros(m)
+        self.xN = np.zeros(n + m)  # nonbasic bound values; basic entries 0
+        self._rebuild_xN()
+        self.pivots = 0
+        self.max_iter = max_iter
+        self.refactor_every = refactor_every
+
+    # -- columns / factorization -------------------------------------------
+    def _col(self, j):
+        if j < self.n:
+            return self.A[:, j]
+        e = np.zeros(self.m)
+        e[j - self.n] = self.art_sign[j - self.n]
+        return e
+
+    def _cols(self, idx):
+        """Dense (m, len(idx)) matrix of working columns."""
+        idx = np.asarray(idx)
+        out = np.zeros((self.m, len(idx)))
+        struct = idx < self.n
+        out[:, struct] = self.A[:, idx[struct]]
+        art = np.flatnonzero(~struct)
+        rows = idx[art] - self.n
+        out[rows, art] = self.art_sign[rows]
+        return out
+
+    def _refactor(self):
+        B = self._cols(self.basis)
+        try:
+            Binv = np.linalg.inv(B)
+        except np.linalg.LinAlgError as e:
+            raise RuntimeError(f"revised simplex: singular basis ({e})")
+        if not np.isfinite(Binv).all():
+            raise RuntimeError("revised simplex: non-finite basis inverse")
+        self.Binv = Binv
+
+    def _rebuild_xN(self):
+        """Recompute the nonbasic-value vector from scratch (status change)."""
+        x = np.where(self.vstat == AT_UB, self.ubw, self.lbw)
+        x[self.vstat == BASIC] = 0.0
+        self.xN = x
+
+    def _compute_xB(self):
+        """Recompute basic values from self.xN (start of a run / refactor);
+        between refactorizations xB is maintained incrementally by the
+        pivot/flip updates in primal()/dual()."""
+        rhs = self.b - self.A @ self.xN[: self.n]
+        art = self.xN[self.n:]
+        if art.any():  # artificial nonbasic values are 0 outside phase 1
+            rhs = rhs - self.art_sign * art
+        self.xB = self.Binv @ rhs
+
+    def _x_full(self):
+        x = self.xN.copy()
+        x[self.basis] = self.xB
+        return x
+
+    def _reduced_costs(self, cost):
+        y = cost[self.basis] @ self.Binv
+        d = np.empty(self.n + self.m)
+        d[: self.n] = cost[: self.n] - y @ self.A
+        d[self.n:] = cost[self.n:] - y * self.art_sign
+        return d
+
+    def _do_pivot(self, r, j, leave_to, w, xj_new=None):
+        """Swap j into basis row r; leaving variable rests at ``leave_to``.
+
+        ``xj_new`` is the entering variable's value (caller-computed from
+        the ratio/dual step); the incremental xB must already reflect the
+        step for all *other* basics — this only fixes up row r and xN.
+        """
+        leaving = self.basis[r]
+        self.vstat[leaving] = leave_to
+        self.vstat[j] = BASIC
+        self.basis[r] = j
+        self.xN[leaving] = self.ubw[leaving] if leave_to == AT_UB else self.lbw[leaving]
+        if xj_new is None:
+            xj_new = self.xN[j]  # degenerate drive-out: enters at its bound
+        self.xN[j] = 0.0
+        self.pivots += 1
+        if self.pivots % self.refactor_every == 0 or abs(w[r]) < _PIV_MIN:
+            self._refactor()
+            self._compute_xB()  # reset incremental drift at each refactor
+        else:
+            prow = self.Binv[r] / w[r]
+            self.Binv -= np.outer(w, prow)
+            self.Binv[r] = prow
+            self.xB[r] = xj_new
+
+    # -- primal simplex -----------------------------------------------------
+    def primal(self, cost) -> str:
+        """Bounded-variable primal simplex from the current (feasible) basis.
+
+        Returns "optimal" or "unbounded"; raises RuntimeError at the
+        iteration cap.
+        """
+        bland = False
+        stall = 0
+        best_obj = np.inf
+        movable = (self.ubw - self.lbw) > _EPS  # fixed vars can never enter
+        self._compute_xB()
+        for _ in range(self.max_iter):
+            obj = float(cost[self.basis] @ self.xB + cost @ self.xN)
+            if obj < best_obj - 1e-12:
+                best_obj = obj
+                stall = 0
+                bland = False
+            else:
+                stall += 1
+                if stall > 2 * self.m + 16:
+                    bland = True  # Bland's rule: guaranteed termination
+            d = self._reduced_costs(cost)
+            elig = movable & (
+                ((self.vstat == AT_LB) & (d < -_EPS))
+                | ((self.vstat == AT_UB) & (d > _EPS))
+            )
+            cand = np.flatnonzero(elig)
+            if cand.size == 0:
+                return "optimal"
+            if bland:
+                j = int(cand[0])
+            else:
+                j = int(cand[np.argmax(np.abs(d[cand]))])
+            s = 1.0 if self.vstat[j] == AT_LB else -1.0  # x_j moves by s*t
+            w = self.Binv @ self._col(j)
+            dxB = -s * w
+            lbB = self.lbw[self.basis]
+            ubB = self.ubw[self.basis]
+            inc = dxB > _EPS
+            dec = dxB < -_EPS
+            with np.errstate(divide="ignore", invalid="ignore"):
+                t_up = np.where(inc, (ubB - self.xB) / dxB, np.inf)
+                t_lo = np.where(dec, (lbB - self.xB) / dxB, np.inf)
+            t_up = np.where(np.isnan(t_up), np.inf, np.maximum(t_up, 0.0))
+            t_lo = np.where(np.isnan(t_lo), np.inf, np.maximum(t_lo, 0.0))
+            t_row = np.minimum(t_up, t_lo)
+            rmin = float(t_row.min()) if t_row.size else np.inf
+            t_flip = self.ubw[j] - self.lbw[j]
+            if not np.isfinite(min(rmin, t_flip)):
+                return "unbounded"
+            if t_flip < rmin - 1e-12:
+                # Bound flip: no basis change, the variable crosses to its
+                # other bound (this is the move the dense oracle needs an
+                # entire slack row to express).
+                self.xB += dxB * t_flip
+                self.vstat[j] = AT_UB if self.vstat[j] == AT_LB else AT_LB
+                self.xN[j] = (
+                    self.ubw[j] if self.vstat[j] == AT_UB else self.lbw[j]
+                )
+                continue
+            rows = np.flatnonzero(t_row <= rmin + _EPS)
+            if bland:
+                r = int(rows[np.argmin(self.basis[rows])])
+            else:
+                r = int(rows[np.argmax(np.abs(dxB[rows]))])
+            leave_to = AT_UB if t_up[r] <= t_lo[r] else AT_LB
+            xj_new = self.xN[j] + s * rmin
+            self.xB += dxB * rmin
+            self._do_pivot(r, j, leave_to, w, xj_new=xj_new)
+        raise RuntimeError("revised simplex: iteration limit reached")
+
+    # -- dual simplex -------------------------------------------------------
+    def dual(self, cost) -> str:
+        """Bounded-variable dual simplex from a dual-feasible basis.
+
+        Drives primal bound violations of basic variables to zero while
+        keeping reduced costs sign-feasible.  Returns "optimal" (primal
+        feasible reached) or "infeasible" (dual unbounded); raises
+        RuntimeError at the iteration cap.
+        """
+        stall = 0
+        best_viol = np.inf
+        movable = (self.ubw - self.lbw) > _EPS
+        self._compute_xB()
+        for _ in range(self.max_iter):
+            lbB = self.lbw[self.basis]
+            ubB = self.ubw[self.basis]
+            viol_lo = lbB - self.xB
+            viol_up = self.xB - ubB
+            v = np.maximum(viol_lo, viol_up)
+            vmax = float(v.max()) if v.size else 0.0
+            if vmax <= _FEAS:
+                return "optimal"
+            if vmax < best_viol - 1e-12:
+                best_viol = vmax
+                stall = 0
+            else:
+                stall += 1
+            bland = stall > 2 * self.m + 16
+            if bland:
+                bad = np.flatnonzero(v > _FEAS)
+                r = int(bad[np.argmin(self.basis[bad])])
+            else:
+                r = int(np.argmax(v))
+            below = viol_lo[r] > viol_up[r]
+            rho = np.empty(self.n + self.m)
+            rho[: self.n] = self.Binv[r] @ self.A
+            rho[self.n:] = self.Binv[r] * self.art_sign
+            a = -rho if below else rho
+            d = self._reduced_costs(cost)
+            nb_lo = movable & (self.vstat == AT_LB) & (a > _EPS)
+            nb_up = movable & (self.vstat == AT_UB) & (a < -_EPS)
+            cand = np.flatnonzero(nb_lo | nb_up)
+            if cand.size == 0:
+                return "infeasible"  # dual unbounded
+            ratios = d[cand] / a[cand]
+            ratios = np.maximum(ratios, 0.0)  # clip tiny dual-degenerate noise
+            rmin = ratios.min()
+            ties = cand[np.flatnonzero(ratios <= rmin + _EPS)]
+            if bland:
+                j = int(ties[0])
+            else:
+                j = int(ties[np.argmax(np.abs(a[ties]))])
+            w = self.Binv @ self._col(j)
+            bound_r = lbB[r] if below else ubB[r]
+            delta = (self.xB[r] - bound_r) / w[r]
+            xj_new = self.xN[j] + delta
+            self.xB -= w * delta
+            leave_to = AT_LB if below else AT_UB
+            self._do_pivot(r, j, leave_to, w, xj_new=xj_new)
+        raise RuntimeError("revised simplex: iteration limit reached")
+
+    # -- phase 1 ------------------------------------------------------------
+    def phase1(self) -> str:
+        """Artificial-variable phase 1 from the all-artificial basis."""
+        self._rebuild_xN()
+        r0 = self.b - self.A @ self.xN[: self.n]
+        self.art_sign = np.where(r0 >= 0.0, 1.0, -1.0)
+        self.basis = np.arange(self.n, self.n + self.m)
+        self.vstat[self.basis] = BASIC
+        self.xN[self.basis] = 0.0
+        self.Binv = np.diag(self.art_sign)  # diag(s)^-1 == diag(s)
+        self.ubw[self.n:] = np.inf  # artificials live during phase 1
+        cost1 = np.zeros(self.n + self.m)
+        cost1[self.n:] = 1.0
+        self.primal(cost1)  # cannot be unbounded (objective >= 0)
+        self._compute_xB()
+        art_basic = self.basis >= self.n
+        obj = float(self.xB[art_basic].sum()) if art_basic.any() else 0.0
+        if obj > 1e-7:
+            return "infeasible"
+        # Drive remaining (degenerate, value-0) artificials out wherever a
+        # structural column has a nonzero in their row; rows with no such
+        # column are redundant and keep a pinned artificial at 0.
+        for r in np.flatnonzero(self.basis >= self.n):
+            row = self.Binv[r] @ self.A
+            free = (self.vstat[: self.n] != BASIC) & (np.abs(row) > 1e-7)
+            jc = np.flatnonzero(free)
+            if jc.size:
+                j = int(jc[0])
+                w = self.Binv @ self._col(j)
+                self._do_pivot(r, j, AT_LB, w)
+        self.ubw[self.n:] = 0.0  # pin artificials for phase 2
+        return "feasible"
+
+    # -- warm start ---------------------------------------------------------
+    def try_warm(self, warm: BasisState) -> str | None:
+        """Install a prior basis and re-solve from it.
+
+        Returns "optimal"/"unbounded" when the warm path concluded, None
+        when the basis failed validation (caller falls back to cold start).
+        Only the *shape* part of the key is checked: the fingerprint is a
+        hint, and a same-shaped basis from different data (e.g. a Monitor
+        refresh with new EMA times) is exactly the reuse we want — the
+        refactorization, dual-feasibility forcing, and final primal polish
+        below make any nonsingular basis a correct starting point.
+        """
+        if warm is None or tuple(warm.key[:2]) != (self.m, self.n):
+            return None
+        basis = np.asarray(warm.basis, dtype=np.int64)
+        if (
+            basis.shape != (self.m,)
+            or basis.min(initial=0) < 0
+            or basis.max(initial=0) >= self.n
+            or np.unique(basis).size != self.m
+        ):
+            return None
+        vstat = np.asarray(warm.vstat, dtype=np.int8).copy()
+        if vstat.shape != (self.n,):
+            return None
+        vstat[basis] = BASIC
+        # Nonbasic statuses must point at finite bounds.
+        at_ub = vstat == AT_UB
+        bad_ub = at_ub & ~np.isfinite(self.ubw[: self.n])
+        vstat[bad_ub] = AT_LB
+        at_lb = vstat == AT_LB
+        if np.any(at_lb & ~np.isfinite(self.lbw[: self.n])):
+            return None
+        saved = (self.basis, self.vstat.copy(), self.Binv)
+        self.basis = basis
+        self.vstat = np.concatenate(
+            [vstat, np.full(self.m, AT_LB, dtype=np.int8)]
+        )
+        try:
+            self._refactor()
+            # Guard against a nearly-singular inherited basis.
+            if np.abs(self.Binv).max() > 1e12:
+                raise RuntimeError("ill-conditioned warm basis")
+            # Re-force dual feasibility against the *current* costs: a
+            # nonbasic variable whose reduced cost has the wrong sign flips
+            # to its other (finite) bound; if that bound is infinite the
+            # warm basis is not dual-feasibilizable — cold start instead.
+            d = self._reduced_costs(self.cost)[: self.n]
+            nb = self.vstat[: self.n] != BASIC
+            wrong_lb = nb & (self.vstat[: self.n] == AT_LB) & (d < -_EPS)
+            wrong_ub = nb & (self.vstat[: self.n] == AT_UB) & (d > _EPS)
+            if np.any(wrong_lb & ~np.isfinite(self.ubw[: self.n])):
+                raise RuntimeError("dual infeasible warm basis (ub=inf)")
+            if np.any(wrong_ub & ~np.isfinite(self.lbw[: self.n])):
+                raise RuntimeError("dual infeasible warm basis (lb=-inf)")
+            self.vstat[: self.n][wrong_lb] = AT_UB
+            self.vstat[: self.n][wrong_ub] = AT_LB
+            self._rebuild_xN()
+            status = self.dual(self.cost)
+            if status == "infeasible":
+                # Dual unbounded == primal infeasible.  Don't trust a stale
+                # basis with a verdict: restore and let the cold two-phase
+                # path confirm infeasibility.
+                raise RuntimeError("warm dual restart declared infeasible")
+            # The dual ratio test tolerates tiny dual-degenerate noise; a
+            # final primal polish certifies true optimality (it exits
+            # immediately when the dual restart already converged).
+            status = self.primal(self.cost)
+        except (RuntimeError, ValueError, np.linalg.LinAlgError):
+            # ValueError/LinAlgError: numerical breakdown on a pathological
+            # inherited basis — same remedy as any other warm failure.
+            self.basis, self.vstat, self.Binv = saved
+            self._rebuild_xN()
+            # Don't charge the abandoned attempt's pivots to the cold solve
+            # that follows (keeps LPResult.pivots meaning "pivots of the
+            # path that produced the answer").
+            self.pivots = 0
+            return None
+        return status
+
+    def export_basis(self) -> BasisState | None:
+        if np.any(self.basis >= self.n):  # degenerate artificial left over
+            return None
+        return BasisState(
+            key=instance_key(self.A),
+            basis=self.basis.copy(),
+            vstat=self.vstat[: self.n].copy(),
+        )
+
+
+def solve_lp_revised(
+    c,
+    A_eq,
+    b_eq,
+    lb=None,
+    ub=None,
+    warm: BasisState | None = None,
+    max_iter: int = 20000,
+) -> LPResult:
+    """Minimize c@x s.t. A_eq@x=b_eq, lb<=x<=ub via revised simplex.
+
+    ``warm`` is an opaque ``BasisState`` from a previous solve of a
+    same-shaped instance; on acceptance the solve is a dual-simplex restart
+    (typically a handful of pivots when only b or the bound floors moved).
+    The returned ``LPResult.basis`` is the new token to thread forward.
+    """
+    c = np.asarray(c, dtype=np.float64)
+    A = np.asarray(A_eq, dtype=np.float64)
+    b = np.asarray(b_eq, dtype=np.float64)
+    n = c.shape[0]
+    lb = np.zeros(n) if lb is None else np.asarray(lb, dtype=np.float64).copy()
+    ub = np.full(n, np.inf) if ub is None else np.asarray(ub, dtype=np.float64).copy()
+    if np.any(lb > ub + _EPS):
+        return LPResult(None, np.inf, "infeasible")
+
+    S = _Simplex(c, A, b, lb, ub, max_iter=max_iter)
+    warm_status = S.try_warm(warm) if warm is not None else None
+    if warm_status == "unbounded":
+        return LPResult(None, -np.inf, "unbounded",
+                        pivots=S.pivots, warm_used=True)
+    if warm_status == "optimal":
+        x = S._x_full()[:n]
+        return LPResult(
+            x, float(c @ x), "optimal",
+            basis=S.export_basis(), pivots=S.pivots, warm_used=True,
+        )
+
+    if S.phase1() == "infeasible":
+        return LPResult(
+            None, np.inf, "infeasible",
+            basis=None, pivots=S.pivots, warm_used=False,
+        )
+    status = S.primal(S.cost)
+    if status == "unbounded":
+        return LPResult(None, -np.inf, "unbounded", pivots=S.pivots)
+    x = S._x_full()[:n]
+    return LPResult(
+        x, float(c @ x), "optimal",
+        basis=S.export_basis(), pivots=S.pivots, warm_used=False,
+    )

@@ -827,6 +827,25 @@ def run_batched_sync(
         mask[i, : bsz[i]] = 1.0
     maskj = jnp.asarray(mask)
 
+    # Block batch draw: ``rng.choice(part, size=k)`` is ``part[rng.integers(0,
+    # len(part), k)]`` bit-for-bit, and one ``integers`` call fills its output
+    # in C order drawing per element exactly as consecutive same-bound calls
+    # do — so consecutive workers with equal (population, batch) sizes
+    # collapse into one host rng call per round instead of M (with uniform
+    # shards that is a single call).  The sync parity suite pins times/RNG
+    # equality with the reference loop's per-worker draws.
+    pops = [len(part_idx[i]) for i in range(M)]
+    runs = []
+    i0 = 0
+    for i in range(1, M + 1):
+        if i == M or pops[i] != pops[i0] or bsz[i] != bsz[i0]:
+            runs.append((i0, i, pops[i0], bsz[i0]))
+            i0 = i
+    run_parts = [
+        np.stack([np.asarray(part_idx[i]) for i in range(a, b)])
+        for a, b, _, _ in runs
+    ]
+
     ex, ey = jnp.asarray(eval_x), jnp.asarray(eval_y)
     dx, dy = jnp.asarray(data_x), jnp.asarray(data_y)
 
@@ -856,8 +875,11 @@ def run_batched_sync(
                 if len(grp) >= 2:
                     gid[grp] = min(grp)
             idx = np.zeros((M, Bmax), np.int32)
-            for i in range(M):
-                idx[i, : bsz[i]] = rng.choice(part_idx[i], size=bsz[i])
+            for (a, b_, pop, B), parts in zip(runs, run_parts):
+                draws = rng.integers(0, pop, size=(b_ - a, B))
+                idx[a:b_, :B] = parts[
+                    np.arange(b_ - a)[:, None], draws
+                ]
             gids.append(gid)
             idxs.append(idx)
             fire = r % every == 0

@@ -282,6 +282,48 @@ def test_vectorized_policy_math_spot_check():
                 )
 
 
+def _rho_grid_upper_loop(alpha, Tm, d):
+    """Pre-vectorization reference for the outer-grid clamp (verbatim)."""
+    M = Tm.shape[0]
+    U_rho = 0.5 / alpha
+    deg2 = np.array([(d[i] + d[:, i]).sum() for i in range(M)])
+    with np.errstate(invalid="ignore"):
+        A = max(
+            (Tm[i] * (d[i] + d[:, i])).sum() / M for i in range(M)
+        )
+    U_t = min(
+        (np.max(Tm[i] * d[i]) / M) for i in range(M) if d[i].sum() > 0
+    ) if d.sum() > 0 else 0.0
+    if A > 0:
+        U_rho = min(U_rho, U_t / (A * alpha))
+    if deg2.max() > 0:
+        U_rho = min(U_rho, 1.0 / (alpha * deg2.max()) * (1.0 - 1e-6))
+    return U_rho
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 1000), st.sampled_from([4, 6, 8, 12, 16]))
+def test_vectorized_rho_grid_upper_exactly_matches_loop(seed, M):
+    T, d = _random_instance(seed, M)
+    Tm = np.where(np.isfinite(T), T, 0.0)
+    np.fill_diagonal(d, 0.0)
+    assert policy._rho_grid_upper(0.1, Tm, d) == _rho_grid_upper_loop(0.1, Tm, d)
+
+
+def test_vectorized_rho_grid_upper_spot_check():
+    """Stub-mode (tier-1) spot check of the same exact-equality pin,
+    including the all-dead-links degenerate branch."""
+    for seed, M in ((0, 4), (3, 6), (7, 8), (12, 12), (5, 16)):
+        T, d = _random_instance(seed, M)
+        Tm = np.where(np.isfinite(T), T, 0.0)
+        np.fill_diagonal(d, 0.0)
+        assert policy._rho_grid_upper(0.1, Tm, d) == _rho_grid_upper_loop(
+            0.1, Tm, d
+        )
+    z = np.zeros((4, 4))
+    assert policy._rho_grid_upper(0.1, z, z) == _rho_grid_upper_loop(0.1, z, z)
+
+
 @settings(max_examples=12, deadline=None)
 @given(st.integers(0, 1000), st.sampled_from([3, 5, 9, 16]))
 def test_vectorized_uniform_policy_exactly_matches_loop(seed, M):
