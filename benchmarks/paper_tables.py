@@ -12,10 +12,10 @@ import time
 
 import numpy as np
 
-from repro.core import consensus, policy, theory
+from repro.core import policy
 from repro.core.nettime import LinkTimeModel, Topology, homogeneous_times
 from repro.data.partition import non_iid_partition, size_skewed_partition, uniform_partition
-from repro.data.synthetic import classification_dataset, train_eval_split
+from repro.data.synthetic import train_eval_split
 from repro.train.simulator import SimConfig, simulate
 
 ALGOS = ("netmax", "adpsgd", "allreduce", "prague")

@@ -313,6 +313,188 @@ def bench_policy_solver(sizes=(16, 32, 64, 128), K=8, R=8, dense_cap=32,
     return results
 
 
+def bench_scenarios(M=32, small=False, out_path=None,
+                    algos=("netmax", "adpsgd", "allreduce")):
+    """Cluster-outage scenario sweep (ISSUE 5 acceptance): a whole cluster
+    drops off the WAN mid-run; NetMax's Monitor must re-route (dead-cluster
+    selection probability -> 0 within one refresh) while the non-adaptive
+    baselines (AD-PSGD, Allreduce-SGD) stall on timeouts.  Writes
+    BENCH_scenarios.json with per-algorithm time-to-recover and pre/during/
+    post-outage throughput, plus a reference-vs-batched parity spot check
+    on the same timeline.
+
+    ``small`` is the CI smoke shape (fewer workers/events, same structure).
+    """
+    import time as _time
+
+    import numpy as np
+
+    from repro.core.nettime import LinkTimeModel, Topology
+    from repro.data.partition import uniform_partition
+    from repro.data.synthetic import train_eval_split
+    from repro.scenarios import presets
+    from repro.train.simulator import SimConfig, simulate
+
+    if small:
+        # Half-size clusters so M=16 still spans two WAN-separated clusters.
+        M = min(M, 16)
+        topo = Topology.multi_cluster(M, workers_per_host=4, hosts_per_pod=1,
+                                      pods_per_cluster=2)
+    else:
+        topo = Topology.multi_cluster(M)
+    assert topo.n_clusters >= 2, "outage scenario needs a WAN tier"
+    cluster = np.array([topo.cluster_of(i) for i in range(M)])
+    # Links the outage kills: WAN links touching the dead cluster (NOT all
+    # cross-cluster links — at 3+ clusters a re-routed policy rightly keeps
+    # mass on the healthy cluster pairs).
+    dead_cluster = topo.n_clusters - 1
+    touch = cluster == dead_cluster
+    cross = (touch[:, None] | touch[None, :]) & (cluster[:, None] != cluster[None, :])
+    t0, t1 = (5.0, 20.0) if small else (10.0, 60.0)
+    timeout = 2.0 if small else 5.0
+    monitor_period = 3.0 if small else 8.0
+    horizon = t1 + (t1 - t0)  # post-outage window mirrors the outage
+    timeline = presets.cluster_outage(topo.n_clusters - 1, t0, t1)
+
+    x, y, ex, ey = train_eval_split(4000, 800, 32, 10, seed=0)
+    parts = uniform_partition(len(y), M, seed=0)
+
+    def run(algo, events, engine="auto", seed=0):
+        link = LinkTimeModel(topo, jitter=0.02, seed=5, scenario=timeline,
+                             dead_link_timeout=timeout)
+        cfg = SimConfig(algorithm=algo, n_workers=M, total_events=events,
+                        lr=0.05, batch_size=16, monitor_period=monitor_period,
+                        seed=seed, engine=engine)
+        wall0 = _time.time()
+        res = simulate(cfg, link, x, y, parts, ex, ey,
+                       record_every=max(50, events // 100))
+        return res, _time.time() - wall0
+
+    def rate(res, a, b):
+        """Events per virtual second over [a, b] (interpolated records)."""
+        b = min(b, res.times[-1])
+        if b <= a:
+            return None
+        ea, eb = np.interp([a, b], res.times, res.events)
+        return round(float((eb - ea) / (b - a)), 1)
+
+    results = {}
+    for algo in algos:
+        # Adaptive event budget: grow until the virtual clock passes the
+        # post-outage window (stalling baselines cover it in few events).
+        events = 2000 if small else 4000
+        while True:
+            res, wall = run(algo, events)
+            if res.times[-1] >= horizon or events >= (64000 if small else 256000):
+                break
+            events *= 2
+        row = dict(
+            events=events,
+            wall_s=round(wall, 2),
+            virtual_time_s=round(res.times[-1], 2),
+            failed_pulls=len(res.failed_pulls),
+            last_failure_t=round(res.failed_pulls[-1][0], 3)
+            if res.failed_pulls else None,
+            throughput_pre=rate(res, 0.0, t0),
+            throughput_outage=rate(res, t0, t1),
+            throughput_post=rate(res, t1, horizon),
+            policy_refreshes=res.policy_updates,
+            final_loss=round(res.losses[-1], 4),
+        )
+        # Monitor adaptivity: the first refresh at/after the outage whose
+        # policy carries zero dead-cluster selection mass.
+        reroute_t = None
+        refreshes_to_reroute = 0
+        for tq, _rho, P in res.policy_log:
+            if tq >= t0:
+                refreshes_to_reroute += 1
+                if float(P[cross].sum()) <= 1e-12:
+                    reroute_t = tq
+                    break
+        if res.policy_log:
+            row["time_to_reroute_s"] = (
+                round(reroute_t - t0, 3) if reroute_t is not None else None
+            )
+            row["refreshes_to_reroute"] = (
+                refreshes_to_reroute if reroute_t is not None else None
+            )
+            row["dead_cluster_prob_after_reroute"] = (
+                0.0 if reroute_t is not None else None
+            )
+            # Time-to-recover: the last timeout any worker pays during the
+            # outage — after it, the policy routes fully around the dead
+            # cluster (probation probes excluded by capping at reroute_t).
+            stalls = [tf for tf, _, _ in res.failed_pulls
+                      if tf <= (reroute_t or t1)]
+            row["time_to_recover_s"] = (
+                round(max(stalls) + timeout - t0, 3) if stalls else 0.0
+            )
+        results[algo] = row
+        print(f"scenario/{algo}/M={M},{wall * 1e6 / events:.0f},"
+              f"fails={row['failed_pulls']}_pre={row['throughput_pre']}_"
+              f"out={row['throughput_outage']}_post={row['throughput_post']}_"
+              f"reroute={row.get('time_to_reroute_s')}")
+
+    # Parity spot check: the same timeline, both engines, exact host-side
+    # equality (the full per-algorithm sweep lives in tests/test_engines.py).
+    pM, pev = (8, 600) if small else (16, 1200)
+    ref, _ = _bench_parity_run(pM, pev, timeout)
+    bat, _ = _bench_parity_run(pM, pev, timeout, engine="batched")
+    parity = dict(
+        M=pM, events=pev,
+        times_equal=bool(ref.times == bat.times),
+        comm_equal=bool(ref.comm_time == bat.comm_time),
+        failed_pulls_equal=bool(ref.failed_pulls == bat.failed_pulls),
+        policies_equal=bool(
+            len(ref.policy_log) == len(bat.policy_log)
+            and all(a[0] == b[0] and a[1] == b[1] and np.array_equal(a[2], b[2])
+                    for a, b in zip(ref.policy_log, bat.policy_log))
+        ),
+    )
+    print(f"scenario/parity,0,{parity}")
+
+    out = {
+        "suite": "scenarios",
+        "topology": f"multi_cluster(M={M})",
+        "outage": {"cluster": int(topo.n_clusters - 1), "start": t0, "end": t1},
+        "dead_link_timeout_s": timeout,
+        "monitor_period_s": monitor_period,
+        "small": bool(small),
+        "results": results,
+        "engine_parity": parity,
+    }
+    path = Path(out_path) if out_path else ROOT / "BENCH_scenarios.json"
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote {path}")
+    return results
+
+
+def _bench_parity_run(M, events, timeout, engine="reference"):
+    import time as _time
+
+    from repro.core.nettime import LinkTimeModel, Topology
+    from repro.data.partition import uniform_partition
+    from repro.data.synthetic import train_eval_split
+    from repro.scenarios import presets
+    from repro.train.simulator import SimConfig, simulate
+
+    topo = Topology.multi_cluster(M, workers_per_host=2, hosts_per_pod=1,
+                                  pods_per_cluster=2)  # clusters of 4
+    timeline = presets.cluster_outage(1, 1.0, 4.0).add(
+        *presets.worker_blip(M - 1, 2.0, 5.0).events
+    )
+    x, y, ex, ey = train_eval_split(1600, 400, 32, 10, seed=0)
+    parts = uniform_partition(len(y), M, seed=0)
+    link = LinkTimeModel(topo, jitter=0.02, seed=5, scenario=timeline,
+                         dead_link_timeout=timeout)
+    cfg = SimConfig(algorithm="netmax", n_workers=M, total_events=events,
+                    lr=0.05, monitor_period=2.0, seed=0, engine=engine)
+    t0 = _time.time()
+    res = simulate(cfg, link, x, y, parts, ex, ey, record_every=events // 4)
+    return res, _time.time() - t0
+
+
 def bench_roofline_summary():
     """Summarize dry-run artifacts (if present) into roofline terms."""
     from repro.analysis.roofline import from_record
@@ -346,12 +528,30 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--suite", default="all",
                     choices=["all", "paper", "kernels", "roofline", "quick",
-                             "algos", "simulator", "policy"])
+                             "algos", "simulator", "policy", "scenarios"])
     ap.add_argument("--events", type=int, default=4000)
     ap.add_argument("--policy-sizes", type=int, nargs="+", default=None,
                     help="worker counts for --suite policy "
                          "(default 16 32 64 128; CI smoke passes 16 32)")
+    ap.add_argument("--sim-sizes", type=int, nargs="+", default=None,
+                    help="worker counts for --suite simulator "
+                         "(default 8 32 64 128; CI smoke passes 8 32)")
+    ap.add_argument("--small", action="store_true",
+                    help="CI smoke shape for --suite scenarios "
+                         "(fewer workers/events, same structure)")
+    ap.add_argument("--out-dir", default=None,
+                    help="write BENCH_*.json here instead of the repo root "
+                         "(CI writes fresh numbers to artifacts/ so "
+                         "scripts/check_bench.py can diff them against the "
+                         "committed baselines)")
     args = ap.parse_args()
+
+    out_dir = Path(args.out_dir) if args.out_dir else None
+    if out_dir:
+        out_dir.mkdir(parents=True, exist_ok=True)
+
+    def bench_path(name):
+        return (out_dir / name) if out_dir else None
 
     from benchmarks import paper_tables as pt
 
@@ -363,10 +563,19 @@ def main() -> None:
             events=min(args.events, 1200) if args.suite == "quick" else args.events
         )
     if args.suite in ("all", "simulator"):
-        out["simulator_engines"] = bench_simulator_engines()
+        sizes = tuple(args.sim_sizes) if args.sim_sizes else (8, 32, 64, 128)
+        out["simulator_engines"] = bench_simulator_engines(
+            sizes=sizes, out_path=bench_path("BENCH_simulator.json")
+        )
     if args.suite in ("all", "policy"):
         sizes = tuple(args.policy_sizes) if args.policy_sizes else (16, 32, 64, 128)
-        out["policy_solver"] = bench_policy_solver(sizes=sizes)
+        out["policy_solver"] = bench_policy_solver(
+            sizes=sizes, out_path=bench_path("BENCH_policy.json")
+        )
+    if args.suite in ("all", "scenarios"):
+        out["scenarios"] = bench_scenarios(
+            small=args.small, out_path=bench_path("BENCH_scenarios.json")
+        )
     if args.suite in ("all", "paper"):
         out["policy_generation"] = pt.bench_policy_generation()
         out["epoch_time_hetero"] = pt.bench_epoch_time(hetero=True)

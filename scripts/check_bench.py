@@ -1,0 +1,116 @@
+"""CI bench-regression gate (DESIGN.md §14).
+
+Compares a freshly-run benchmark JSON against the committed baseline and
+fails (exit 1) when a speedup-style metric regressed by more than the
+tolerance.  Only ratio metrics are compared — wall-clock seconds differ
+across runner hardware, but batched-vs-reference speedup, chain-fusion
+dispatch reduction, and warm-vs-cold pivot counts are hardware-portable
+(pivot counts are fully deterministic).  Only keys present in BOTH files
+are compared, so the CI smoke can run a subset of the committed sweep
+(e.g. ``--sim-sizes 8 32`` against a baseline swept to M=128).
+
+Usage (what .github/workflows/ci.yml runs):
+
+    python benchmarks/run.py --suite simulator --sim-sizes 8 32 --out-dir artifacts
+    python scripts/check_bench.py --suite simulator \
+        --fresh artifacts/BENCH_simulator.json --baseline BENCH_simulator.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _walk_simulator(doc):
+    """Yield (key, metric, value) ratio metrics from BENCH_simulator.json."""
+    for algo, by_size in doc.get("results", {}).items():
+        for size, row in by_size.items():
+            yield f"{algo}/{size}", "speedup", row.get("speedup")
+            yield f"{algo}/{size}", "dispatch_reduction", row.get("dispatch_reduction")
+
+
+def _walk_policy(doc):
+    """Yield ratio metrics from BENCH_policy.json: warm-start effectiveness
+    as the deterministic pivot ratio + hit rate.  (speedup_vs_dense is
+    deliberately NOT gated: a wall/wall ratio of two sub-second solves
+    swings ~2x with runner load; the pivot counts carry the same signal
+    bit-exactly.)"""
+    for topo, by_size in doc.get("results", {}).items():
+        for size, row in by_size.items():
+            pw, pc = row.get("pivots_warm"), row.get("pivots_cold")
+            if pw and pc:
+                yield f"{topo}/{size}", "pivot_ratio_cold_over_warm", pc / pw
+            yield f"{topo}/{size}", "warm_hit_rate", row.get("warm_hit_rate")
+
+
+_WALKERS = {"simulator": _walk_simulator, "policy": _walk_policy}
+
+
+def collect(suite: str, doc) -> dict:
+    return {
+        (key, metric): value
+        for key, metric, value in _WALKERS[suite](doc)
+        if isinstance(value, (int, float))
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--suite", required=True, choices=sorted(_WALKERS))
+    ap.add_argument("--fresh", required=True, help="JSON produced by this CI run")
+    ap.add_argument(
+        "--baseline", required=True, help="committed BENCH_*.json baseline"
+    )
+    tol_help = (
+        "max allowed fractional regression (default 0.30: fail when "
+        "fresh < 0.7 * baseline)"
+    )
+    ap.add_argument("--tolerance", type=float, default=0.30, help=tol_help)
+    args = ap.parse_args()
+
+    with open(args.fresh) as f:
+        fresh = collect(args.suite, json.load(f))
+    with open(args.baseline) as f:
+        base = collect(args.suite, json.load(f))
+
+    shared = sorted(set(fresh) & set(base))
+    if not shared:
+        msg = (
+            f"check_bench[{args.suite}]: no overlapping metrics between "
+            f"{args.fresh} and {args.baseline}"
+        )
+        print(msg, file=sys.stderr)
+        return 1
+
+    failures = []
+    for key in shared:
+        b, f_ = base[key], fresh[key]
+        floor = b * (1.0 - args.tolerance)
+        status = "FAIL" if f_ < floor else "ok"
+        line = (
+            f"check_bench[{args.suite}] {status:4s} {key[0]} {key[1]}: "
+            f"fresh={f_:.3g} baseline={b:.3g} floor={floor:.3g}"
+        )
+        print(line)
+        if f_ < floor:
+            failures.append(key)
+
+    if failures:
+        msg = (
+            f"check_bench[{args.suite}]: {len(failures)}/{len(shared)} "
+            f"metrics regressed beyond {args.tolerance:.0%}"
+        )
+        print(msg, file=sys.stderr)
+        return 1
+    msg = (
+        f"check_bench[{args.suite}]: {len(shared)} metrics within "
+        f"{args.tolerance:.0%} of baseline"
+    )
+    print(msg)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

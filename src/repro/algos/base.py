@@ -353,6 +353,13 @@ class Algorithm(abc.ABC):
         replicas[i] = x_half
         return False
 
+    def apply_failed(self, state: AlgoState, cfg, replicas, i, x_half):
+        """A scenario-dead link timed the pull out (repro.scenarios): the
+        local grad step still commits, nothing is mixed, and no peer state
+        is touched.  The event's *timing* is still priced as an attempted
+        transfer (the timeout) by ``event_timing``."""
+        replicas[i] = x_half
+
     # -- timing semantics ---------------------------------------------------
     def event_timing(
         self, state: AlgoState, cfg, link, i: int, m: int | None,

@@ -8,7 +8,7 @@ programs: train_step / serve_prefill / serve_step (DESIGN.md §5).
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 
 # ---------------------------------------------------------------------------
 # Shapes (assigned): seq_len x global_batch, and which program they lower.

@@ -5,11 +5,24 @@ parameters (unlike a parameter server), only per-link iteration-time EMAs.
 Every schedule period it pulls the EMA matrix from the workers and publishes
 a fresh (P, rho) produced by Algorithm 3.
 
-Fault tolerance: a worker that stopped reporting has its links marked dead
-(time = inf) after ``dead_after`` missed reports; Algorithm 3 masks dead
-links out of the connectivity graph, so the next policy routes around the
-failure.  A restarted Monitor rebuilds all state from worker EMAs — it keeps
-no durable state of its own.
+Fault tolerance (DESIGN.md §14): two independent detectors feed the same
+connectivity mask —
+
+* **missed reports** — a worker that stopped reporting has its links marked
+  dead (time = inf) after ``dead_after`` missed reports (covers crashes and
+  elastic departures);
+* **failure notifications** — the data plane reports each timed-out pull
+  (``notify_failure``); the Monitor masks the link, *escalates* the mask to
+  the whole failure domain (a peer when several pullers fail to reach it, a
+  cluster pair when failures span several peers across one WAN pair), and
+  proposes an out-of-schedule Eq.-14 refresh so the policy re-routes without
+  waiting for the next T_s tick.  Masks expire after ``revive_after``
+  refreshes (probation): a recovered link is re-probed and, if still dead,
+  re-masked by the next notification.
+
+Algorithm 3 then optimizes only over the live subgraph, so the next policy
+routes around the failure.  A restarted Monitor rebuilds all state from
+worker EMAs — it keeps no durable state of its own.
 """
 
 from __future__ import annotations
@@ -18,7 +31,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.core.policy import PolicyResult, generate_policy_matrix
+from repro.core.policy import PolicyResult, connectivity_key, generate_policy_matrix
 
 
 @dataclass
@@ -68,6 +81,24 @@ class NetworkMonitor:
     # Base connectivity mask (M, M); None = fully connected.  step() combines
     # it with the live-worker mask so Algorithm 3 only routes over live links.
     d: np.ndarray | None = None
+    # -- dead-link detection from failure notifications (DESIGN.md §14) ----
+    # Worker placement, for failure-domain escalation (a control plane knows
+    # its own topology); None disables cluster-level escalation.
+    topology: object | None = None
+    # Out-of-schedule refresh fires this long after the first failure of a
+    # burst — detection is only honest once the pull's timeout has elapsed,
+    # so drivers default it to the link model's dead_link_timeout, by which
+    # point the whole failure domain has evidence pending.  None = unset.
+    reroute_delay: float | None = None
+    # A failure mask expires after this many refreshes (probation): the link
+    # is re-opened, re-probed, and re-masked on the next failure if the
+    # outage persists.  This is what lets a recovered cluster rejoin.
+    revive_after: int = 3
+    # Escalation thresholds: distinct pullers failing to reach one peer =>
+    # the peer is down; distinct unreachable peers across one directed
+    # cluster pair => the WAN between the two clusters is down.
+    peer_escalation: int = 2
+    cluster_escalation: int = 2
 
     _T: np.ndarray = field(init=False)
     _missed: np.ndarray = field(init=False)
@@ -76,8 +107,16 @@ class NetworkMonitor:
     # Warm-start protocol (DESIGN.md §13): the last refresh's optimal LP
     # basis, threaded into the next Algorithm-3 sweep so steady-state
     # re-solves are dual-simplex restarts of a handful of pivots.  Opaque;
-    # the solver validates shape and discards it after membership changes.
+    # ``step`` drops it explicitly whenever the effective edge set changes
+    # (``_basis_key``) — a basis from a larger live set must never be
+    # re-threaded (the solver's shape validation is a fallback, not the
+    # invalidation mechanism).
     _basis: object | None = field(init=False, default=None)
+    _basis_key: bytes | None = field(init=False, default=None)
+    # Failure evidence: directed link -> refresh index when last reported.
+    _fail_links: dict = field(init=False, default_factory=dict)
+    _fail_wake: float | None = field(init=False, default=None)
+    _refresh_idx: int = field(init=False, default=0)
 
     def __post_init__(self):
         M = self.n_workers
@@ -106,23 +145,89 @@ class NetworkMonitor:
         T[:, dead] = np.inf
         return T
 
+    def notify_failure(self, i: int, m: int, now: float) -> float | None:
+        """Data-plane report: worker ``i``'s pull from ``m`` timed out.
+
+        Records the evidence and returns the virtual time at which an
+        out-of-schedule Eq.-14 refresh should fire (the driver lowers its
+        next Monitor wake to this); one wake covers a whole failure burst.
+        """
+        self._fail_links[(int(i), int(m))] = self._refresh_idx
+        if self._fail_wake is None:
+            self._fail_wake = now + (self.reroute_delay or 0.0)
+        return self._fail_wake
+
+    def _failure_masks(self, conn: np.ndarray) -> None:
+        """Mask reported-dead links out of ``conn``, escalated to the
+        failure domain the evidence supports (module docstring)."""
+        # Evidence recorded after refresh ``age`` masks refreshes age+1
+        # .. age+revive_after, then expires (the link re-opens on probation).
+        for k in [k for k, age in self._fail_links.items()
+                  if self._refresh_idx - age > self.revive_after]:
+            del self._fail_links[k]
+        if not self._fail_links:
+            return
+        cluster = (
+            [self.topology.cluster_of(w) for w in range(self.n_workers)]
+            if self.topology is not None else None
+        )
+        pullers: dict[int, set] = {}
+        for i, m in self._fail_links:
+            conn[i, m] = 0.0
+            conn[m, i] = 0.0
+            pullers.setdefault(m, set()).add(i)
+        for m, ps in pullers.items():
+            # A WAN outage also produces many cross-cluster failures toward
+            # each remote peer; "the peer itself is down" is only the best
+            # explanation once one of its own cluster-mates can't reach it
+            # (a crashed worker fails intra pulls too, a WAN outage never
+            # does).  Without topology info, any quorum escalates.
+            same = cluster is None or any(cluster[i] == cluster[m] for i in ps)
+            if len(ps) >= self.peer_escalation and same:
+                conn[m, :] = 0.0
+                conn[:, m] = 0.0
+        if cluster is None:
+            return
+        peers_by_pair: dict[tuple, set] = {}
+        for i, m in self._fail_links:
+            if cluster[i] != cluster[m]:
+                peers_by_pair.setdefault((cluster[i], cluster[m]), set()).add(m)
+        for (ca, cb), peers in peers_by_pair.items():
+            if len(peers) >= self.cluster_escalation:
+                a = np.array([c == ca for c in cluster])
+                b = np.array([c == cb for c in cluster])
+                conn[np.ix_(a, b)] = 0.0
+                conn[np.ix_(b, a)] = 0.0
+
     # -- control plane -------------------------------------------------------
     def step(self) -> PolicyResult:
         """One Algorithm-1 period: recompute and publish (P, rho)."""
+        self._refresh_idx += 1
         T = self._time_matrix()
         live = ~np.all(~np.isfinite(T) | (T == 0), axis=1)
         # Connectivity mask consistent with ``live``: base topology minus
         # links to/from dead workers (Algorithm 3 then optimizes only over
-        # the live subgraph instead of re-deriving liveness from inf times).
+        # the live subgraph instead of re-deriving liveness from inf times),
+        # minus the failure-notification masks.
         conn = np.ones((self.n_workers, self.n_workers)) if self.d is None else self.d.copy()
         np.fill_diagonal(conn, 0.0)
         conn[~live, :] = 0.0
         conn[:, ~live] = 0.0
+        self._failure_masks(conn)
+        # Warm-start invalidation: the cached basis belongs to the previous
+        # refresh's live edge set; if the set changed (a worker died or
+        # rejoined, links were masked or revived), drop it — never re-thread
+        # a basis across a membership change.
+        key = connectivity_key(conn)
+        if self._basis is not None and key != self._basis_key:
+            self._basis = None
+        self._basis_key = key
         res = generate_policy_matrix(
             self.alpha, self.K, self.R, T, d=conn, eps=self.eps,
             warm=self._basis,
         )
         self._basis = res.basis
+        self._fail_wake = None
         self.policy = res
         self.history.append(
             dict(
@@ -131,6 +236,7 @@ class NetworkMonitor:
                 lambda2=res.lambda2,
                 T_convergence=res.T_convergence,
                 n_live=int(live.sum()),
+                n_dead_links=len(self._fail_links),
                 n_pivots=res.n_pivots,
                 n_warm_used=res.n_warm_used,
             )

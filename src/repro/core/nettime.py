@@ -128,6 +128,18 @@ class LinkTimeModel:
     # WAN draws come from their own stream so toggling them never perturbs
     # the base jitter/slow-link sequence.  None -> derived from ``seed``.
     wan_seed: int | None = None
+    # -- scripted network dynamics (repro.scenarios; DESIGN.md §14) --------
+    # A declarative ``Timeline`` (or pre-compiled ``CompiledTimeline``) of
+    # cluster outages, link degradations, and worker churn.  Compiled here
+    # into a piecewise link-state machine advanced by ``advance_to``:
+    # purely time-dependent, consumes NO rng, so attaching a scenario never
+    # perturbs the jitter/slow-link draw sequence and ``scenario=None``
+    # stays bit-identical to every historical trace.
+    scenario: object | None = None
+    # A pull over a scenario-dead link blocks for this long (virtual
+    # seconds), then fails: the transfer times out, no data moves, and the
+    # event's duration is exactly the timeout (no jitter is drawn for it).
+    dead_link_timeout: float = 30.0
 
     def __post_init__(self):
         self._rng = np.random.default_rng(self.seed)
@@ -146,11 +158,32 @@ class LinkTimeModel:
             self._wan_dir = s - s.T
         self._wan_state = np.zeros((nc, nc))
         self._wan_next: float = 0.0
+        self._scn = None
+        self._scn_idx = 0
+        if self.scenario is not None:
+            scn = self.scenario
+            if not hasattr(scn, "segments"):  # a declarative Timeline
+                scn = scn.compile(self.topology)
+            if scn.n_workers != self.topology.n_workers:
+                raise ValueError(
+                    f"scenario compiled for {scn.n_workers} workers, "
+                    f"topology has {self.topology.n_workers}"
+                )
+            self._scn = scn
+
+    @property
+    def compiled_scenario(self):
+        """The compiled timeline driving this model (None when static)."""
+        return self._scn
 
     # -- dynamics -----------------------------------------------------------
     def advance_to(self, now: float) -> None:
         """Re-draw the slowed link if the change interval elapsed; advance
-        the correlated-WAN-jitter AR(1) states on their own cadence."""
+        the correlated-WAN-jitter AR(1) states on their own cadence; step
+        the scenario's piecewise link state to the segment containing
+        ``now`` (deterministic, no rng)."""
+        if self._scn is not None:
+            self._scn_idx = self._scn.segment_index(now, hint=self._scn_idx)
         while now >= self._next_change:
             M = self.topology.n_workers
             i = int(self._rng.integers(M))
@@ -181,11 +214,27 @@ class LinkTimeModel:
             f *= float(np.exp(self.wan_jitter * self._wan_state[ci, cm]))
         return f
 
+    def link_dead(self, i: int, m: int) -> bool:
+        """Whether the scenario currently marks the directed link i -> m
+        dead (cluster outage or a departed endpoint).  Reflects the state
+        as of the last ``advance_to``."""
+        if self._scn is None:
+            return False
+        return bool(self._scn.segments[self._scn_idx].dead[i, m])
+
     # -- queries ------------------------------------------------------------
     def network_time(self, i: int, m: int, now: float = 0.0) -> float:
         self.advance_to(now)
+        if self._scn is not None:
+            seg = self._scn.segments[self._scn_idx]
+            if seg.dead[i, m]:
+                # Timed-out transfer: a deterministic stall — no jitter or
+                # slow-link factor applies and no rng is consumed.
+                return self.dead_link_timeout
         tier = self.topology.tier(i, m)
         t = self.base_times[tier]
+        if self._scn is not None:
+            t *= self._scn.segments[self._scn_idx].degrade[i, m]
         if tier == "inter_cluster" and (self.wan_jitter > 0 or self.wan_asymmetry > 0):
             t *= self._wan_factor(i, m)
         if self._slow_edge in ((i, m), (m, i)):
@@ -204,12 +253,18 @@ class LinkTimeModel:
         M = self.topology.n_workers
         T = np.zeros((M, M))
         wan = self.wan_jitter > 0 or self.wan_asymmetry > 0
+        seg = self._scn.segments[self._scn_idx] if self._scn is not None else None
         for i in range(M):
             for m in range(M):
                 if i == m:
                     continue
+                if seg is not None and seg.dead[i, m]:
+                    T[i, m] = max(self.compute_time, self.dead_link_timeout)
+                    continue
                 tier = self.topology.tier(i, m)
                 t = self.base_times[tier]
+                if seg is not None:
+                    t *= seg.degrade[i, m]
                 if wan and tier == "inter_cluster":
                     # Slow-moving expected factors (direction skew + current
                     # AR(1) congestion state); only the iid jitter is left out.

@@ -364,6 +364,19 @@ def generate_policy_matrix(
     return best
 
 
+def connectivity_key(d: np.ndarray) -> bytes:
+    """Fingerprint of an effective edge set (who may talk to whom).
+
+    An optimal-basis warm start is only meaningful across solves that share
+    the same variable layout — the Eq.-14 LP's variables are the live edges
+    of ``d`` — so a caller threading ``PolicyResult.basis`` across refreshes
+    must drop it whenever this key changes (live set shrank, links masked).
+    The solver's shape validation would also reject a stale basis, but that
+    is a fallback, not a contract; the Monitor invalidates explicitly.
+    """
+    return np.ascontiguousarray(d != 0).tobytes()
+
+
 def uniform_policy(d: np.ndarray) -> np.ndarray:
     """AD-PSGD-style uniform neighbor selection (no self-loops)."""
     M = d.shape[0]

@@ -34,7 +34,7 @@ from repro.analysis.hlo import HloCostModel
 from repro.configs.base import SHAPES, all_archs
 from repro.dist import sharding as shd
 from repro.launch import specs as sp
-from repro.launch.mesh import make_production_mesh, worker_axis_names
+from repro.launch.mesh import make_production_mesh
 from repro.models import lm
 from repro.optim import sgd
 

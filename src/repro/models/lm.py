@@ -7,7 +7,6 @@ be 320 GB; chunked it stays O(B * chunk * V / devices).
 
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

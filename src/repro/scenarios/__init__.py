@@ -1,0 +1,27 @@
+"""Network-dynamics scenarios: declarative timelines of outages, link
+degradation, and worker churn, compiled into the piecewise link-state
+machine that ``core.nettime.LinkTimeModel`` executes (DESIGN.md §14)."""
+
+from repro.scenarios import presets
+from repro.scenarios.timeline import (
+    ACTION_EVENTS,
+    ClusterOutage,
+    CompiledTimeline,
+    LinkDegrade,
+    ScenarioCursor,
+    Timeline,
+    WorkerLeave,
+    WorkerRejoin,
+)
+
+__all__ = [
+    "ACTION_EVENTS",
+    "ClusterOutage",
+    "CompiledTimeline",
+    "LinkDegrade",
+    "ScenarioCursor",
+    "Timeline",
+    "WorkerLeave",
+    "WorkerRejoin",
+    "presets",
+]

@@ -1,0 +1,111 @@
+"""Engine-side scenario machinery shared by ALL four execution loops.
+
+The reference and batched engines must make byte-identical host-side
+decisions on the same timeline — that is the engine-parity contract — so
+every decision that a scenario adds to a loop lives here, written once:
+
+* ``attempt_fails``      — does this event's pull cross a currently-dead
+  link?  (Consumes no RNG; advances the link model to the event time, which
+  is exactly what ``event_timing`` would do a moment later.)
+* ``notify_monitor``     — forward a timeout to the Monitor; returns the
+  new (possibly earlier) wake time for the out-of-schedule refresh.
+* ``apply_action``       — apply one churn action to loop state: heap
+  membership, active set, EMA reset, and replica reseeding (via a
+  caller-supplied callback, because the two engines store replicas
+  differently — per-replica lists vs stacked trees).
+* ``prepare_monitor``    — give the Monitor the topology (for failure-
+  domain escalation) and a reroute delay derived from the link timeout.
+"""
+
+from __future__ import annotations
+
+import heapq
+
+from repro.core.monitor import IterationTimeEMA
+from repro.scenarios.timeline import WorkerLeave, WorkerRejoin
+
+
+def prepare_monitor(monitor, link_model) -> None:
+    """Default the Monitor's scenario knobs off the link model.
+
+    The reroute delay models detection honestly: a worker only *knows* a
+    pull failed once the timeout elapses, so the out-of-schedule refresh
+    fires one ``dead_link_timeout`` after the first failure — by which
+    point every worker that touched the dead domain has evidence pending,
+    and one refresh masks the whole failure domain.
+    """
+    if monitor is None or link_model.compiled_scenario is None:
+        return
+    if monitor.topology is None:
+        monitor.topology = link_model.topology
+    if monitor.reroute_delay is None:
+        monitor.reroute_delay = link_model.dead_link_timeout
+
+
+def attempt_fails(link_model, algo, state, i, m, t: float) -> bool:
+    """True when the event's pull would cross a scenario-dead link.
+
+    Called only when a scenario is attached; advancing the link model here
+    (instead of inside ``event_timing``) is idempotent for the same ``t``,
+    so RNG consumption is unchanged and identical across engines.
+    """
+    if m is None or not algo.would_communicate(state, i, m):
+        return False
+    link_model.advance_to(t)
+    return link_model.link_dead(i, m)
+
+
+def notify_monitor(monitor, i: int, m: int, t: float, next_monitor: float) -> float:
+    """Report a timed-out pull; possibly pull the next Monitor wake earlier
+    (the out-of-schedule Eq.-14 refresh)."""
+    if monitor is None:
+        return next_monitor
+    wake = monitor.notify_failure(i, m, t)
+    if wake is not None and wake < next_monitor:
+        return wake
+    return next_monitor
+
+
+def apply_action(
+    act,
+    *,
+    active: set,
+    reseed,
+    rng=None,
+    heap: list | None = None,
+    emas: list | None = None,
+    ema_beta: float = 0.5,
+) -> None:
+    """Apply one churn action to loop state (see module docstring).
+
+    ``reseed(worker, src)`` copies ``src``'s replica into ``worker``'s row
+    and zeroes its momentum — ``train/elastic.py`` provides both storage
+    forms.  Async loops pass ``heap``/``emas``/``rng``; the synchronous
+    round loops have none of the three (churn there is link-state plus the
+    rejoin reseed; the barrier still spans all M workers — non-adaptive
+    round strategies pay the timeout, which is the point).
+    """
+    w = act.worker
+    if isinstance(act, WorkerLeave):
+        active.discard(w)
+        if heap is not None:
+            heap[:] = [e for e in heap if e[1] != w]
+            heapq.heapify(heap)
+    elif isinstance(act, WorkerRejoin):
+        active.add(w)
+        src = act.seed_from
+        if src is None:
+            others = [a for a in active if a != w]
+            if not others:  # compile() validates this away; be loud anyway
+                raise RuntimeError(
+                    f"rejoin of worker {w} at t={act.time}: no live worker "
+                    "to reseed from"
+                )
+            src = min(others)
+        reseed(w, src)
+        if emas is not None:
+            emas[w] = IterationTimeEMA(len(emas), beta=ema_beta)
+        if heap is not None:
+            heapq.heappush(heap, (act.time + rng.exponential(0.005), w))
+    else:  # pragma: no cover - compile() only emits churn actions
+        raise TypeError(f"unexpected scenario action {act!r}")

@@ -1,0 +1,87 @@
+"""Timeline builders: the paper-§V scenario sweeps and a seedable generator.
+
+These return plain declarative ``Timeline``s — composition is list
+concatenation, and every randomized builder takes an explicit seed so a
+scenario is reproducible from ``(topology, seed, knobs)`` alone.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.scenarios.timeline import (
+    ClusterOutage,
+    LinkDegrade,
+    Timeline,
+    WorkerLeave,
+    WorkerRejoin,
+)
+
+
+def cluster_outage(cluster: int, start: float, end: float) -> Timeline:
+    """The Fig.-7-style headline scenario: one cluster falls off the WAN."""
+    return Timeline([ClusterOutage(cluster, start, end)])
+
+
+def partition(topology, start: float, end: float = float("inf")) -> Timeline:
+    """Full network partition: every inter-cluster link dead during
+    [start, end) — clusters train on, isolated from each other."""
+    return Timeline([ClusterOutage(c, start, end) for c in range(topology.n_clusters)])
+
+
+def degrade_links(links, start: float, end: float, factor: float) -> Timeline:
+    """Degrade each (i, m) in ``links`` by ``factor`` over [start, end)."""
+    return Timeline([LinkDegrade(i, m, start, end, factor) for i, m in links])
+
+
+def worker_blip(
+    worker: int, leave: float, rejoin: float, seed_from: int | None = None
+) -> Timeline:
+    """One worker departs and later rejoins (elastic churn)."""
+    return Timeline(
+        [WorkerLeave(worker, leave), WorkerRejoin(worker, rejoin, seed_from)]
+    )
+
+
+def random_timeline(
+    topology,
+    seed: int,
+    horizon: float,
+    n_outages: int = 1,
+    outage_len: tuple[float, float] = (10.0, 60.0),
+    n_degrades: int = 2,
+    degrade_factor: tuple[float, float] = (2.0, 100.0),
+    degrade_len: tuple[float, float] = (20.0, 120.0),
+    n_churn: int = 1,
+    churn_len: tuple[float, float] = (10.0, 60.0),
+) -> Timeline:
+    """Seedable composite scenario over ``[0, horizon)``.
+
+    Draws outage targets/windows, degraded links (factor range mirrors the
+    paper's 2x-100x slow-link sweep), and worker leave/rejoin blips from
+    ``np.random.default_rng(seed)``; the result is declarative, so the same
+    (topology, seed) always produces the same timeline.
+    """
+    rng = np.random.default_rng(seed)
+    M = topology.n_workers
+    nc = topology.n_clusters
+    tl = Timeline()
+    for _ in range(n_outages if nc > 1 else 0):
+        c = int(rng.integers(nc))
+        t0 = float(rng.uniform(0.0, horizon))
+        tl.add(ClusterOutage(c, t0, t0 + float(rng.uniform(*outage_len))))
+    for _ in range(n_degrades):
+        i = int(rng.integers(M))
+        m = int(rng.integers(M - 1))
+        m = m if m < i else m + 1
+        t0 = float(rng.uniform(0.0, horizon))
+        length = float(rng.uniform(*degrade_len))
+        factor = float(rng.uniform(*degrade_factor))
+        tl.add(LinkDegrade(i, m, t0, t0 + length, factor))
+    # Churn blips use distinct workers so leave/rejoin pairs never overlap.
+    churned = rng.choice(M, size=min(n_churn, M - 1), replace=False)
+    for w in churned:
+        t0 = float(rng.uniform(0.0, horizon))
+        t1 = t0 + float(rng.uniform(*churn_len))
+        tl.add(WorkerLeave(int(w), t0), WorkerRejoin(int(w), t1))
+    return tl

@@ -1,0 +1,312 @@
+"""Declarative network-dynamics timelines (DESIGN.md §14).
+
+A ``Timeline`` is a plain list of scheduled events over *virtual* time:
+
+* ``ClusterOutage``   — every WAN (``inter_cluster``) link touching one
+  cluster is dead during ``[start, end)`` (paper §V: a whole cluster drops
+  off the wide-area network; the Monitor must re-route around it).
+* ``LinkDegrade``     — one link's transfer time is multiplied by
+  ``factor`` during ``[start, end)`` (bandwidth degradation/restoration).
+* ``WorkerLeave`` / ``WorkerRejoin`` — elastic churn: a departed worker
+  generates no events, all its links are dead, and on rejoin its replica is
+  reseeded from a live neighbor (``train/elastic.py``).
+
+``Timeline.compile(topology)`` turns the event list into an immutable
+piecewise **link-state machine**: a sorted sequence of segments, each with
+a precomputed directed dead mask and degradation-factor matrix, plus the
+sorted churn *actions* the simulation loops must apply (heap membership
+and replica reseeding are loop-side effects; pure link state is not).
+
+The compiled form is runtime-free: ``LinkTimeModel`` keeps its own segment
+pointer (advanced by ``advance_to``) and every engine loop walks its own
+``ScenarioCursor``, so one compiled timeline can drive any number of
+independent, bit-identical runs.
+
+Everything here is deterministic and consumes **no RNG** — scenario state
+is a pure function of virtual time, which is what keeps the reference and
+batched engines bit-exact on the same timeline (tests/test_engines.py).
+Seedable *generation* of timelines lives in ``repro.scenarios.presets``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ClusterOutage:
+    """All ``inter_cluster`` links with an endpoint in ``cluster`` are dead
+    during ``[start, end)``; intra-cluster links keep working."""
+
+    cluster: int
+    start: float
+    end: float
+
+
+@dataclass(frozen=True)
+class LinkDegrade:
+    """Multiply the transfer time of link (i, m) by ``factor`` during
+    ``[start, end)``; ``symmetric`` applies it to both directions."""
+
+    i: int
+    m: int
+    start: float
+    end: float
+    factor: float
+    symmetric: bool = True
+
+
+@dataclass(frozen=True)
+class WorkerLeave:
+    """Worker departs at ``time``: no more events, all its links dead."""
+
+    worker: int
+    time: float
+
+
+@dataclass(frozen=True)
+class WorkerRejoin:
+    """Worker returns at ``time``; its replica is reseeded from
+    ``seed_from`` (default: the lowest-indexed active worker)."""
+
+    worker: int
+    time: float
+    seed_from: int | None = None
+
+
+#: Churn event types the simulation loops must act on (vs pure link state).
+ACTION_EVENTS = (WorkerLeave, WorkerRejoin)
+
+
+@dataclass(frozen=True)
+class Segment:
+    """One piece of the piecewise link state: valid on [start, next start)."""
+
+    start: float
+    dead: np.ndarray  # (M, M) bool, directed: link i->m is dead
+    degrade: np.ndarray  # (M, M) float multiplier on transfer time
+
+
+@dataclass(frozen=True)
+class CompiledTimeline:
+    """Immutable compiled form; see module docstring."""
+
+    n_workers: int
+    segments: tuple  # Segment, ascending start; segments[0].start == -inf
+    actions: tuple  # churn events sorted by (time, worker-leave-first)
+    boundaries: tuple  # every distinct event time (window-split points)
+    events: tuple  # the original declarative events, for introspection
+
+    def segment_index(self, now: float, hint: int = 0) -> int:
+        """Index of the segment containing ``now`` (monotonic ``hint``
+        makes repeated forward queries O(1) amortized)."""
+        k = hint
+        segs = self.segments
+        while k + 1 < len(segs) and now >= segs[k + 1].start:
+            k += 1
+        return k
+
+    def active_workers(self, now: float) -> np.ndarray:
+        """Workers present at ``now`` (before applying actions at ``now``
+        itself: an action at exactly ``now`` counts as already fired,
+        matching the loops' fire-before-the-crossing-event convention)."""
+        active = np.ones(self.n_workers, dtype=bool)
+        for act in self.actions:
+            if act.time > now:
+                break
+            active[act.worker] = isinstance(act, WorkerRejoin)
+        return active
+
+
+class ScenarioCursor:
+    """A loop's private walk over a compiled timeline's boundaries.
+
+    The engines use two operations, both pure host logic so the reference
+    and batched loops stay bit-identical:
+
+    * ``next_time`` — the earliest unprocessed boundary.  The batched
+      engine flushes its current window/round block before this time, so
+      no fused cohort or scan chain ever spans a scenario boundary.
+    * ``pop_due(t)`` — consume every boundary with time <= ``t`` (the next
+      unit of work's start time) and return the churn actions among them,
+      in order.  Link-state boundaries return nothing (the LinkTimeModel
+      advances itself); they still split windows.
+    """
+
+    def __init__(self, compiled: CompiledTimeline):
+        self._boundaries = compiled.boundaries
+        self._actions = compiled.actions
+        self._bi = 0
+        self._ai = 0
+
+    @property
+    def next_time(self) -> float:
+        if self._bi >= len(self._boundaries):
+            return float("inf")
+        return self._boundaries[self._bi]
+
+    def pop_due(self, t: float) -> list:
+        while self._bi < len(self._boundaries) and self._boundaries[self._bi] <= t:
+            self._bi += 1
+        due = []
+        while self._ai < len(self._actions) and self._actions[self._ai].time <= t:
+            due.append(self._actions[self._ai])
+            self._ai += 1
+        return due
+
+
+@dataclass
+class Timeline:
+    """Declarative event list; ``compile`` validates and freezes it."""
+
+    events: list = field(default_factory=list)
+
+    def add(self, *events) -> "Timeline":
+        self.events.extend(events)
+        return self
+
+    # -- validation ---------------------------------------------------------
+    def _validate(self, topology) -> None:
+        M = topology.n_workers
+        nc = topology.n_clusters
+        pending: dict[int, bool] = {}  # worker -> currently departed
+        # Same (time, rank) order compile() and the runtime use — equal-time
+        # leaves fire before rejoins, and validation must see that order.
+        for e in sorted(self.events, key=lambda e: (_event_time(e), _event_rank(e))):
+            if isinstance(e, ClusterOutage):
+                if not (0 <= e.cluster < nc):
+                    raise ValueError(
+                        f"ClusterOutage cluster {e.cluster} out of range "
+                        f"(topology has {nc} clusters)"
+                    )
+                if not (np.isfinite(e.start) and e.start < e.end):
+                    raise ValueError(f"ClusterOutage needs start < end, got {e}")
+            elif isinstance(e, LinkDegrade):
+                if not (0 <= e.i < M and 0 <= e.m < M and e.i != e.m):
+                    raise ValueError(f"LinkDegrade endpoints invalid: {e}")
+                if not (e.factor > 0 and np.isfinite(e.factor)):
+                    raise ValueError(f"LinkDegrade factor must be finite > 0: {e}")
+                if not (np.isfinite(e.start) and e.start < e.end):
+                    raise ValueError(f"LinkDegrade needs start < end, got {e}")
+            elif isinstance(e, WorkerLeave):
+                if not (0 <= e.worker < M) or not np.isfinite(e.time):
+                    raise ValueError(f"WorkerLeave worker/time invalid: {e}")
+                if pending.get(e.worker, False):
+                    raise ValueError(f"worker {e.worker} leaves twice without a rejoin")
+                pending[e.worker] = True
+            elif isinstance(e, WorkerRejoin):
+                if not (0 <= e.worker < M) or not np.isfinite(e.time):
+                    raise ValueError(f"WorkerRejoin worker/time invalid: {e}")
+                if not pending.get(e.worker, False):
+                    raise ValueError(f"worker {e.worker} rejoins without having left")
+                pending[e.worker] = False
+            else:
+                raise TypeError(f"unknown scenario event {e!r}")
+
+    # -- compilation --------------------------------------------------------
+    def compile(self, topology) -> CompiledTimeline:
+        """Freeze into the piecewise link-state machine (module docstring)."""
+        self._validate(topology)
+        M = topology.n_workers
+        events = tuple(
+            sorted(self.events, key=lambda e: (_event_time(e), _event_rank(e)))
+        )
+        actions = tuple(e for e in events if isinstance(e, ACTION_EVENTS))
+
+        times = set()
+        for e in events:
+            if isinstance(e, ACTION_EVENTS):
+                times.add(float(e.time))
+            else:
+                times.add(float(e.start))
+                times.add(float(e.end))
+        boundaries = tuple(sorted(t for t in times if np.isfinite(t)))
+
+        # Churn compiles to dead-link intervals too: a departed worker's
+        # links are down from leave to rejoin (or forever).
+        churn_intervals: list[tuple[int, float, float]] = []
+        open_since: dict[int, float] = {}
+        for a in actions:
+            if isinstance(a, WorkerLeave):
+                open_since[a.worker] = a.time
+            else:
+                churn_intervals.append((a.worker, open_since.pop(a.worker), a.time))
+        for w, t0 in open_since.items():
+            churn_intervals.append((w, t0, float("inf")))
+
+        wan = np.zeros((M, M), dtype=bool)  # inter_cluster link mask
+        cluster = np.array([topology.cluster_of(i) for i in range(M)])
+        for i in range(M):
+            for m in range(M):
+                wan[i, m] = i != m and topology.tier(i, m) == "inter_cluster"
+
+        def state_at(t0: float) -> tuple[np.ndarray, np.ndarray]:
+            dead = np.zeros((M, M), dtype=bool)
+            degrade = np.ones((M, M))
+            for e in events:
+                if isinstance(e, ClusterOutage) and e.start <= t0 < e.end:
+                    touch = cluster == e.cluster
+                    dead |= wan & (touch[:, None] | touch[None, :])
+                elif isinstance(e, LinkDegrade) and e.start <= t0 < e.end:
+                    degrade[e.i, e.m] *= e.factor
+                    if e.symmetric:
+                        degrade[e.m, e.i] *= e.factor
+            for w, a, b in churn_intervals:
+                if a <= t0 < b:
+                    dead[w, :] = True
+                    dead[:, w] = True
+                    dead[w, w] = False
+            np.fill_diagonal(dead, False)
+            return dead, degrade
+
+        # Segment 0 covers (-inf, first boundary): nothing is active yet.
+        pre = boundaries[0] - 1.0 if boundaries else 0.0
+        segments = (Segment(float("-inf"), *state_at(pre)),) + tuple(
+            Segment(s, *state_at(s)) for s in boundaries
+        )
+
+        # A timeline must never depopulate the run, and every automatic
+        # rejoin needs a live reseed source — validated by replaying the
+        # actions in the exact runtime order (equal-time leaves fire before
+        # rejoins; the active set may be empty transiently *within* one
+        # instant, but never after it, and a rejoin's automatic source is
+        # whatever is live at its own fire point).
+        live = set(range(M))
+        for k, a in enumerate(actions):
+            if isinstance(a, WorkerLeave):
+                live.discard(a.worker)
+            else:
+                if a.seed_from is None and not (live - {a.worker}):
+                    raise ValueError(
+                        f"worker {a.worker} rejoins at t={a.time} with no "
+                        "live worker to reseed from"
+                    )
+                live.add(a.worker)
+            group_ends = k + 1 == len(actions) or actions[k + 1].time != a.time
+            if group_ends and not live:
+                raise ValueError(
+                    f"timeline leaves zero active workers at t={a.time}"
+                )
+
+        return CompiledTimeline(
+            n_workers=M,
+            segments=segments,
+            actions=actions,
+            boundaries=boundaries,
+            events=events,
+        )
+
+
+def _event_time(e) -> float:
+    return float(e.time if isinstance(e, ACTION_EVENTS) else e.start)
+
+
+def _event_rank(e) -> int:
+    """Equal-time determinism: leaves before rejoins, link events last."""
+    if isinstance(e, WorkerLeave):
+        return 0
+    if isinstance(e, WorkerRejoin):
+        return 1
+    return 2

@@ -88,7 +88,15 @@ import numpy as np
 
 from repro.algos.base import Algorithm
 from repro.core.monitor import IterationTimeEMA
+from repro.scenarios.driver import (
+    apply_action,
+    attempt_fails,
+    notify_monitor,
+    prepare_monitor,
+)
+from repro.scenarios.timeline import ScenarioCursor
 from repro.train import simulator as _sim
+from repro.train.elastic import reseed_row
 
 tree_map = jax.tree_util.tree_map
 
@@ -425,6 +433,19 @@ def run_batched(
     emas = [IterationTimeEMA(M, beta=cfg.ema_beta) for _ in range(M)]
     monitor = algo.make_monitor(cfg, M, d=state.d) if algo.wants_monitor(cfg) else None
     next_monitor = monitor.schedule_period if monitor else float("inf")
+    prepare_monitor(monitor, link_model)
+
+    # Scenario machinery (repro.scenarios): the cursor's boundaries are
+    # window breaks — no fused cohort or scan chain ever spans a scenario
+    # boundary, so churn actions land between device dispatches exactly
+    # where the reference loop applies them.
+    scn = link_model.compiled_scenario
+    cursor = ScenarioCursor(scn) if scn is not None else None
+    active = set(range(M))
+
+    def reseed(w, src):
+        nonlocal R, Mom
+        R, Mom = reseed_row(R, Mom, w, src)
 
     ex, ey = jnp.asarray(eval_x), jnp.asarray(eval_y)
     # Training set lives on device; per-cohort batches are gathered there
@@ -450,17 +471,28 @@ def run_batched(
 
     def draw_event():
         """Pop + fully draw the next event, consuming every host rng in
-        reference order (peer, batch, link jitter, EMA, reschedule)."""
-        nonlocal ev, t
+        reference order (peer, batch, link jitter, EMA, reschedule).  A
+        pull over a scenario-dead link is priced as the timeout, notifies
+        the Monitor, and executes as a plain local step (communicated
+        False => the fused step self-pulls with w=0)."""
+        nonlocal ev, t, next_monitor
         t_ev, i = heapq.heappop(heap)
         ev += 1
         m = algo.select_peer(state, i, rng)
         bidx = rng.choice(part_idx[i], size=bsz[i])
-        communicated = algo.would_communicate(state, i, m)
+        failed = scn is not None and attempt_fails(
+            link_model, algo, state, i, m, t_ev
+        )
+        communicated = (not failed) and algo.would_communicate(state, i, m)
         w = algo.mix_weight(state, cfg, i, m) if communicated else 0.0
-        timing = algo.event_timing(state, cfg, link_model, i, m, communicated, t_ev)
+        timing = algo.event_timing(
+            state, cfg, link_model, i, m, communicated or failed, t_ev
+        )
         res.comm_time += timing.comm
         res.compute_time += timing.compute
+        if failed:
+            res.failed_pulls.append((t_ev, i, m))
+            next_monitor = notify_monitor(monitor, i, m, t_ev, next_monitor)
         if algo.reports_ema and m is not None:
             emas[i].update(m, timing.duration)
         heapq.heappush(heap, (t_ev + timing.duration, i))
@@ -701,13 +733,23 @@ def run_batched(
         flush_chain()
 
     while ev < total:
+        # ---- scenario churn actions fire before the first event popping
+        # at or after their time, between device dispatches ----
+        if cursor is not None:
+            for act in cursor.pop_due(heap[0][0]):
+                apply_action(act, active=active, reseed=reseed, rng=rng,
+                             heap=heap, emas=emas, ema_beta=cfg.ema_beta)
         # ---- draw one window of events, stopping at the next boundary ----
         window = []
         while len(window) < window_cap and ev < total:
+            if cursor is not None and heap[0][0] >= cursor.next_time:
+                break  # scenario boundary: flush before crossing it
             e = draw_event()
             window.append(e)
             if (monitor is not None and e[0] >= next_monitor) or e[6] % record_every == 0:
                 break
+        if not window:
+            continue  # boundary was immediately due; actions now applied
         t_last, ev_last = window[-1][0], window[-1][6]
 
         # ---- execute the whole window, level by level (chains fused) ----
@@ -717,10 +759,13 @@ def run_batched(
         # loop fires them after the boundary event (Monitor first, then the
         # periodic evaluation) ----
         if monitor is not None and t_last >= next_monitor:
-            monitor.collect({j: emas[j].snapshot() for j in range(M)})
+            monitor.collect(
+                {j: emas[j].snapshot() for j in range(M) if j in active}
+            )
             pol = monitor.step()
             algo.on_policy(state, pol)
             res.policy_updates += 1
+            res.policy_log.append((t_last, pol.rho, pol.P.copy()))
             next_monitor += monitor.schedule_period
         if ev_last % record_every == 0:
             eval_now(t_last, ev_last)
@@ -820,6 +865,18 @@ def run_batched_sync(
     Mom = tree_map(lambda l: jnp.zeros((M,) + l.shape, l.dtype), p0)
     step, chain_step = _sync_steps_for(algo, cfg.lr, cfg.momentum)
 
+    # Scenario machinery: boundaries break the scan-fused round blocks so a
+    # rejoin reseed lands between dispatches, at the same round as the
+    # reference loop; link-state changes need no action (round_timing draws
+    # from the link model at each round's start time on both engines).
+    scn = link_model.compiled_scenario
+    cursor = ScenarioCursor(scn) if scn is not None else None
+    active = set(range(M))
+
+    def reseed(w, src):
+        nonlocal R, Mom
+        R, Mom = reseed_row(R, Mom, w, src)
+
     bsz = [min(cfg.batch_size, len(part_idx[i])) for i in range(M)]
     Bmax = max(bsz)
     mask = np.zeros((M, Bmax), np.float32)
@@ -860,11 +917,16 @@ def run_batched_sync(
     t = 0.0
     r = 0
     while r < rounds:
+        if cursor is not None:
+            for act in cursor.pop_due(t):
+                apply_action(act, active=active, reseed=reseed)
         # ---- draw a block of rounds, ending at the next record boundary,
         # consuming every host rng in reference order ----
         gids, idxs = [], []
         fire = False
         while r < rounds:
+            if cursor is not None and cursor.next_time <= t:
+                break  # scenario boundary: flush the block before crossing
             groups = algo.select_groups(state, rng)
             timing = algo.round_timing(state, cfg, link_model, groups, t)
             t += timing.duration
@@ -887,6 +949,8 @@ def run_batched_sync(
             if fire:
                 break
 
+        if not gids:
+            continue  # boundary was immediately due; actions now applied
         # ---- execute the block: one dispatch per block (scan over rounds),
         # or per round with fusion off ----
         if len(gids) > 1 and fuse:

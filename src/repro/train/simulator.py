@@ -50,6 +50,14 @@ import numpy as np
 from repro.algos import Algorithm, get_algorithm, mean_params
 from repro.core.monitor import IterationTimeEMA
 from repro.core.nettime import LinkTimeModel
+from repro.scenarios.driver import (
+    apply_action,
+    attempt_fails,
+    notify_monitor,
+    prepare_monitor,
+)
+from repro.scenarios.timeline import ScenarioCursor
+from repro.train.elastic import reseed_replica
 
 
 # --------------------------------------------------------------------------
@@ -155,6 +163,11 @@ class SimResult:
     cohorts: int = 0  # batched engine: logical cohorts (levels / rounds)
     dispatches: int = 0  # batched engine: actual device dispatches (<= cohorts
     #                      when chain fusion packs several cohorts per call)
+    # Scenario telemetry (repro.scenarios), identical across engines:
+    # every timed-out pull as (t, i, m), and every published policy as
+    # (t, rho, P) — the bench suite reads time-to-reroute off these.
+    failed_pulls: list = field(default_factory=list)
+    policy_log: list = field(default_factory=list)
 
     def time_to_loss(self, target: float) -> float:
         for t, l in zip(self.times, self.losses):
@@ -241,11 +254,26 @@ def simulate(
         )
         return new_p
 
+    scn = link_model.compiled_scenario
+    cursor = ScenarioCursor(scn) if scn is not None else None
+    active = set(range(M))
+
+    def reseed(w, src):
+        reseed_replica(replicas, momenta, w, src)
+
     # ---------------- synchronous strategies: round-based loop ----------------
     if algo.synchronous:
         t = 0.0
         rounds = cfg.total_events // M
         for r in range(rounds):
+            # Churn actions fire before the first round starting at or after
+            # their time.  For round strategies only the rejoin reseed acts
+            # here: the barrier still spans all M workers, so a departed
+            # member stalls the round at the link timeout (non-adaptive
+            # baselines pay; that is the paper's Fig.-7 contrast).
+            if cursor is not None:
+                for act in cursor.pop_due(t):
+                    apply_action(act, active=active, reseed=reseed)
             groups = algo.select_groups(state, rng)
             timing = algo.round_timing(state, cfg, link_model, groups, t)
             t += timing.duration
@@ -263,6 +291,7 @@ def simulate(
     emas = [IterationTimeEMA(M, beta=cfg.ema_beta) for _ in range(M)]
     monitor = algo.make_monitor(cfg, M, d=state.d) if algo.wants_monitor(cfg) else None
     next_monitor = monitor.schedule_period if monitor else float("inf")
+    prepare_monitor(monitor, link_model)
 
     heap = []
     for i in range(M):
@@ -270,12 +299,28 @@ def simulate(
     ev = 0
     t = 0.0
     while ev < cfg.total_events:
+        # Scenario churn actions fire before the first event popping at or
+        # after their time (heap membership, EMA reset, replica reseed).
+        if cursor is not None:
+            for act in cursor.pop_due(heap[0][0]):
+                apply_action(act, active=active, reseed=reseed, rng=rng,
+                             heap=heap, emas=emas, ema_beta=cfg.ema_beta)
         t, i = heapq.heappop(heap)
         ev += 1
 
         m = algo.select_peer(state, i, rng)
         x_half = grad_step(i)
-        communicated = algo.apply_comm(state, cfg, replicas, i, m, x_half)
+        # A pull over a scenario-dead link times out: the attempt is priced
+        # (event_timing sees the timeout), nothing is mixed, and the Monitor
+        # is notified so it can re-route out of schedule.
+        failed = scn is not None and attempt_fails(link_model, algo, state, i, m, t)
+        if failed:
+            algo.apply_failed(state, cfg, replicas, i, x_half)
+            res.failed_pulls.append((t, i, m))
+            next_monitor = notify_monitor(monitor, i, m, t, next_monitor)
+            communicated = True
+        else:
+            communicated = algo.apply_comm(state, cfg, replicas, i, m, x_half)
         timing = algo.event_timing(state, cfg, link_model, i, m, communicated, t)
         res.comm_time += timing.comm
         res.compute_time += timing.compute
@@ -284,12 +329,16 @@ def simulate(
 
         heapq.heappush(heap, (t + timing.duration, i))
 
-        # Network Monitor wakes every T_s (period owned by the Monitor)
+        # Network Monitor wakes every T_s (period owned by the Monitor) or
+        # at an out-of-schedule failure-triggered refresh.
         if monitor is not None and t >= next_monitor:
-            monitor.collect({j: emas[j].snapshot() for j in range(M)})
+            monitor.collect(
+                {j: emas[j].snapshot() for j in range(M) if j in active}
+            )
             pol = monitor.step()
             algo.on_policy(state, pol)
             res.policy_updates += 1
+            res.policy_log.append((t, pol.rho, pol.P.copy()))
             next_monitor += monitor.schedule_period
 
         if ev % record_every == 0:

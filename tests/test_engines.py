@@ -34,10 +34,12 @@ def data():
 
 
 def _sim(algo, engine, data, M=8, events=450, seed=0, topo=None,
-         record_every=150, monitor_period=0.6, log=None, parts=None, **kw):
+         record_every=150, monitor_period=0.6, log=None, parts=None,
+         scenario=None, **kw):
     x, y, ex, ey = data
     topo = topo or Topology(n_workers=M, workers_per_host=4, hosts_per_pod=1)
-    link = LinkTimeModel(topo, jitter=0.02, seed=5, slow_interval=60.0)
+    link = LinkTimeModel(topo, jitter=0.02, seed=5, slow_interval=60.0,
+                         scenario=scenario, dead_link_timeout=2.0)
     if parts is None:
         parts = uniform_partition(len(y), M, seed=0)
     cfg = SimConfig(algorithm=algo, n_workers=M, total_events=events, lr=0.05,
@@ -65,6 +67,13 @@ def _assert_parity(ref, bat, loss_tol=5e-4):
     assert bat.comm_time == ref.comm_time
     assert bat.compute_time == ref.compute_time
     assert bat.policy_updates == ref.policy_updates
+    # Scenario telemetry and every published policy are host-side state:
+    # exactly equal, including each refresh's full P matrix.
+    assert bat.failed_pulls == ref.failed_pulls
+    assert len(bat.policy_log) == len(ref.policy_log)
+    for (ta, ra, Pa), (tb, rb, Pb) in zip(ref.policy_log, bat.policy_log):
+        assert ta == tb and ra == rb
+        np.testing.assert_array_equal(Pa, Pb)
     np.testing.assert_allclose(bat.losses, ref.losses, rtol=loss_tol, atol=loss_tol)
     np.testing.assert_allclose(bat.accs, ref.accs, atol=0.02)
 
@@ -348,6 +357,92 @@ def test_unknown_batched_variant_fails_loudly(data):
 def test_unknown_engine_rejected(data):
     with pytest.raises(ValueError, match="engine"):
         _sim("netmax", "definitely-not-an-engine", data, events=100)
+
+
+# --------------------------------------------------------------------------
+# Scenario timelines (repro.scenarios): outages, degradation, and churn must
+# hold EXACT host-side parity across an outage boundary for every registered
+# algorithm — windows/blocks split at scenario boundaries, failed pulls and
+# published policies are compared verbatim (ISSUE 5)
+# --------------------------------------------------------------------------
+
+
+def _scenario_setup():
+    """Two clusters of 4 plus a timeline crossing every event type: a
+    cluster outage, a link degradation window, and a leave/rejoin blip."""
+    from repro.scenarios import (
+        ClusterOutage,
+        LinkDegrade,
+        Timeline,
+        WorkerLeave,
+        WorkerRejoin,
+    )
+
+    topo = Topology(8, workers_per_host=2, hosts_per_pod=2, pods_per_cluster=1)
+    tl = Timeline([
+        ClusterOutage(1, 1.0, 3.0),
+        LinkDegrade(0, 5, 0.5, 4.0, 8.0),
+        WorkerLeave(3, 1.5),
+        WorkerRejoin(3, 3.5),
+    ])
+    return topo, tl
+
+
+@pytest.mark.parametrize("name", list_algorithms())
+def test_engine_parity_scenarios(name, data):
+    topo, tl = _scenario_setup()
+    kw = dict(M=8, topo=topo, scenario=tl)
+    ref = _sim(name, "reference", data, **kw)
+    bat = _sim(name, "batched", data, **kw)
+    _assert_parity(ref, bat)
+    algo = get_algorithm(name)
+    if not algo.synchronous:
+        # The outage actually bit: some pull timed out on this timeline.
+        assert ref.failed_pulls, name
+    if algo.wants_monitor(SimConfig()):
+        assert ref.policy_updates > 0
+
+
+def test_scenario_outage_stretches_sync_rounds(data):
+    """Round strategies don't re-route: a dead member's ring link prices at
+    the timeout, so outage-window rounds dominate the virtual clock."""
+    topo, _ = _scenario_setup()
+    from repro.scenarios import ClusterOutage, Timeline
+    from repro.data.partition import uniform_partition
+    from repro.train.simulator import SimConfig, simulate
+
+    x, y, ex, ey = data
+    parts = uniform_partition(len(y), 8, seed=0)
+
+    def run(scenario):
+        # No jitter / no dynamic slow link: the outage is the only dynamic,
+        # so the stretch is attributable (a slowed 100x link can exceed the
+        # timeout and mask it otherwise).
+        link = LinkTimeModel(topo, jitter=0.0, slowdown_range=(1.0, 1.0),
+                             seed=5, scenario=scenario, dead_link_timeout=10.0)
+        cfg = SimConfig(algorithm="allreduce", n_workers=8, total_events=160,
+                        lr=0.05, seed=0, engine="batched")
+        return simulate(cfg, link, x, y, parts, ex, ey, record_every=80)
+
+    base = run(None)
+    hit = run(Timeline([ClusterOutage(1, 1.0, 8.0)]))
+    # Rounds starting inside [1, 8) price their cross ring links at the
+    # 10s timeout instead of the 0.48s WAN base: the clock visibly stalls.
+    assert hit.times[-1] > base.times[-1] + 10.0
+
+
+def test_scenario_chain_fusion_still_exact(data):
+    """Chain fusion must not leak across scenario boundaries: fused and
+    unfused execution stay identical on a churn+outage timeline."""
+    topo, tl = _scenario_setup()
+    kw = dict(M=8, topo=topo, scenario=tl)
+    fused = _sim("netmax", "batched", data, **kw)
+    plain = _sim("netmax", "batched", data, fuse_chains=False, **kw)
+    assert fused.times == plain.times
+    assert fused.failed_pulls == plain.failed_pulls
+    assert fused.comm_time == plain.comm_time
+    assert fused.dispatches < plain.dispatches
+    np.testing.assert_allclose(fused.losses, plain.losses, rtol=1e-5, atol=1e-6)
 
 
 # --------------------------------------------------------------------------

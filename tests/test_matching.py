@@ -4,7 +4,7 @@ import numpy as np
 import pytest
 from _hypothesis_stub import given, settings, st
 
-from repro.core import matching, policy
+from repro.core import policy
 from repro.core.matching import (
     birkhoff_decompose,
     marginal_matrix,

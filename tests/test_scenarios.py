@@ -1,0 +1,447 @@
+"""Scenario-subsystem tests (DESIGN.md §14).
+
+Covers: timeline compilation into the piecewise link-state machine, the
+LinkTimeModel integration (timeouts, degradation, default-off bit
+identity), Monitor dead-link detection with failure-domain escalation and
+probation, the warm-start basis invalidation rule (ISSUE 5 satellite), the
+elastic reseed helpers, and the fully-partitioned-cluster property.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import monitor as monitor_mod
+from repro.core.monitor import NetworkMonitor
+from repro.core.nettime import LinkTimeModel, Topology, homogeneous_times
+from repro.scenarios import (
+    ClusterOutage,
+    LinkDegrade,
+    ScenarioCursor,
+    Timeline,
+    WorkerLeave,
+    WorkerRejoin,
+    presets,
+)
+
+
+def two_cluster_topo(M=8):
+    """Workers 0..M/2-1 in cluster 0, the rest in cluster 1."""
+    return Topology(M, workers_per_host=2, hosts_per_pod=2, pods_per_cluster=1)
+
+
+def cross_mask(topo):
+    cl = np.array([topo.cluster_of(i) for i in range(topo.n_workers)])
+    return cl[:, None] != cl[None, :]
+
+
+# --------------------------------------------------------------------------
+# Timeline compilation
+# --------------------------------------------------------------------------
+
+
+def test_compile_boundaries_and_outage_masks():
+    topo = two_cluster_topo()
+    tl = Timeline([ClusterOutage(1, 1.0, 3.0), LinkDegrade(0, 2, 2.0, 4.0, 8.0)])
+    comp = tl.compile(topo)
+    assert comp.boundaries == (1.0, 2.0, 3.0, 4.0)
+
+    def seg(t):
+        return comp.segments[comp.segment_index(t)]
+
+    assert not seg(0.5).dead.any()  # nothing active before the outage
+    cross = cross_mask(topo)
+    mid = seg(1.5)
+    assert mid.dead[cross].all()  # every WAN link of cluster 1, both ways
+    assert not mid.dead[~cross].any()  # intra links keep working
+    assert not seg(3.5).dead.any()  # outage over
+    # Degradation window [2, 4): symmetric by default.
+    assert seg(2.5).degrade[0, 2] == 8.0 and seg(2.5).degrade[2, 0] == 8.0
+    assert seg(1.5).degrade[0, 2] == 1.0 and seg(4.5).degrade[0, 2] == 1.0
+
+
+def test_compile_churn_intervals():
+    topo = two_cluster_topo()
+    comp = Timeline([WorkerLeave(3, 1.0), WorkerRejoin(3, 2.0)]).compile(topo)
+
+    def seg(t):
+        return comp.segments[comp.segment_index(t)]
+
+    assert seg(1.5).dead[3, :].sum() == topo.n_workers - 1
+    assert seg(1.5).dead[:, 3].sum() == topo.n_workers - 1
+    assert not seg(0.5).dead.any() and not seg(2.5).dead.any()
+    assert list(comp.active_workers(1.5)) == [i != 3 for i in range(8)]
+    assert comp.active_workers(2.5).all()
+
+
+def test_compile_validation():
+    topo = two_cluster_topo()
+    with pytest.raises(ValueError, match="out of range"):
+        Timeline([ClusterOutage(7, 0.0, 1.0)]).compile(topo)
+    with pytest.raises(ValueError, match="factor"):
+        Timeline([LinkDegrade(0, 1, 0.0, 1.0, -2.0)]).compile(topo)
+    with pytest.raises(ValueError, match="start < end"):
+        Timeline([ClusterOutage(0, 2.0, 1.0)]).compile(topo)
+    with pytest.raises(ValueError, match="rejoins without"):
+        Timeline([WorkerRejoin(0, 1.0)]).compile(topo)
+    with pytest.raises(ValueError, match="leaves twice"):
+        Timeline([WorkerLeave(0, 1.0), WorkerLeave(0, 2.0)]).compile(topo)
+    with pytest.raises(ValueError, match="zero active"):
+        Timeline([WorkerLeave(w, 1.0) for w in range(8)]).compile(topo)
+
+
+def test_compile_validation_uses_runtime_action_order():
+    """Equal-time leaves fire before rejoins at runtime; validation and
+    churn pairing must see the same order (regression: a rejoin+re-leave
+    at the same instant used to validate as rejoin-first, then compile as
+    leave-first, silently dropping the departure interval)."""
+    topo = two_cluster_topo()
+    with pytest.raises(ValueError, match="leaves twice"):
+        Timeline(
+            [WorkerLeave(0, 1.0), WorkerRejoin(0, 2.0), WorkerLeave(0, 2.0)]
+        ).compile(topo)
+
+
+def test_compile_rejects_rejoin_without_reseed_source():
+    """A rejoin whose automatic reseed source set is empty (everyone else
+    departed) must be a compile error, not a mid-simulation crash."""
+    topo = Topology(2, workers_per_host=1, hosts_per_pod=1)
+    with pytest.raises(ValueError, match="no live worker to reseed"):
+        Timeline(
+            [WorkerLeave(0, 1.0), WorkerLeave(1, 2.0), WorkerRejoin(0, 2.0)]
+        ).compile(topo)
+    # An explicit seed_from sidesteps the automatic-source requirement.
+    Timeline(
+        [WorkerLeave(0, 1.0), WorkerLeave(1, 2.0), WorkerRejoin(0, 2.0, 1)]
+    ).compile(topo)
+
+
+def test_cursor_consumes_boundaries_once():
+    topo = two_cluster_topo()
+    comp = Timeline(
+        [ClusterOutage(1, 1.0, 3.0), WorkerLeave(3, 1.5), WorkerRejoin(3, 2.5)]
+    ).compile(topo)
+    cur = ScenarioCursor(comp)
+    assert cur.next_time == 1.0
+    assert cur.pop_due(0.5) == []
+    assert cur.next_time == 1.0
+    acts = cur.pop_due(2.0)  # crosses 1.0 (outage) and 1.5 (leave)
+    assert [type(a) for a in acts] == [WorkerLeave]
+    assert cur.next_time == 2.5
+    acts = cur.pop_due(10.0)
+    assert [type(a) for a in acts] == [WorkerRejoin]
+    assert cur.next_time == float("inf")
+    assert cur.pop_due(99.0) == []
+
+
+def test_random_preset_is_seed_deterministic():
+    topo = two_cluster_topo()
+    a = presets.random_timeline(topo, seed=7, horizon=100.0)
+    b = presets.random_timeline(topo, seed=7, horizon=100.0)
+    assert a.events == b.events
+    assert a.compile(topo).boundaries == b.compile(topo).boundaries
+    assert presets.random_timeline(topo, seed=8, horizon=100.0).events != a.events
+
+
+# --------------------------------------------------------------------------
+# LinkTimeModel integration
+# --------------------------------------------------------------------------
+
+
+def test_dead_link_times_out_and_degrade_applies():
+    topo = two_cluster_topo()
+    tl = Timeline([ClusterOutage(1, 1.0, 3.0), LinkDegrade(0, 2, 2.0, 4.0, 8.0)])
+    model = LinkTimeModel(topo, jitter=0.0, slowdown_range=(1.0, 1.0),
+                          scenario=tl, dead_link_timeout=7.0)
+    base_cross = model.network_time(0, 7, now=0.0)
+    base_intra = model.network_time(0, 2, now=0.0)
+    assert model.network_time(0, 7, now=1.5) == 7.0  # timed out, no jitter
+    assert model.link_dead(0, 7) and model.link_dead(7, 0)
+    assert not model.link_dead(0, 2)
+    assert model.network_time(0, 2, now=2.5) == pytest.approx(8.0 * base_intra)
+    assert model.network_time(0, 7, now=3.5) == pytest.approx(base_cross)
+    assert model.iteration_time(0, 7, now=10.0) >= model.compute_time
+    T = model.matrix(now=10.0)  # advance past every boundary, then rewindless
+    assert T[0, 7] == pytest.approx(max(model.compute_time, base_cross))
+
+
+def test_matrix_reflects_outage():
+    topo = two_cluster_topo()
+    model = LinkTimeModel(topo, jitter=0.0, slowdown_range=(1.0, 1.0),
+                          scenario=Timeline([ClusterOutage(0, 1.0, 2.0)]),
+                          dead_link_timeout=9.0)
+    T = model.matrix(now=1.5)
+    cross = cross_mask(topo)
+    assert (T[cross] == 9.0).all()
+    assert (T[~cross & ~np.eye(8, dtype=bool)] < 9.0).all()
+
+
+def test_empty_scenario_is_bit_identical():
+    """Attaching a scenario must never perturb the rng draw sequence."""
+    topo = two_cluster_topo()
+    a = LinkTimeModel(topo, jitter=0.05, seed=3)
+    b = LinkTimeModel(topo, jitter=0.05, seed=3, scenario=Timeline([]))
+    rng = np.random.default_rng(0)
+    for _ in range(200):
+        i, m = rng.integers(8), rng.integers(8)
+        if i == m:
+            continue
+        now = float(rng.uniform(0, 700))
+        assert a.network_time(int(i), int(m), now=now) == b.network_time(
+            int(i), int(m), now=now
+        )
+
+
+def test_scenario_topology_shape_checked():
+    tl = Timeline([ClusterOutage(0, 0.0, 1.0)]).compile(two_cluster_topo(8))
+    with pytest.raises(ValueError, match="workers"):
+        LinkTimeModel(Topology(4), scenario=tl)
+
+
+# --------------------------------------------------------------------------
+# Monitor: dead-link detection, escalation, probation, refresh wake
+# --------------------------------------------------------------------------
+
+
+def _monitor(topo=None, M=8, **kw):
+    kw.setdefault("K", 4)
+    kw.setdefault("R", 4)
+    mon = NetworkMonitor(n_workers=M, alpha=0.1, **kw)
+    mon.topology = topo
+    mon.reroute_delay = 0.5
+    return mon
+
+
+def _feed(mon, M=8):
+    T = homogeneous_times(M, 0.02)
+    mon.collect({i: T[i] for i in range(M)})
+
+
+def test_notified_link_is_masked():
+    mon = _monitor()
+    _feed(mon)
+    wake = mon.notify_failure(0, 5, now=3.0)
+    assert wake == pytest.approx(3.5)  # now + reroute_delay
+    res = mon.step()
+    assert res.P[0, 5] == 0 and res.P[5, 0] == 0
+    assert res.P[1, 5] > 0  # only the reported link is masked
+
+
+def test_out_of_schedule_wake_is_shared_per_burst():
+    mon = _monitor()
+    _feed(mon)
+    w1 = mon.notify_failure(0, 5, now=3.0)
+    w2 = mon.notify_failure(1, 6, now=3.2)  # same burst: one refresh
+    assert w1 == w2 == pytest.approx(3.5)
+    mon.step()
+    assert mon.notify_failure(2, 7, now=9.0) == pytest.approx(9.5)
+
+
+def test_peer_escalation_needs_same_cluster_evidence():
+    """Cross-cluster failures alone must not declare a peer dead — a WAN
+    outage produces exactly that signature; only a cluster-mate's failed
+    pull disambiguates (a crashed worker fails intra pulls too)."""
+    topo = two_cluster_topo()
+    mon = _monitor(topo)
+    _feed(mon)
+    mon.notify_failure(0, 5, now=1.0)  # both pullers in cluster 0,
+    mon.notify_failure(1, 5, now=1.1)  # peer 5 in cluster 1
+    res = mon.step()
+    assert res.P[4, 5] > 0  # peer 5 still reachable from its own cluster
+    mon2 = _monitor(topo)
+    _feed(mon2)
+    mon2.notify_failure(0, 5, now=1.0)
+    mon2.notify_failure(4, 5, now=1.1)  # cluster-mate can't reach it either
+    res2 = mon2.step()
+    assert np.all(res2.P[:, 5] == 0) and np.all(res2.P[5, :] == 0)
+
+
+def test_peer_escalation_without_topology():
+    mon = _monitor(topo=None)
+    _feed(mon)
+    mon.notify_failure(0, 5, now=1.0)
+    mon.notify_failure(1, 5, now=1.1)
+    res = mon.step()
+    assert np.all(res.P[:, 5] == 0)
+
+
+def test_cluster_escalation_masks_whole_pair():
+    topo = two_cluster_topo()
+    mon = _monitor(topo)
+    _feed(mon)
+    mon.notify_failure(0, 5, now=1.0)  # two distinct unreachable peers in
+    mon.notify_failure(1, 6, now=1.1)  # cluster 1 => the WAN pair is down
+    res = mon.step()
+    cross = cross_mask(topo)
+    assert res.P[cross].sum() == 0
+    assert res.P[0, 1] > 0 and res.P[5, 4] > 0  # both intra sides alive
+
+
+def test_failure_masks_expire_after_probation():
+    topo = two_cluster_topo()
+    mon = _monitor(topo, revive_after=2)
+    cross = cross_mask(topo)
+    _feed(mon)
+    mon.notify_failure(0, 5, now=1.0)
+    mon.notify_failure(1, 6, now=1.1)
+    assert mon.step().P[cross].sum() == 0  # masked...
+    _feed(mon)
+    assert mon.step().P[cross].sum() == 0  # ...still within probation...
+    _feed(mon)
+    assert mon.step().P[cross].sum() > 0  # ...revived: links get re-probed
+
+
+# --------------------------------------------------------------------------
+# Warm-basis invalidation (ISSUE 5 satellite): step() must DROP the cached
+# basis when the effective edge set changes — never rely on the solver's
+# shape-validation fallback.
+# --------------------------------------------------------------------------
+
+
+@pytest.fixture()
+def warm_spy(monkeypatch):
+    captured = []
+    real = monitor_mod.generate_policy_matrix
+
+    def spy(*args, **kwargs):
+        captured.append(kwargs.get("warm"))
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(monitor_mod, "generate_policy_matrix", spy)
+    return captured
+
+
+def test_basis_dropped_when_live_set_shrinks(warm_spy):
+    M = 6
+    mon = NetworkMonitor(n_workers=M, alpha=0.1, K=4, R=4, dead_after=2)
+    T = homogeneous_times(M, 0.02)
+    mon.collect({i: T[i] for i in range(M)})
+    mon.step()
+    assert warm_spy[0] is None  # first refresh: nothing cached yet
+    mon.collect({i: T[i] for i in range(M)})
+    mon.step()
+    assert warm_spy[1] is not None  # steady state: basis re-threaded
+    for _ in range(2):  # worker 5 stops reporting -> live set shrinks
+        mon.collect({i: T[i] for i in range(M) if i != 5})
+    mon.step()
+    assert warm_spy[2] is None  # dropped explicitly, not solver-rejected
+    assert 5 not in mon.live_workers
+    mon.collect({i: T[i] for i in range(M) if i != 5})
+    mon.step()
+    assert warm_spy[3] is not None  # stable shrunken set: warm again
+
+
+def test_basis_dropped_when_links_masked(warm_spy):
+    mon = _monitor()
+    _feed(mon)
+    mon.step()
+    _feed(mon)
+    mon.step()
+    assert warm_spy[1] is not None
+    _feed(mon)
+    mon.notify_failure(0, 5, now=1.0)  # edge set changes -> invalidate
+    mon.step()
+    assert warm_spy[2] is None
+
+
+# --------------------------------------------------------------------------
+# Elastic reseed helpers
+# --------------------------------------------------------------------------
+
+
+def test_reseed_row_matches_reseed_replica():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.train.elastic import reseed_replica, reseed_row
+
+    M = 4
+    leaves = [
+        {"w": jnp.arange(M * 3, dtype=jnp.float32).reshape(M, 3), "b": jnp.ones((M, 2))}
+    ]
+    mom = jax.tree_util.tree_map(lambda l: l + 10.0, leaves)
+    R2, Mom2 = reseed_row(leaves, mom, worker=2, seed_from=0)
+    assert np.array_equal(R2[0]["w"][2], leaves[0]["w"][0])
+    assert np.all(Mom2[0]["w"][2] == 0)
+    assert np.array_equal(R2[0]["w"][1], leaves[0]["w"][1])  # others untouched
+
+    replicas = [jax.tree_util.tree_map(lambda l: l[i], leaves[0]) for i in range(M)]
+    momenta = [jax.tree_util.tree_map(lambda l: l[i] + 10.0, leaves[0]) for i in range(M)]
+    reseed_replica(replicas, momenta, worker=2, seed_from=0)
+    assert np.array_equal(replicas[2]["w"], R2[0]["w"][2])
+    assert np.all(momenta[2]["w"] == 0)
+
+
+# --------------------------------------------------------------------------
+# The partition property: a fully-partitioned cluster yields zero
+# cross-partition communication once the Monitor has re-routed
+# --------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def sim_data():
+    from repro.data.partition import uniform_partition
+    from repro.data.synthetic import train_eval_split
+
+    x, y, ex, ey = train_eval_split(1600, 400, 32, 10, seed=0)
+    parts = uniform_partition(len(y), 8, seed=0)
+    return x, y, parts, ex, ey
+
+
+def _run_partitioned(algo, sim_data, events=700):
+    from repro.train.simulator import SimConfig, simulate
+
+    topo = two_cluster_topo()
+    x, y, parts, ex, ey = sim_data
+    link = LinkTimeModel(topo, jitter=0.02, seed=5,
+                         scenario=presets.partition(topo, start=0.5),
+                         dead_link_timeout=1.0)
+    cfg = SimConfig(algorithm=algo, n_workers=8, total_events=events, lr=0.05,
+                    monitor_period=0.5, seed=0, engine="batched")
+    return simulate(cfg, link, x, y, parts, ex, ey, record_every=100), topo
+
+
+def test_partitioned_cluster_zero_cross_communication(sim_data):
+    from repro.algos.netmax import NetMax
+
+    class PatientNetMax(NetMax):
+        """Probation disabled: the partition is permanent, so re-probing
+        would only re-discover it — this isolates the property."""
+
+        def make_monitor(self, cfg, M, d=None):
+            mon = super().make_monitor(cfg, M, d=d)
+            mon.revive_after = 10**9
+            return mon
+
+    res, topo = _run_partitioned(PatientNetMax(), sim_data)
+    cross = cross_mask(topo)
+    cl = [topo.cluster_of(i) for i in range(8)]
+
+    # Every timed-out pull is a cross-partition attempt (intra links live).
+    assert res.failed_pulls
+    assert all(cl[i] != cl[m] for _, i, m in res.failed_pulls)
+
+    # The Monitor re-routes: some refresh publishes zero cross mass...
+    reroute_t = next(
+        (t for t, _, P in res.policy_log if P[cross].sum() == 0), None
+    )
+    assert reroute_t is not None
+    # ...after which there is zero cross-partition communication: no pull
+    # ever crosses the partition again (attempts would fail => be logged).
+    assert all(t <= reroute_t for t, _, _ in res.failed_pulls)
+    for t, _, P in res.policy_log:
+        if t >= reroute_t:
+            assert P[cross].sum() == 0
+    # The isolated halves keep training.
+    assert np.isfinite(res.losses[-1]) and res.losses[-1] < res.losses[0]
+
+
+def test_partitioned_cluster_nonadaptive_baseline_keeps_failing(sim_data):
+    """AD-PSGD has no Monitor: cross-partition attempts (and their
+    timeouts) continue for the whole run — the contrast NetMax's
+    adaptivity is measured against."""
+    res, topo = _run_partitioned("adpsgd", sim_data, events=500)
+    cl = [topo.cluster_of(i) for i in range(8)]
+    assert len(res.failed_pulls) > 5
+    assert all(cl[i] != cl[m] for _, i, m in res.failed_pulls)
+    # Failures span the run, not just its start.
+    assert res.failed_pulls[-1][0] > 0.5 * res.times[-1]
