@@ -5,8 +5,16 @@ paper §I).  NetMax's Monitor re-detects and re-routes; a static policy
 (frozen after the first refresh) does not.
 
     PYTHONPATH=src python examples/hetero_simulation.py
+
+With ``--trace-out DIR`` the per-strategy runs also export their event
+timelines as repro.trace JSONL files (one per strategy) — inspect them
+with ``python -m repro.trace DIR/trace_<algo>.jsonl``, open them in
+chrome://tracing / Perfetto via ``repro.trace.chrome_trace``, or feed
+them to ``repro.trace.calibrate`` / ``replay_model`` for trace-driven
+what-if studies.
 """
 
+import argparse
 import sys
 from pathlib import Path
 
@@ -18,7 +26,14 @@ from repro.core.monitor import NetworkMonitor
 from repro.core.nettime import homogeneous_times
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument(
+        "--trace-out", metavar="DIR", default=None,
+        help="export per-strategy repro.trace JSONL timelines to DIR",
+    )
+    args = ap.parse_args(argv)
+
     M = 6
     alpha = 0.1
     mon = NetworkMonitor(M, alpha=alpha, K=8, R=8)
@@ -84,15 +99,26 @@ def main():
     topo = Topology(n_workers=M, workers_per_host=3, hosts_per_pod=1)
     x, y, ex, ey = train_eval_split(2000, 500, 32, 10, seed=0)
     parts = uniform_partition(len(y), M, seed=0)
+    trace_dir = None
+    if args.trace_out:
+        trace_dir = Path(args.trace_out)
+        trace_dir.mkdir(parents=True, exist_ok=True)
     print(f"\nAll {len(list_algorithms())} registered strategies on the "
           "dynamic network (short runs):")
     for algo in list_algorithms():
         link = LinkTimeModel(topo, jitter=0.02, seed=7, slow_interval=60.0)
         cfg = SimConfig(algorithm=algo, n_workers=M, total_events=1200,
-                        lr=0.02, monitor_period=10.0, seed=0)
+                        lr=0.02, monitor_period=10.0, seed=0,
+                        trace=trace_dir is not None)
         r = simulate(cfg, link, x, y, parts, ex, ey, record_every=300)
         print(f"  {algo:12s} loss={r.losses[-1]:.4f} t={r.times[-1]:7.1f}s "
               f"comm={r.comm_time:7.1f}s policy_updates={r.policy_updates}")
+        if trace_dir is not None:
+            from repro.trace import from_sim_result, write_jsonl
+
+            out = trace_dir / f"trace_{algo}.jsonl"
+            write_jsonl(from_sim_result(r, cfg=cfg, link_model=link), out)
+            print(f"               trace -> {out}")
 
     # Wide-area scale-up (paper §V): 32 workers across 2 WAN-separated
     # clusters — the batched cohort engine makes this size interactive,

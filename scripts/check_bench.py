@@ -45,7 +45,31 @@ def _walk_policy(doc):
             yield f"{topo}/{size}", "warm_hit_rate", row.get("warm_hit_rate")
 
 
-_WALKERS = {"simulator": _walk_simulator, "policy": _walk_policy}
+def _walk_trace(doc):
+    """Yield ratio metrics from BENCH_trace.json: replay fidelity and
+    calibration quality per algorithm (both are accuracies in (0, 1], so
+    the regression floor is meaningful on any hardware), plus the headline
+    ordering/what-if speedups.  Raw wall-clock seconds are not gated."""
+    for algo, row in doc.get("results", {}).items():
+        yield algo, "replay_accuracy", row.get("replay_accuracy")
+        yield algo, "calibration_accuracy", row.get("calibration_accuracy")
+    s = doc.get("summary", {})
+    for k in (
+        "netmax_speedup_vs_adpsgd",
+        "adpsgd_speedup_vs_allreduce",
+        "whatif_upgrade_speedup",
+        "whatif_switch_ttl_speedup",
+        "fixture_calibration_accuracy",
+        "ordering_ok",  # bool -> 1/0: any False against a True baseline fails
+    ):
+        yield "summary", k, s.get(k)
+
+
+_WALKERS = {
+    "simulator": _walk_simulator,
+    "policy": _walk_policy,
+    "trace": _walk_trace,
+}
 
 
 def collect(suite: str, doc) -> dict:

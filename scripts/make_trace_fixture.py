@@ -1,0 +1,66 @@
+"""Regenerate the committed trace fixture (tests/fixtures/).
+
+    PYTHONPATH=src python scripts/make_trace_fixture.py
+
+Runs a small, fully-seeded heterogeneous simulation — two WAN-separated
+clusters of four workers, netmax with a fast Monitor, a brief cluster
+outage so the trace carries ``timeout`` records alongside ``pull`` /
+``local`` / ``refresh`` — and writes it as a v1 JSONL trace.  The fixture
+is what lets the ingest/calibrate tests, the CI summarizer sanity-print,
+and ``benchmarks/run.py --suite trace`` run without a prior simulation.
+
+Deterministic: same seeds, same file, byte for byte.
+"""
+
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+
+FIXTURE = ROOT / "tests" / "fixtures" / "trace_hetero_M8.jsonl"
+
+M = 8
+EVENTS = 600
+SEED = 0
+LINK_SEED = 5
+
+
+def build_trace():
+    from repro.core.nettime import LinkTimeModel, Topology
+    from repro.data.partition import uniform_partition
+    from repro.data.synthetic import train_eval_split
+    from repro.scenarios import ClusterOutage, Timeline
+    from repro.train.simulator import SimConfig, simulate
+    from repro.trace import from_sim_result
+
+    topo = Topology.multi_cluster(M, workers_per_host=2, hosts_per_pod=1,
+                                  pods_per_cluster=2)  # 2 clusters of 4
+    timeline = Timeline([ClusterOutage(1, 2.0, 4.0)])
+    link = LinkTimeModel(topo, jitter=0.05, seed=LINK_SEED,
+                         scenario=timeline, dead_link_timeout=2.0)
+    x, y, ex, ey = train_eval_split(1600, 400, 32, 10, seed=0)
+    parts = uniform_partition(len(y), M, seed=0)
+    cfg = SimConfig(algorithm="netmax", n_workers=M, total_events=EVENTS,
+                    lr=0.05, monitor_period=1.5, seed=SEED, trace=True)
+    res = simulate(cfg, link, x, y, parts, ex, ey, record_every=200)
+    assert res.failed_pulls, "fixture should carry timeout records"
+    return from_sim_result(res, cfg=cfg, link_model=link)
+
+
+def main() -> int:
+    from repro.trace import write_jsonl
+
+    trace = build_trace()
+    FIXTURE.parent.mkdir(parents=True, exist_ok=True)
+    write_jsonl(trace, FIXTURE)
+    counts = trace.counts()
+    print(f"wrote {FIXTURE} ({len(trace.records)} records: "
+          f"{', '.join(f'{k}={v}' for k, v in counts.items() if v)})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

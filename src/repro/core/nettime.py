@@ -140,8 +140,30 @@ class LinkTimeModel:
     # seconds), then fails: the transfer times out, no data moves, and the
     # event's duration is exactly the timeout (no jitter is drawn for it).
     dead_link_timeout: float = 30.0
+    # -- trace-driven replay / calibration seam (repro.trace; DESIGN.md §15)
+    # A pluggable time source consulted FIRST for live links: when its
+    # ``network_time(i, m, now)`` returns a duration, that value is used
+    # verbatim — no tier base, degrade, slow-link, or jitter factor applies
+    # and NO rng is consumed (measured durations already embed all of them).
+    # Returning None falls through to the model (the "past the trace
+    # horizon" fallback).  Scenario dead-link semantics take precedence:
+    # a dead link times out without ever consulting the source.
+    # ``repro.trace.replay.ReplayLinkSource`` is the canonical provider.
+    time_source: object | None = None
+    # Per-directed-link multiplier on the *modeled* transfer time, applied
+    # after scenario degradation (calibration's per-link WAN-skew output;
+    # repro.trace.calibrate).  None = off; the replay path above bypasses
+    # it (measured durations are already per-link).
+    link_scale: np.ndarray | None = None
 
     def __post_init__(self):
+        # Observation tap for ``network_time`` (NOT a constructor field):
+        # when set to a callable ``tap(i, m, value, dead)`` every query is
+        # reported just before it returns.  The simulators' sync loops
+        # install it around ``round_timing`` so traced runs capture the
+        # per-link times a round draws (repro.trace); it never alters the
+        # returned value or the rng stream.
+        self.query_tap = None
         self._rng = np.random.default_rng(self.seed)
         self._slow_edge: tuple[int, int] | None = None
         self._slow_factor: float = 1.0
@@ -170,6 +192,13 @@ class LinkTimeModel:
                     f"topology has {self.topology.n_workers}"
                 )
             self._scn = scn
+        if self.link_scale is not None:
+            M = self.topology.n_workers
+            self.link_scale = np.asarray(self.link_scale, dtype=float)
+            if self.link_scale.shape != (M, M):
+                raise ValueError(
+                    f"link_scale shape {self.link_scale.shape} != ({M}, {M})"
+                )
 
     @property
     def compiled_scenario(self):
@@ -230,17 +259,32 @@ class LinkTimeModel:
             if seg.dead[i, m]:
                 # Timed-out transfer: a deterministic stall — no jitter or
                 # slow-link factor applies and no rng is consumed.
+                if self.query_tap is not None:
+                    self.query_tap(i, m, self.dead_link_timeout, True)
                 return self.dead_link_timeout
+        if self.time_source is not None:
+            # Measured duration served verbatim: embeds every factor below,
+            # so none applies and no rng is consumed.  None = past the trace
+            # horizon, fall through to the model.
+            served = self.time_source.network_time(i, m, now)
+            if served is not None:
+                if self.query_tap is not None:
+                    self.query_tap(i, m, float(served), False)
+                return float(served)
         tier = self.topology.tier(i, m)
         t = self.base_times[tier]
         if self._scn is not None:
             t *= self._scn.segments[self._scn_idx].degrade[i, m]
+        if self.link_scale is not None:
+            t *= self.link_scale[i, m]
         if tier == "inter_cluster" and (self.wan_jitter > 0 or self.wan_asymmetry > 0):
             t *= self._wan_factor(i, m)
         if self._slow_edge in ((i, m), (m, i)):
             t *= self._slow_factor
         if self.jitter > 0:
             t *= float(np.exp(self._rng.normal(0.0, self.jitter)))
+        if self.query_tap is not None:
+            self.query_tap(i, m, t, False)
         return t
 
     def iteration_time(self, i: int, m: int, now: float = 0.0) -> float:
@@ -261,10 +305,18 @@ class LinkTimeModel:
                 if seg is not None and seg.dead[i, m]:
                     T[i, m] = max(self.compute_time, self.dead_link_timeout)
                     continue
+                if self.time_source is not None:
+                    exp = getattr(self.time_source, "expected", None)
+                    served = exp(i, m, now) if exp is not None else None
+                    if served is not None:
+                        T[i, m] = max(self.compute_time, float(served))
+                        continue
                 tier = self.topology.tier(i, m)
                 t = self.base_times[tier]
                 if seg is not None:
                     t *= seg.degrade[i, m]
+                if self.link_scale is not None:
+                    t *= self.link_scale[i, m]
                 if wan and tier == "inter_cluster":
                     # Slow-moving expected factors (direction skew + current
                     # AR(1) congestion state); only the iid jitter is left out.

@@ -108,6 +108,24 @@ class CompiledTimeline:
             k += 1
         return k
 
+    def dead_intervals(self, i: int, m: int) -> tuple:
+        """Maximal ``[start, end)`` windows during which directed link
+        i->m is scenario-dead.  Every ``timeout`` record a traced run
+        (repro.trace) carries for that link must start inside one of these
+        windows — the cross-check tests/test_trace.py pins."""
+        out = []
+        open_start = None
+        for seg in self.segments:
+            dead = bool(seg.dead[i, m])
+            if dead and open_start is None:
+                open_start = seg.start
+            elif not dead and open_start is not None:
+                out.append((open_start, seg.start))
+                open_start = None
+        if open_start is not None:
+            out.append((open_start, float("inf")))
+        return tuple(out)
+
     def active_workers(self, now: float) -> np.ndarray:
         """Workers present at ``now`` (before applying actions at ``now``
         itself: an action at exactly ``now`` counts as already fired,

@@ -488,6 +488,14 @@ def run_batched(
         timing = algo.event_timing(
             state, cfg, link_model, i, m, communicated or failed, t_ev
         )
+        if cfg.trace:
+            kind = "timeout" if failed else (
+                "pull" if communicated else "local"
+            )
+            res.trace_events.append(
+                (t_ev, timing.duration, i, m if m is not None else -1, kind,
+                 timing.comm, timing.compute)
+            )
         res.comm_time += timing.comm
         res.compute_time += timing.compute
         if failed:
@@ -928,7 +936,9 @@ def run_batched_sync(
             if cursor is not None and cursor.next_time <= t:
                 break  # scenario boundary: flush the block before crossing
             groups = algo.select_groups(state, rng)
-            timing = algo.round_timing(state, cfg, link_model, groups, t)
+            timing = _sim.traced_round_timing(
+                algo, state, cfg, link_model, groups, t, res
+            )
             t += timing.duration
             res.comm_time += timing.comm
             res.compute_time += timing.compute

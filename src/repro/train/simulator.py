@@ -148,6 +148,13 @@ class SimConfig:
     # comm/compute) are identical either way, device math to float
     # tolerance (only SimResult.dispatches differs materially).
     fuse_chains: bool = True
+    # Record a per-event trace stream in SimResult.trace_events (repro.trace;
+    # DESIGN.md §15).  Purely host-side bookkeeping on values both engines
+    # already compute, so the stream is part of the engine-parity contract:
+    # reference and batched emit bit-identical records (pinned by
+    # tests/test_engines.py).  Off by default — tracing never perturbs the
+    # simulation itself.
+    trace: bool = False
 
 
 @dataclass
@@ -168,6 +175,15 @@ class SimResult:
     # (t, rho, P) — the bench suite reads time-to-reroute off these.
     failed_pulls: list = field(default_factory=list)
     policy_log: list = field(default_factory=list)
+    # Per-event trace stream (SimConfig.trace; repro.trace): one tuple
+    # ``(t_start, duration, src, dst, kind, comm, compute)`` per event in
+    # pop order — kind in {"pull", "local", "timeout"} for async events
+    # (dst = -1 when there is no peer) and "round" for synchronous rounds
+    # (src = dst = -1).  Sync rounds additionally emit one "pull" (or
+    # "timeout") record per link the round queried, carrying the raw
+    # network time — that is what makes sync replay and calibration from
+    # sync traces exact.  Identical across engines, like failed_pulls.
+    trace_events: list = field(default_factory=list)
 
     def time_to_loss(self, target: float) -> float:
         for t, l in zip(self.times, self.losses):
@@ -177,6 +193,37 @@ class SimResult:
 
     def final_accuracy(self) -> float:
         return self.accs[-1] if self.accs else 0.0
+
+
+def traced_round_timing(algo, state, cfg, link_model, groups, t, res):
+    """``algo.round_timing`` plus trace capture — shared by both engines.
+
+    With tracing off this is a plain pass-through.  Traced, it installs
+    ``link_model.query_tap`` for the duration of the call so every
+    ``network_time`` query the round makes lands in ``res.trace_events``
+    as a zero-duration-free per-link "pull" record (raw network time,
+    comm/compute = 0), followed by the aggregate "round" record.  Links a
+    scenario has killed tap as "timeout" — replay skips those queues and
+    lets the scenario regenerate the stall.  The tap also fires on the
+    served branch of a replayed model, so a replayed run re-emits a
+    bit-identical stream.
+    """
+    if not cfg.trace:
+        return algo.round_timing(state, cfg, link_model, groups, t)
+    taps: list = []
+    link_model.query_tap = lambda i, m, v, dead: taps.append((i, m, v, dead))
+    try:
+        timing = algo.round_timing(state, cfg, link_model, groups, t)
+    finally:
+        link_model.query_tap = None
+    res.trace_events.extend(
+        (t, v, i, m, "timeout" if dead else "pull", 0.0, 0.0)
+        for (i, m, v, dead) in taps
+    )
+    res.trace_events.append(
+        (t, timing.duration, -1, -1, "round", timing.comm, timing.compute)
+    )
+    return timing
 
 
 def simulate(
@@ -275,7 +322,9 @@ def simulate(
                 for act in cursor.pop_due(t):
                     apply_action(act, active=active, reseed=reseed)
             groups = algo.select_groups(state, rng)
-            timing = algo.round_timing(state, cfg, link_model, groups, t)
+            timing = traced_round_timing(
+                algo, state, cfg, link_model, groups, t, res
+            )
             t += timing.duration
             res.comm_time += timing.comm
             res.compute_time += timing.compute
@@ -322,6 +371,16 @@ def simulate(
         else:
             communicated = algo.apply_comm(state, cfg, replicas, i, m, x_half)
         timing = algo.event_timing(state, cfg, link_model, i, m, communicated, t)
+        if cfg.trace:
+            # ``failed`` first: the failed branch sets communicated=True (the
+            # attempt is priced) but the record must say "timeout".
+            kind = "timeout" if failed else (
+                "pull" if communicated else "local"
+            )
+            res.trace_events.append(
+                (t, timing.duration, i, m if m is not None else -1, kind,
+                 timing.comm, timing.compute)
+            )
         res.comm_time += timing.comm
         res.compute_time += timing.compute
         if algo.reports_ema and m is not None:

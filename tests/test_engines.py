@@ -42,8 +42,11 @@ def _sim(algo, engine, data, M=8, events=450, seed=0, topo=None,
                          scenario=scenario, dead_link_timeout=2.0)
     if parts is None:
         parts = uniform_partition(len(y), M, seed=0)
+    # trace=True everywhere: the per-event trace stream (repro.trace) is
+    # part of the parity contract, so the whole suite records it.
     cfg = SimConfig(algorithm=algo, n_workers=M, total_events=events, lr=0.05,
-                    monitor_period=monitor_period, seed=seed, engine=engine, **kw)
+                    monitor_period=monitor_period, seed=seed, engine=engine,
+                    trace=True, **kw)
     return simulate(cfg, link, x, y, parts, ex, ey,
                     record_every=record_every, _cohort_log=log)
 
@@ -70,6 +73,11 @@ def _assert_parity(ref, bat, loss_tol=5e-4):
     # Scenario telemetry and every published policy are host-side state:
     # exactly equal, including each refresh's full P matrix.
     assert bat.failed_pulls == ref.failed_pulls
+    # The trace event stream (SimConfig.trace; repro.trace) is host-side
+    # bookkeeping on already-parity-pinned values: bit-exact, tuple for
+    # tuple — (t_start, duration, src, dst, kind, comm, compute).
+    assert bat.trace_events == ref.trace_events
+    assert bat.trace_events  # one record per event (async) or round (sync)
     assert len(bat.policy_log) == len(ref.policy_log)
     for (ta, ra, Pa), (tb, rb, Pb) in zip(ref.policy_log, bat.policy_log):
         assert ta == tb and ra == rb

@@ -245,6 +245,108 @@ def test_guard_policy_rows_spot_check():
     np.testing.assert_array_equal(G[2], P[2])
 
 
+# --------------------------------------------------------------------------
+# Trace-calibration invariants (repro.trace.calibrate; DESIGN.md §15)
+# --------------------------------------------------------------------------
+
+
+def _synthetic_trace(topo, compute, jitter, seed, per_link=6):
+    """Pull records drawn from a known tiered model: duration =
+    max(C, base[tier] * lognormal jitter), every directed pair covered."""
+    from repro.trace.schema import Trace, TraceRecord
+
+    base = LinkTimeModel(topo).base_times
+    rng = np.random.default_rng(seed)
+    recs, t = [], 0.0
+    for i in range(topo.n_workers):
+        for m in range(topo.n_workers):
+            if i == m:
+                continue
+            for _ in range(per_link):
+                n = base[topo.tier(i, m)] * float(
+                    np.exp(rng.normal(0.0, jitter))
+                )
+                recs.append(TraceRecord(t, max(compute, n), i, m, "pull"))
+                t += 0.01
+    return Trace(records=recs)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.integers(4, 16),   # workers
+    st.integers(1, 4),    # workers_per_host
+    st.integers(1, 3),    # hosts_per_pod
+    st.integers(0, 10_000),
+)
+def test_calibrate_invariants_on_synthetic_traces(M, wph, hpp, seed):
+    """Whatever the placement and noise level, the fit obeys its contract:
+    tier bases ordered along TIERS, jitter in [0, 1], link_scale strictly
+    positive and 1.0 off the WAN tier, residual finite and non-negative."""
+    from repro.trace.calibrate import calibrate
+
+    rng = np.random.default_rng(seed)
+    topo = Topology(M, workers_per_host=wph, hosts_per_pod=hpp,
+                    pods_per_cluster=2)
+    jitter = float(rng.uniform(0.0, 0.3))
+    trace = _synthetic_trace(topo, compute=0.012, jitter=jitter, seed=seed)
+    cal = calibrate(trace, topology=topo)
+    vals = [cal.base_times[t] for t in TIERS]
+    assert vals == sorted(vals)
+    assert 0.0 <= cal.jitter <= 1.0
+    assert (cal.link_scale > 0).all()
+    for i in range(M):
+        for m in range(M):
+            if i != m and topo.tier(i, m) != "inter_cluster":
+                assert cal.link_scale[i, m] == 1.0
+    assert np.isfinite(cal.residual) and cal.residual >= 0.0
+    assert cal.n_pulls == len(trace.records)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_calibrate_recovers_noise_free_tiers_exactly(seed):
+    """With zero jitter every uncensored tier base is the recorded
+    duration itself — the fit must return it exactly, and censored tiers
+    must pin at the compute floor (the max() hides the true base)."""
+    from repro.trace.calibrate import calibrate
+
+    # all four tiers present: 8 hosts, 4 pods, 2 clusters
+    topo = Topology(16, workers_per_host=2, hosts_per_pod=2,
+                    pods_per_cluster=2)
+    trace = _synthetic_trace(topo, compute=0.012, jitter=0.0, seed=seed,
+                             per_link=3)
+    cal = calibrate(trace, topology=topo)
+    true = LinkTimeModel(topo).base_times
+    assert cal.jitter == 0.0
+    assert cal.residual == 0.0
+    for tier in ("intra_pod", "inter_pod", "inter_cluster"):
+        assert cal.base_times[tier] == pytest.approx(true[tier], rel=1e-9)
+    # intra_host's true 0.010 base hides under the 0.012 compute floor
+    assert "intra_host" in cal.censored_tiers
+    assert cal.base_times["intra_host"] == pytest.approx(0.012)
+    # ...which leaves every iteration_time query identical anyway
+    assert cal.model.iteration_time(0, 1, now=0.0) == pytest.approx(0.012)
+
+
+def test_calibrate_censored_trace_spot_check():
+    """All-censored trace (every duration == compute): bases pin at the
+    floor, jitter is zero, and nothing divides by zero."""
+    from repro.trace.calibrate import calibrate
+    from repro.trace.schema import Trace, TraceRecord
+
+    topo = Topology(4, workers_per_host=1, hosts_per_pod=1,
+                    pods_per_cluster=2)
+    recs = [TraceRecord(0.01 * k, 0.5, i, m, "pull")
+            for k, (i, m) in enumerate((i, m) for i in range(4)
+                                       for m in range(4) if i != m)]
+    cal = calibrate(Trace(records=recs), topology=topo)
+    assert cal.compute_time == pytest.approx(0.5)  # min-duration fallback
+    vals = [cal.base_times[t] for t in TIERS]
+    assert vals == sorted(vals)
+    assert cal.jitter == 0.0
+    assert (cal.link_scale > 0).all()
+
+
 def test_stub_mode_visible():
     """Sanity: record whether this environment runs the fuzzed versions."""
     assert HAVE_HYPOTHESIS in (True, False)
