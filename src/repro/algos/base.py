@@ -88,15 +88,38 @@ class AlgoState:
     P: np.ndarray  # communication policy matrix (rows sum to 1 on edges)
     rho: float  # consensus step size (paper Alg. 3)
     extras: dict = field(default_factory=dict)
+    # Per-worker consensus step (set only by partition-aware policy
+    # publishing, scenarios/driver.publish_policy): workers a home-pinned
+    # Monitor could not reach keep their stale rho while reachable workers
+    # adopt the fresh one.  None = everyone shares the scalar ``rho``.
+    rho_vec: np.ndarray | None = None
+
+    def rho_of(self, i: int) -> float:
+        """Worker ``i``'s consensus step (stale-policy aware)."""
+        if self.rho_vec is None:
+            return self.rho
+        return float(self.rho_vec[i])
 
 
 @dataclass
 class Timing:
-    """Duration model output for one event (async) or one round (sync)."""
+    """Duration model output for one event (async) or one round (sync).
+
+    ``net`` carries the *raw* link time the event drew — the value
+    ``link.iteration_time`` returned, before any strategy multiplier
+    (ps-async congestion, netmax-topk wire ratio) is applied on top.
+    Traced runs record it per async event so trace replay can serve it
+    back through the ``LinkTimeModel.time_source`` seam and let
+    ``event_timing`` re-apply the multipliers deterministically — that is
+    what makes replay bit-exact for all strategies, not just the
+    unit-multiplier gossip family (repro.trace.replay).  None for events
+    that never drew a link time (local steps, sync rounds).
+    """
 
     duration: float
     comm: float = 0.0
     compute: float = 0.0
+    net: float | None = None
 
 
 def uniform_state(cfg, M: int) -> AlgoState:
@@ -223,6 +246,9 @@ class Algorithm(abc.ABC):
         period = getattr(cfg, "monitor_period", None)
         if period is not None:
             kw["schedule_period"] = float(period)
+        home = getattr(cfg, "monitor_home_cluster", None)
+        if home is not None:
+            kw["home_cluster"] = int(home)
         return NetworkMonitor(M, **kw)
 
     def on_policy(self, state: AlgoState, pol) -> None:
@@ -366,13 +392,13 @@ class Algorithm(abc.ABC):
         communicated: bool, t: float,
     ) -> Timing:
         """Async duration model: overlap of compute and the (optional) pull."""
-        net = link.iteration_time(i, m, now=t) if communicated else 0.0
-        net *= self.wire_ratio()
+        raw = link.iteration_time(i, m, now=t) if communicated else None
+        net = raw * self.wire_ratio() if communicated else 0.0
         comp = link.compute_time
         if getattr(cfg, "serial_compute", False):
-            return Timing(duration=comp + net, comm=net, compute=comp)
+            return Timing(duration=comp + net, comm=net, compute=comp, net=raw)
         return Timing(duration=max(comp, net), comm=max(0.0, net - comp),
-                      compute=comp)
+                      compute=comp, net=raw)
 
     def round_timing(self, state: AlgoState, cfg, link, groups, t: float) -> Timing:
         raise NotImplementedError(f"{self.name} is not round-based")

@@ -24,8 +24,24 @@ class GossipAlgorithm(Algorithm):
     reports_ema = True
 
     def select_peer(self, state: AlgoState, i: int, rng) -> int:
-        row = state.P[i] / state.P[i].sum()
-        return int(rng.choice(state.M, p=row))
+        # Cached-CDF draw. ``rng.choice(M, p=row)`` recomputes the row's
+        # cumsum on every event — O(M) per draw, the dominant host cost at
+        # fleet scale. P is only ever rebound (never mutated in place), so
+        # the per-row CDFs stay valid until ``id(state.P)`` changes. The
+        # draw mirrors Generator.choice's internals exactly (cumsum,
+        # normalize by the last entry, searchsorted(random(), 'right')),
+        # consuming one uniform — bit-identical to the rng.choice path.
+        pid, cdfs = state.extras.get("_peer_cdf", (None, None))
+        if pid != id(state.P):
+            cdfs = {}
+            state.extras["_peer_cdf"] = (id(state.P), cdfs)
+        cdf = cdfs.get(i)
+        if cdf is None:
+            row = state.P[i] / state.P[i].sum()
+            cdf = row.cumsum()
+            cdf /= cdf[-1]
+            cdfs[i] = cdf
+        return int(cdf.searchsorted(rng.random(), side="right"))
 
 
 @register("netmax")
@@ -44,7 +60,7 @@ class NetMax(GossipAlgorithm):
             return 0.5
         d = state.d
         gamma = (d[i, m] + d[m, i]) / (2 * state.P[i, m])
-        return min(cfg.lr * state.rho * gamma, 0.9)
+        return min(cfg.lr * state.rho_of(i) * gamma, 0.9)
 
 
 @register("adpsgd")

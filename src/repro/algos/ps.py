@@ -103,6 +103,11 @@ class PSAsync(Algorithm):
         comp = link.compute_time
         if not communicated:
             return Timing(duration=comp, comm=0.0, compute=comp)
-        # The PS link carries all M-1 workers' traffic (congestion).
-        dur = link.iteration_time(i, m, now=t) * _ps_congestion(cfg, state.M)
-        return Timing(duration=dur, comm=max(0.0, dur - comp), compute=comp)
+        # The PS link carries all M-1 workers' traffic (congestion).  The
+        # raw (pre-congestion) link time rides along in ``net`` so traced
+        # runs replay bit-exactly: the seam serves it back and this very
+        # multiplier re-applies (repro.trace.replay).
+        raw = link.iteration_time(i, m, now=t)
+        dur = raw * _ps_congestion(cfg, state.M)
+        return Timing(duration=dur, comm=max(0.0, dur - comp), compute=comp,
+                      net=raw)

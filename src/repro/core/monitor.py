@@ -99,6 +99,14 @@ class NetworkMonitor:
     # cluster pair => the WAN between the two clusters is down.
     peer_escalation: int = 2
     cluster_escalation: int = 2
+    # The cluster the Monitor physically lives in (control plane placement).
+    # None = the legacy omniscient Monitor that sees every report regardless
+    # of partitions.  When set, the scenario drivers drop EMA reports and
+    # failure notifications from workers that cannot currently reach this
+    # cluster, and policy publishes only land on workers the Monitor can
+    # reach — the far side of a partition keeps training on its stale
+    # policy (scenarios/driver.monitor_reach / publish_policy).
+    home_cluster: int | None = None
 
     _T: np.ndarray = field(init=False)
     _missed: np.ndarray = field(init=False)
@@ -173,8 +181,11 @@ class NetworkMonitor:
         )
         pullers: dict[int, set] = {}
         for i, m in self._fail_links:
+            # Evidence is directed — i's pull from m timed out — and so is
+            # the mask: the reverse link m->i may be perfectly alive under
+            # an asymmetric (one-direction) outage, and if it is not, m's
+            # own failed pulls report it independently.
             conn[i, m] = 0.0
-            conn[m, i] = 0.0
             pullers.setdefault(m, set()).add(i)
         for m, ps in pullers.items():
             # A WAN outage also produces many cross-cluster failures toward
@@ -194,10 +205,13 @@ class NetworkMonitor:
                 peers_by_pair.setdefault((cluster[i], cluster[m]), set()).add(m)
         for (ca, cb), peers in peers_by_pair.items():
             if len(peers) >= self.cluster_escalation:
+                # Directed escalation: the evidence says pulls FROM ca
+                # TOWARD cb die, so only that direction of the WAN pair is
+                # masked — a symmetric outage generates the mirror evidence
+                # stream and masks the reverse within the same burst.
                 a = np.array([c == ca for c in cluster])
                 b = np.array([c == cb for c in cluster])
                 conn[np.ix_(a, b)] = 0.0
-                conn[np.ix_(b, a)] = 0.0
 
     # -- control plane -------------------------------------------------------
     def step(self) -> PolicyResult:

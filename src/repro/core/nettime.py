@@ -69,6 +69,18 @@ class Topology:
     def n_clusters(self) -> int:
         return self.cluster_of(self.n_workers - 1) + 1
 
+    def host_ids(self) -> np.ndarray:
+        """(M,) host index per worker (vectorized ``host_of``)."""
+        return np.arange(self.n_workers) // self.workers_per_host
+
+    def pod_ids(self) -> np.ndarray:
+        return self.host_ids() // self.hosts_per_pod
+
+    def cluster_ids(self) -> np.ndarray:
+        if not self.pods_per_cluster:
+            return np.zeros(self.n_workers, dtype=int)
+        return self.pod_ids() // self.pods_per_cluster
+
     @classmethod
     def multi_cluster(
         cls,
@@ -153,8 +165,12 @@ class LinkTimeModel:
     # Per-directed-link multiplier on the *modeled* transfer time, applied
     # after scenario degradation (calibration's per-link WAN-skew output;
     # repro.trace.calibrate).  None = off; the replay path above bypasses
-    # it (measured durations are already per-link).
-    link_scale: np.ndarray | None = None
+    # it (measured durations are already per-link).  Accepts either a dense
+    # (M, M) array (legacy/calibration form) or a sparse ``{(i, m): factor}``
+    # dict — both are folded into an internal edge map holding only the
+    # non-unit entries, so fleet-scale models never pay (M, M) memory for
+    # a handful of skewed WAN links.
+    link_scale: object | None = None
 
     def __post_init__(self):
         # Observation tap for ``network_time`` (NOT a constructor field):
@@ -192,18 +208,45 @@ class LinkTimeModel:
                     f"topology has {self.topology.n_workers}"
                 )
             self._scn = scn
+        # Non-unit link-scale entries as a sparse edge map (a multiply by
+        # exactly 1.0 is a bit-exact no-op, so dropping unit entries keeps
+        # dense-array inputs bit-identical to the legacy dense path).
+        self._scale_map: dict[tuple[int, int], float] = {}
         if self.link_scale is not None:
             M = self.topology.n_workers
-            self.link_scale = np.asarray(self.link_scale, dtype=float)
-            if self.link_scale.shape != (M, M):
-                raise ValueError(
-                    f"link_scale shape {self.link_scale.shape} != ({M}, {M})"
-                )
+            if isinstance(self.link_scale, dict):
+                for (i, m), f in self.link_scale.items():
+                    if not (0 <= i < M and 0 <= m < M):
+                        raise ValueError(
+                            f"link_scale key ({i}, {m}) out of range for M={M}"
+                        )
+                    if f != 1.0:
+                        self._scale_map[(int(i), int(m))] = float(f)
+            else:
+                self.link_scale = np.asarray(self.link_scale, dtype=float)
+                if self.link_scale.shape != (M, M):
+                    raise ValueError(
+                        f"link_scale shape {self.link_scale.shape} != ({M}, {M})"
+                    )
+                for a, b in zip(*np.nonzero(self.link_scale != 1.0)):
+                    self._scale_map[(int(a), int(b))] = float(
+                        self.link_scale[a, b]
+                    )
 
     @property
     def compiled_scenario(self):
         """The compiled timeline driving this model (None when static)."""
         return self._scn
+
+    @property
+    def current_segment(self):
+        """The sparse link-state ``Segment`` in effect at the model's
+        current virtual time (``advance_to``); None when no scenario is
+        attached.  O(1) — used by the scenario drivers to answer Monitor
+        reachability queries without materializing dense masks."""
+        if self._scn is None:
+            return None
+        return self._scn.segments[self._scn_idx]
 
     # -- dynamics -----------------------------------------------------------
     def advance_to(self, now: float) -> None:
@@ -249,14 +292,14 @@ class LinkTimeModel:
         as of the last ``advance_to``."""
         if self._scn is None:
             return False
-        return bool(self._scn.segments[self._scn_idx].dead[i, m])
+        return self._scn.segments[self._scn_idx].link_dead(i, m)
 
     # -- queries ------------------------------------------------------------
     def network_time(self, i: int, m: int, now: float = 0.0) -> float:
         self.advance_to(now)
         if self._scn is not None:
             seg = self._scn.segments[self._scn_idx]
-            if seg.dead[i, m]:
+            if seg.link_dead(i, m):
                 # Timed-out transfer: a deterministic stall — no jitter or
                 # slow-link factor applies and no rng is consumed.
                 if self.query_tap is not None:
@@ -274,9 +317,9 @@ class LinkTimeModel:
         tier = self.topology.tier(i, m)
         t = self.base_times[tier]
         if self._scn is not None:
-            t *= self._scn.segments[self._scn_idx].degrade[i, m]
-        if self.link_scale is not None:
-            t *= self.link_scale[i, m]
+            t *= self._scn.segments[self._scn_idx].degrade_factor(i, m)
+        if self._scale_map:
+            t *= self._scale_map.get((i, m), 1.0)
         if tier == "inter_cluster" and (self.wan_jitter > 0 or self.wan_asymmetry > 0):
             t *= self._wan_factor(i, m)
         if self._slow_edge in ((i, m), (m, i)):
@@ -292,39 +335,82 @@ class LinkTimeModel:
         return max(self.compute_time, self.network_time(i, m, now))
 
     def matrix(self, now: float = 0.0) -> np.ndarray:
-        """Expected iteration-time matrix at virtual time ``now`` (no jitter)."""
+        """Expected iteration-time matrix at virtual time ``now`` (no jitter).
+
+        Inherently dense — (M, M) output for the Monitor's policy LP and
+        the dense test/analysis paths — but computed from the sparse link
+        state with vectorized tier arithmetic (no Python double loop), and
+        bit-identical to the historical per-element computation.
+        """
         self.advance_to(now)
-        M = self.topology.n_workers
-        T = np.zeros((M, M))
-        wan = self.wan_jitter > 0 or self.wan_asymmetry > 0
+        topo = self.topology
+        M = topo.n_workers
+        host, pod, cl = topo.host_ids(), topo.pod_ids(), topo.cluster_ids()
+        bt = self.base_times
+        T = np.where(
+            host[:, None] == host[None, :],
+            bt["intra_host"],
+            np.where(
+                pod[:, None] == pod[None, :],
+                bt["intra_pod"],
+                np.where(
+                    cl[:, None] == cl[None, :],
+                    bt["inter_pod"],
+                    bt["inter_cluster"],
+                ),
+            ),
+        ).astype(float)
         seg = self._scn.segments[self._scn_idx] if self._scn is not None else None
-        for i in range(M):
-            for m in range(M):
-                if i == m:
-                    continue
-                if seg is not None and seg.dead[i, m]:
-                    T[i, m] = max(self.compute_time, self.dead_link_timeout)
-                    continue
-                if self.time_source is not None:
-                    exp = getattr(self.time_source, "expected", None)
-                    served = exp(i, m, now) if exp is not None else None
-                    if served is not None:
-                        T[i, m] = max(self.compute_time, float(served))
-                        continue
-                tier = self.topology.tier(i, m)
-                t = self.base_times[tier]
-                if seg is not None:
-                    t *= seg.degrade[i, m]
-                if self.link_scale is not None:
-                    t *= self.link_scale[i, m]
-                if wan and tier == "inter_cluster":
-                    # Slow-moving expected factors (direction skew + current
-                    # AR(1) congestion state); only the iid jitter is left out.
-                    t *= self._wan_factor(i, m)
-                if self._slow_edge in ((i, m), (m, i)):
-                    t *= self._slow_factor
-                T[i, m] = max(self.compute_time, t)
+        # Per-element factor order matches network_time exactly (degrade,
+        # link_scale, WAN, slow link) so the values stay bit-identical.
+        if seg is not None:
+            for (i, m), f in seg.degrade_map.items():
+                T[i, m] *= f
+        for (i, m), f in self._scale_map.items():
+            T[i, m] *= f
+        if (self.wan_jitter > 0 or self.wan_asymmetry > 0) and topo.n_clusters > 1:
+            # Slow-moving expected factors (direction skew + current AR(1)
+            # congestion state); only the iid jitter is left out.
+            F = np.ones((topo.n_clusters, topo.n_clusters))
+            if self.wan_asymmetry > 0:
+                F = F * np.exp(self.wan_asymmetry * self._wan_dir)
+            if self.wan_jitter > 0:
+                F = F * np.exp(self.wan_jitter * self._wan_state)
+            cross = cl[:, None] != cl[None, :]
+            Ffull = F[cl[:, None], cl[None, :]]
+            T[cross] *= Ffull[cross]
+        if self._slow_edge is not None:
+            i, m = self._slow_edge
+            T[i, m] *= self._slow_factor
+            T[m, i] *= self._slow_factor
+        T = np.maximum(self.compute_time, T)
+        if seg is not None:
+            T[seg.dead] = max(self.compute_time, self.dead_link_timeout)
+        if self.time_source is not None:
+            exp = getattr(self.time_source, "expected", None)
+            if exp is not None:
+                for i in range(M):
+                    for m in range(M):
+                        if i == m or (seg is not None and seg.link_dead(i, m)):
+                            continue
+                        served = exp(i, m, now)
+                        if served is not None:
+                            T[i, m] = max(self.compute_time, float(served))
+        np.fill_diagonal(T, 0.0)
         return T
+
+    def link_state_nbytes(self) -> int:
+        """Host memory held by the model's link state: scenario segments,
+        the sparse link-scale map, and the per-cluster WAN states.  O(M)
+        for sparse configurations — the fleet-scale regression test pins
+        this stays far below the (M, M) dense footprint."""
+        n = self._wan_dir.nbytes + self._wan_state.nbytes
+        n += 64 * len(self._scale_map)
+        if isinstance(self.link_scale, np.ndarray):
+            n += self.link_scale.nbytes
+        if self._scn is not None:
+            n += self._scn.nbytes
+        return n
 
 
 def homogeneous_times(M: int, t: float = 0.02) -> np.ndarray:
@@ -342,11 +428,8 @@ def pod_link_times(
     compute: float = 0.012,
 ) -> np.ndarray:
     """Two-tier pod matrix used by the production mesh benchmarks."""
-    T = np.zeros((M, M))
-    for i in range(M):
-        for m in range(M):
-            if i == m:
-                continue
-            same = (i // workers_per_pod) == (m // workers_per_pod)
-            T[i, m] = max(compute, intra if same else inter)
+    pod = np.arange(M) // workers_per_pod
+    T = np.where(pod[:, None] == pod[None, :], max(compute, intra),
+                 max(compute, inter)).astype(float)
+    np.fill_diagonal(T, 0.0)
     return T

@@ -9,6 +9,11 @@ every decision that a scenario adds to a loop lives here, written once:
   is exactly what ``event_timing`` would do a moment later.)
 * ``notify_monitor``     — forward a timeout to the Monitor; returns the
   new (possibly earlier) wake time for the out-of-schedule refresh.
+* ``monitor_reach``      — which workers can currently exchange control
+  traffic with a home-cluster-pinned Monitor (None = omniscient legacy
+  Monitor, i.e. ``home_cluster`` unset or no scenario attached).
+* ``publish_policy``     — deliver (P, rho) only to reachable workers;
+  the far side of a partition keeps training on its stale policy.
 * ``apply_action``       — apply one churn action to loop state: heap
   membership, active set, EMA reset, and replica reseeding (via a
   caller-supplied callback, because the two engines store replicas
@@ -20,6 +25,8 @@ every decision that a scenario adds to a loop lives here, written once:
 from __future__ import annotations
 
 import heapq
+
+import numpy as np
 
 from repro.core.monitor import IterationTimeEMA
 from repro.scenarios.timeline import WorkerLeave, WorkerRejoin
@@ -55,11 +62,72 @@ def attempt_fails(link_model, algo, state, i, m, t: float) -> bool:
     return link_model.link_dead(i, m)
 
 
-def notify_monitor(monitor, i: int, m: int, t: float, next_monitor: float) -> float:
+def monitor_reach(monitor, link_model, t: float):
+    """Per-worker control-plane reachability for a home-pinned Monitor.
+
+    Returns ``(reach_in, reach_out)`` boolean (M,) arrays — worker ``j``'s
+    reports arrive at the Monitor iff ``reach_in[j]``, and the Monitor's
+    policy publish lands on ``j`` iff ``reach_out[j]`` — or None for the
+    legacy omniscient Monitor (``home_cluster`` unset, or no scenario, so
+    the control plane shares fate with nothing).  Both directions follow
+    the sparse segment's *directed* semantics: a one-direction WAN outage
+    can lose reports while publishes still land, and vice versa.
+    """
+    if monitor is None or monitor.home_cluster is None or link_model is None:
+        return None
+    link_model.advance_to(t)
+    seg = link_model.current_segment
+    if seg is None:
+        return None
+    home = int(monitor.home_cluster)
+    cl = seg.cluster
+    cross = cl != home
+    reach_in = ~(seg.dead_out | (cross & (seg.wan_out[cl] | seg.wan_in[home])))
+    reach_out = ~(seg.dead_in | (cross & (seg.wan_out[home] | seg.wan_in[cl])))
+    return reach_in, reach_out
+
+
+def publish_policy(algo, state, pol, reach_out=None) -> None:
+    """Deliver a fresh (P, rho) — but only to workers the Monitor reaches.
+
+    ``reach_out=None`` (omniscient Monitor) is the legacy full publish.
+    Otherwise unreachable workers keep their stale P rows and their stale
+    per-worker consensus step (``AlgoState.rho_vec``): the far side of a
+    partition keeps training on the last policy it heard.
+    """
+    if reach_out is None:
+        algo.on_policy(state, pol)
+        return
+    reach_out = np.asarray(reach_out, dtype=bool)
+    if reach_out.all():
+        algo.on_policy(state, pol)
+        state.rho_vec = None  # everyone heard the same rho again
+        return
+    old_P = state.P.copy()
+    old_rho = np.array([state.rho_of(i) for i in range(state.M)])
+    algo.on_policy(state, pol)
+    stale = ~reach_out
+    P = np.array(state.P, copy=True)  # never mutate pol.P via aliasing
+    P[stale, :] = old_P[stale, :]
+    state.P = P
+    rho_vec = np.full(state.M, state.rho, dtype=float)
+    rho_vec[stale] = old_rho[stale]
+    state.rho_vec = None if np.all(rho_vec == state.rho) else rho_vec
+
+
+def notify_monitor(
+    monitor, i: int, m: int, t: float, next_monitor: float, link_model=None
+) -> float:
     """Report a timed-out pull; possibly pull the next Monitor wake earlier
-    (the out-of-schedule Eq.-14 refresh)."""
+    (the out-of-schedule Eq.-14 refresh).  A home-pinned Monitor never sees
+    reports from workers it cannot currently reach — the notification is
+    simply lost in the partition."""
     if monitor is None:
         return next_monitor
+    if link_model is not None:
+        reach = monitor_reach(monitor, link_model, t)
+        if reach is not None and not reach[0][i]:
+            return next_monitor
     wake = monitor.notify_failure(i, m, t)
     if wake is not None and wake < next_monitor:
         return wake

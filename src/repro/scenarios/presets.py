@@ -43,6 +43,65 @@ def worker_blip(
     )
 
 
+def federated_cohorts(
+    topology,
+    seed: int,
+    horizon: float,
+    rounds: int,
+    cohort_size: int,
+    carryover: int = 1,
+) -> Timeline:
+    """Federated-style participation over a large churning population.
+
+    ``[0, horizon)`` splits into ``rounds`` equal windows; in each, only a
+    ``cohort_size``-strong active cohort trains while the rest of the
+    population is away (elastic churn, so a fleet-sized M never pays for
+    idle workers).  Between consecutive windows ``carryover`` members stay
+    on: equal-time leaves fire before rejoins, so without carryover a
+    disjoint swap would transiently strand the rejoiners with no live
+    replica to reseed from — the carryover members are both the reseed
+    source and the thread of consensus state across rounds.
+
+    Deterministic from ``(topology, seed, knobs)``, like every preset.
+    """
+    M = topology.n_workers
+    if not 0 < cohort_size <= M:
+        raise ValueError(f"cohort_size must be in [1, {M}], got {cohort_size}")
+    if not 0 < carryover <= cohort_size:
+        raise ValueError(
+            f"carryover must be in [1, cohort_size={cohort_size}], "
+            f"got {carryover}"
+        )
+    if cohort_size - carryover > M - cohort_size:
+        raise ValueError(
+            f"not enough away workers to refresh the cohort: need "
+            f"{cohort_size - carryover} fresh members from a pool of "
+            f"{M - cohort_size}"
+        )
+    if rounds < 1 or not (horizon > 0 and np.isfinite(horizon)):
+        raise ValueError(f"need rounds >= 1 and finite horizon > 0, got "
+                         f"{rounds}, {horizon}")
+    rng = np.random.default_rng(seed)
+    period = float(horizon) / rounds
+    tl = Timeline()
+    cohort = {int(w) for w in rng.choice(M, size=cohort_size, replace=False)}
+    for w in sorted(set(range(M)) - cohort):  # everyone starts live
+        tl.add(WorkerLeave(w, 0.0))
+    for r in range(1, rounds):
+        t = r * period
+        stay = {int(w) for w in
+                rng.choice(sorted(cohort), size=carryover, replace=False)}
+        pool = sorted(set(range(M)) - cohort)
+        fresh = {int(w) for w in
+                 rng.choice(pool, size=cohort_size - carryover, replace=False)}
+        for w in sorted(cohort - stay):
+            tl.add(WorkerLeave(w, t))
+        for w in sorted(fresh):
+            tl.add(WorkerRejoin(w, t))
+        cohort = stay | fresh
+    return tl
+
+
 def random_timeline(
     topology,
     seed: int,

@@ -2,9 +2,12 @@
 
 A ``Timeline`` is a plain list of scheduled events over *virtual* time:
 
-* ``ClusterOutage``   — every WAN (``inter_cluster``) link touching one
-  cluster is dead during ``[start, end)`` (paper §V: a whole cluster drops
-  off the wide-area network; the Monitor must re-route around it).
+* ``ClusterOutage``   — WAN (``inter_cluster``) links touching one cluster
+  are dead during ``[start, end)`` (paper §V: a whole cluster drops off
+  the wide-area network; the Monitor must re-route around it).
+  ``direction`` narrows the cut: ``"out"`` kills only pulls *originating*
+  in the cluster, ``"in"`` only pulls *targeting* it, ``"both"`` (default)
+  kills both directions.
 * ``LinkDegrade``     — one link's transfer time is multiplied by
   ``factor`` during ``[start, end)`` (bandwidth degradation/restoration).
 * ``WorkerLeave`` / ``WorkerRejoin`` — elastic churn: a departed worker
@@ -12,10 +15,16 @@ A ``Timeline`` is a plain list of scheduled events over *virtual* time:
   reseeded from a live neighbor (``train/elastic.py``).
 
 ``Timeline.compile(topology)`` turns the event list into an immutable
-piecewise **link-state machine**: a sorted sequence of segments, each with
-a precomputed directed dead mask and degradation-factor matrix, plus the
-sorted churn *actions* the simulation loops must apply (heap membership
-and replica reseeding are loop-side effects; pure link state is not).
+piecewise **link-state machine**: a sorted sequence of segments, each
+holding *sparse* directed link state — per-worker dead flags, per-cluster
+WAN-outage flags, and a degraded-edge map, O(M) per segment instead of
+(M, M) — plus the sorted churn *actions* the simulation loops must apply
+(heap membership and replica reseeding are loop-side effects; pure link
+state is not).  Dense ``Segment.dead`` / ``Segment.degrade`` matrices are
+still available as lazily-materialized views for dense consumers
+(``LinkTimeModel.matrix``, tests); fleet-scale hot paths use the O(1)
+``Segment.link_dead`` / ``Segment.degrade_factor`` queries and never
+allocate (M, M).
 
 The compiled form is runtime-free: ``LinkTimeModel`` keeps its own segment
 pointer (advanced by ``advance_to``) and every engine loop walks its own
@@ -37,12 +46,16 @@ import numpy as np
 
 @dataclass(frozen=True)
 class ClusterOutage:
-    """All ``inter_cluster`` links with an endpoint in ``cluster`` are dead
-    during ``[start, end)``; intra-cluster links keep working."""
+    """``inter_cluster`` links touching ``cluster`` are dead during
+    ``[start, end)``; intra-cluster links keep working.  ``direction``
+    selects which directed links die: ``"out"`` — pulls *by* the cluster's
+    workers across the WAN; ``"in"`` — pulls *from* the cluster by outside
+    workers; ``"both"`` (default) — the symmetric cut."""
 
     cluster: int
     start: float
     end: float
+    direction: str = "both"
 
 
 @dataclass(frozen=True)
@@ -80,13 +93,89 @@ class WorkerRejoin:
 ACTION_EVENTS = (WorkerLeave, WorkerRejoin)
 
 
-@dataclass(frozen=True)
 class Segment:
-    """One piece of the piecewise link state: valid on [start, next start)."""
+    """One piece of the piecewise link state: valid on [start, next start).
 
-    start: float
-    dead: np.ndarray  # (M, M) bool, directed: link i->m is dead
-    degrade: np.ndarray  # (M, M) float multiplier on transfer time
+    Link state is **sparse** — O(M + n_clusters + #degraded-edges) per
+    segment, never (M, M):
+
+    * ``dead_out[i]``  — every link *from* worker ``i`` is dead (churn).
+    * ``dead_in[m]``   — every link *to* worker ``m`` is dead (churn).
+    * ``wan_out[c]``   — WAN pulls *by* workers in cluster ``c`` are dead.
+    * ``wan_in[c]``    — WAN pulls *from* cluster ``c`` are dead.
+    * ``degrade_map``  — ``{(i, m): factor}`` for degraded directed links.
+
+    Directed link i->m is dead iff ``dead_out[i] or dead_in[m]`` or the
+    endpoints sit in different clusters and ``wan_out[cluster[i]] or
+    wan_in[cluster[m]]``.  The dense ``.dead`` / ``.degrade`` matrices
+    materialize lazily for dense consumers (``LinkTimeModel.matrix``,
+    tests); fleet-scale hot paths use ``link_dead`` / ``degrade_factor``
+    and never allocate (M, M).
+    """
+
+    __slots__ = (
+        "start", "dead_out", "dead_in", "wan_out", "wan_in",
+        "degrade_map", "cluster", "_dead_dense", "_degrade_dense",
+    )
+
+    def __init__(self, start, dead_out, dead_in, wan_out, wan_in,
+                 degrade_map, cluster):
+        self.start = float(start)
+        self.dead_out = dead_out  # (M,) bool
+        self.dead_in = dead_in  # (M,) bool
+        self.wan_out = wan_out  # (n_clusters,) bool
+        self.wan_in = wan_in  # (n_clusters,) bool
+        self.degrade_map = degrade_map  # {(i, m): float}
+        self.cluster = cluster  # (M,) int, shared across segments
+        self._dead_dense = None
+        self._degrade_dense = None
+
+    # -- O(1) directed queries (the fleet-scale hot path) --------------------
+    def link_dead(self, i: int, m: int) -> bool:
+        if i == m:
+            return False
+        if self.dead_out[i] or self.dead_in[m]:
+            return True
+        ci, cm = self.cluster[i], self.cluster[m]
+        return bool(ci != cm and (self.wan_out[ci] or self.wan_in[cm]))
+
+    def degrade_factor(self, i: int, m: int) -> float:
+        return self.degrade_map.get((i, m), 1.0)
+
+    @property
+    def nbytes(self) -> int:
+        """Host memory held by this segment's link state (O(M), pinned by
+        the fleet-scale regression test)."""
+        arrays = (self.dead_out, self.dead_in, self.wan_out, self.wan_in)
+        return sum(a.nbytes for a in arrays) + 64 * len(self.degrade_map)
+
+    # -- dense views (lazy; Monitor/matrix()/test paths only) ----------------
+    @property
+    def dead(self) -> np.ndarray:
+        """(M, M) bool, directed: link i->m is dead.  Materialized lazily —
+        O(M^2); never touched by the event loops."""
+        if self._dead_dense is None:
+            c = self.cluster
+            wan = c[:, None] != c[None, :]
+            dead = (
+                self.dead_out[:, None]
+                | self.dead_in[None, :]
+                | (wan & (self.wan_out[c][:, None] | self.wan_in[c][None, :]))
+            )
+            np.fill_diagonal(dead, False)
+            self._dead_dense = dead
+        return self._dead_dense
+
+    @property
+    def degrade(self) -> np.ndarray:
+        """(M, M) float multiplier on transfer time (lazy dense view)."""
+        if self._degrade_dense is None:
+            M = len(self.dead_out)
+            degrade = np.ones((M, M))
+            for (i, m), f in self.degrade_map.items():
+                degrade[i, m] = f
+            self._degrade_dense = degrade
+        return self._degrade_dense
 
 
 @dataclass(frozen=True)
@@ -116,7 +205,7 @@ class CompiledTimeline:
         out = []
         open_start = None
         for seg in self.segments:
-            dead = bool(seg.dead[i, m])
+            dead = seg.link_dead(i, m)
             if dead and open_start is None:
                 open_start = seg.start
             elif not dead and open_start is not None:
@@ -125,6 +214,12 @@ class CompiledTimeline:
         if open_start is not None:
             out.append((open_start, float("inf")))
         return tuple(out)
+
+    @property
+    def nbytes(self) -> int:
+        """Total host memory of the compiled link state — O(M) per segment
+        (the fleet-scale memory regression pin sums this)."""
+        return sum(seg.nbytes for seg in self.segments)
 
     def active_workers(self, now: float) -> np.ndarray:
         """Workers present at ``now`` (before applying actions at ``now``
@@ -201,6 +296,11 @@ class Timeline:
                     )
                 if not (np.isfinite(e.start) and e.start < e.end):
                     raise ValueError(f"ClusterOutage needs start < end, got {e}")
+                if e.direction not in ("both", "out", "in"):
+                    raise ValueError(
+                        f"ClusterOutage direction must be 'both', 'out' or "
+                        f"'in', got {e.direction!r}"
+                    )
             elif isinstance(e, LinkDegrade):
                 if not (0 <= e.i < M and 0 <= e.m < M and e.i != e.m):
                     raise ValueError(f"LinkDegrade endpoints invalid: {e}")
@@ -254,36 +354,42 @@ class Timeline:
         for w, t0 in open_since.items():
             churn_intervals.append((w, t0, float("inf")))
 
-        wan = np.zeros((M, M), dtype=bool)  # inter_cluster link mask
+        # Sparse link state needs only the cluster id per worker — the old
+        # dense (M, M) WAN mask is recovered lazily by Segment.dead.
         cluster = np.array([topology.cluster_of(i) for i in range(M)])
-        for i in range(M):
-            for m in range(M):
-                wan[i, m] = i != m and topology.tier(i, m) == "inter_cluster"
+        nc = topology.n_clusters
 
-        def state_at(t0: float) -> tuple[np.ndarray, np.ndarray]:
-            dead = np.zeros((M, M), dtype=bool)
-            degrade = np.ones((M, M))
+        def state_at(t0: float) -> Segment:
+            dead_out = np.zeros(M, dtype=bool)
+            dead_in = np.zeros(M, dtype=bool)
+            wan_out = np.zeros(nc, dtype=bool)
+            wan_in = np.zeros(nc, dtype=bool)
+            degrade_map: dict[tuple[int, int], float] = {}
             for e in events:
                 if isinstance(e, ClusterOutage) and e.start <= t0 < e.end:
-                    touch = cluster == e.cluster
-                    dead |= wan & (touch[:, None] | touch[None, :])
+                    if e.direction in ("both", "out"):
+                        wan_out[e.cluster] = True
+                    if e.direction in ("both", "in"):
+                        wan_in[e.cluster] = True
                 elif isinstance(e, LinkDegrade) and e.start <= t0 < e.end:
-                    degrade[e.i, e.m] *= e.factor
+                    key = (e.i, e.m)
+                    degrade_map[key] = degrade_map.get(key, 1.0) * e.factor
                     if e.symmetric:
-                        degrade[e.m, e.i] *= e.factor
+                        rkey = (e.m, e.i)
+                        degrade_map[rkey] = degrade_map.get(rkey, 1.0) * e.factor
             for w, a, b in churn_intervals:
                 if a <= t0 < b:
-                    dead[w, :] = True
-                    dead[:, w] = True
-                    dead[w, w] = False
-            np.fill_diagonal(dead, False)
-            return dead, degrade
+                    dead_out[w] = True
+                    dead_in[w] = True
+            return Segment(
+                t0, dead_out, dead_in, wan_out, wan_in, degrade_map, cluster
+            )
 
         # Segment 0 covers (-inf, first boundary): nothing is active yet.
         pre = boundaries[0] - 1.0 if boundaries else 0.0
-        segments = (Segment(float("-inf"), *state_at(pre)),) + tuple(
-            Segment(s, *state_at(s)) for s in boundaries
-        )
+        seg0 = state_at(pre)
+        seg0.start = float("-inf")
+        segments = (seg0,) + tuple(state_at(s) for s in boundaries)
 
         # A timeline must never depopulate the run, and every automatic
         # rejoin needs a live reseed source — validated by replaying the

@@ -35,8 +35,8 @@ def _meta_event(name: str, tid: int, label: str) -> dict:
 def _slices(records):
     """Yield (t, dur, src, dst, kind, extra) from either source shape."""
     for r in records:
-        if isinstance(r, tuple):  # SimResult.trace_events 7-tuple
-            t, dur, src, dst, kind, comm, comp = r
+        if isinstance(r, tuple):  # SimResult.trace_events 8-tuple
+            t, dur, src, dst, kind, comm, comp, _net = r
             yield t, dur, src, dst, kind, {"comm": comm, "compute": comp}
         else:  # TraceRecord
             yield r.t_start, r.duration, r.src, r.dst, r.kind, {}

@@ -12,16 +12,19 @@ by default — reattach the scenario to regenerate them).
 Why same-seed replay is exact (pinned by tests/test_trace.py): peer
 selection and batch draws come from the simulator rng, jitter from the
 model's private rng — a served duration consumes neither, so the streams
-stay aligned; serving event k its recorded duration reproduces its heap
+stay aligned; serving event k its recorded link time reproduces its heap
 reschedule time exactly, hence the same pop order, hence (by induction)
-the same peer/batch draws for every later event.  Recorded durations are
-``max(C, N)`` and the seam feeds ``iteration_time = max(C, served)``, so
-both the duration and its comm/compute split round-trip bit-exactly for
-unit-wire-ratio strategies.  (ps-async's congestion multiplier and
-netmax-topk's wire ratio are applied *on top of* link times inside
-``event_timing`` — replaying their event durations through the link seam
-would double-apply them, so exact async replay is a gossip-family
-contract; their replays are still well-defined link-conditions runs.)
+the same peer/batch draws for every later event.  Each async record
+carries ``net`` — the *raw* ``iteration_time`` the event drew, before any
+strategy multiplier — and the seam feeds ``iteration_time = max(C,
+served)`` back into ``event_timing``, which re-applies ps-async's
+congestion multiplier and netmax-topk's wire ratio deterministically.
+Raw values are already ``max(C, N)``, so the max is idempotent and the
+duration and its comm/compute split round-trip bit-exactly for **all
+eight strategies**.  Legacy traces without ``net`` fall back to the
+recorded event duration, which equals the raw link time for the
+unit-multiplier gossip family (the pre-``net`` exactness contract) and
+degrades to a link-conditions replay for ps-async/netmax-topk.
 
 Synchronous strategies replay exactly too, by a different route: the
 traced round loop taps every raw per-link network time a round queries
@@ -47,11 +50,19 @@ class ReplayLinkSource:
     def __init__(self, trace: Trace, include_timeouts: bool = False):
         kinds = ("pull", "timeout") if include_timeouts else ("pull",)
         by_link = trace.by_link(kinds=kinds)
+        # Serve the raw link time (``net``) when the record carries one —
+        # event_timing re-applies any strategy multiplier on top — and the
+        # event duration for legacy records (exact for gossip, where the
+        # two coincide).
         self._queues = {
-            lk: deque(r.duration for r in v) for lk, v in by_link.items()
+            lk: deque(
+                r.duration if r.net is None else r.net for r in v
+            ) for lk, v in by_link.items()
         }
         self._median = {
-            lk: float(np.median([r.duration for r in v]))
+            lk: float(
+                np.median([r.duration if r.net is None else r.net for r in v])
+            )
             for lk, v in by_link.items()
         }
         self.horizon = trace.horizon

@@ -15,6 +15,12 @@ of records ``(t_start, duration, src, dst, kind)``:
   same ``t_start`` by the per-link pulls it drew;
 * ``refresh`` — a Monitor policy publish (instant; duration = 0).
 
+Async records additionally carry ``net`` — the raw link time the event
+drew before any strategy multiplier (ps-async congestion, netmax-topk
+wire ratio).  Replay serves ``net`` back through the link seam so the
+multipliers re-apply deterministically, making replay bit-exact for every
+strategy; absent (older traces), replay falls back to ``duration``.
+
 On disk the canonical form is JSONL: a header line ``{"schema":
 "repro.trace/v1", "meta": {...}}`` followed by one object per record.  A
 bare record stream (no header) is accepted on read — that is the shape an
@@ -39,6 +45,14 @@ class TraceRecord:
     src: int  # -1 when not worker-attributed (round / refresh)
     dst: int  # -1 when there is no peer
     kind: str
+    # Raw link time the event drew (``Timing.net``), before any strategy
+    # multiplier — ps-async congestion, netmax-topk wire ratio.  Replay
+    # serves it back through the link seam so ``event_timing`` re-applies
+    # the multipliers deterministically (bit-exact async replay for every
+    # strategy).  None for records that never drew a link time and for
+    # legacy/v1-early traces — replay then falls back to ``duration``,
+    # exact for the unit-multiplier gossip family.
+    net: float | None = None
 
     def validate(self) -> "TraceRecord":
         if self.kind not in KINDS:
@@ -47,6 +61,8 @@ class TraceRecord:
             raise ValueError(f"bad duration {self.duration!r}")
         if not (self.t_start >= 0.0):
             raise ValueError(f"bad t_start {self.t_start!r}")
+        if self.net is not None and not (self.net >= 0.0):
+            raise ValueError(f"bad net {self.net!r}")
         return self
 
 
@@ -109,8 +125,11 @@ def from_sim_result(res, cfg=None, link_model=None) -> Trace:
             "SimConfig(trace=True)"
         )
     records = [
-        TraceRecord(float(t), float(dur), int(src), int(dst), str(kind)).validate()
-        for (t, dur, src, dst, kind, _comm, _comp) in res.trace_events
+        TraceRecord(
+            float(t), float(dur), int(src), int(dst), str(kind),
+            net=None if net is None else float(net),
+        ).validate()
+        for (t, dur, src, dst, kind, _comm, _comp, net) in res.trace_events
     ]
     records.extend(
         TraceRecord(float(t), 0.0, -1, -1, "refresh")
@@ -144,27 +163,27 @@ def write_jsonl(trace: Trace, path) -> None:
         for r in trace.records:
             # repr-level floats: a written trace round-trips bit-exactly
             # (the replay-exactness pin in tests/test_trace.py relies on it)
-            f.write(
-                json.dumps(
-                    {
-                        "t": r.t_start,
-                        "dur": r.duration,
-                        "src": r.src,
-                        "dst": r.dst,
-                        "kind": r.kind,
-                    }
-                )
-                + "\n"
-            )
+            obj = {
+                "t": r.t_start,
+                "dur": r.duration,
+                "src": r.src,
+                "dst": r.dst,
+                "kind": r.kind,
+            }
+            if r.net is not None:
+                obj["net"] = r.net
+            f.write(json.dumps(obj) + "\n")
 
 
 def _record_from_obj(obj: dict) -> TraceRecord:
+    net = obj.get("net")
     return TraceRecord(
         t_start=float(obj["t"]),
         duration=float(obj["dur"]),
         src=int(obj.get("src", -1)),
         dst=int(obj.get("dst", -1)),
         kind=str(obj.get("kind", "pull")),
+        net=None if net is None else float(net),
     ).validate()
 
 

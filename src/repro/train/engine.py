@@ -91,8 +91,10 @@ from repro.core.monitor import IterationTimeEMA
 from repro.scenarios.driver import (
     apply_action,
     attempt_fails,
+    monitor_reach,
     notify_monitor,
     prepare_monitor,
+    publish_policy,
 )
 from repro.scenarios.timeline import ScenarioCursor
 from repro.train import simulator as _sim
@@ -351,6 +353,66 @@ def _make_burst_body(algo: Algorithm, lr: float, mu: float, sr: int | None):
     return body
 
 
+#: Compiled full-M masked steps for the device-sharded path, keyed by
+#: (Algorithm.cache_token(), lr, momentum).
+_SHARDED_CACHE: dict = {}
+
+
+def _sharded_steps(algo: Algorithm, lr: float, mu: float):
+    """Fused steps for the device-sharded gossip path (DESIGN.md §16).
+
+    Operands are full-M masked vectors instead of packed cohorts — perm
+    (M,) peer rows (identity for idle workers), w (M,) mix weights, valid
+    (M,) actor mask, bidx (M, B) batch indices — so every array keeps the
+    stacked (M, ...) leading axis and shards row-wise over the mesh with
+    no host-side gather of remote rows.  Idle rows ride through unchanged
+    (``where(valid, ...)``); actors compute exactly the cohort body's
+    grad + momentum + mix, so the trajectory matches the packed path to
+    float tolerance.  Three entry points:
+
+    * ``full``   — gather-based pull inside one jitted step (any D); the
+      cross-shard ``R[perm]`` lowers to GSPMD collectives.
+    * ``half``   — grad/momentum half-step (perm-independent), used with
+    * ``commit`` — mix + masked write-back, fed by an eager
+      ``repro.dist.pull_ppermute`` between the two when the mesh has one
+      worker per slot (ppermute pairs are static, so that lowering lives
+      outside the jitted steps).
+    """
+    key = (algo.cache_token(), float(lr), float(mu))
+    entry = _SHARDED_CACHE.get(key)
+    if entry is not None:
+        return entry
+    vgrad = jax.vmap(jax.value_and_grad(_sim.ce_loss))
+
+    def half(R, Mom, dx, dy, bidx):
+        _, grads = vgrad(R, dx[bidx], dy[bidx])
+        new_m = tree_map(lambda m_, g: mu * m_ + g, Mom, grads)
+        x_half = tree_map(lambda p, m_: p - lr * m_, R, new_m)
+        return x_half, new_m
+
+    def commit(R, Mom, x_half, new_m, pulled, w, valid):
+        mixed = algo.mix_stacked_tree(x_half, pulled, w)
+
+        def keep(new, old):
+            v = valid.reshape((-1,) + (1,) * (new.ndim - 1))
+            return jnp.where(v, new, old)
+
+        return tree_map(keep, mixed, R), tree_map(keep, new_m, Mom)
+
+    def full(R, Mom, dx, dy, perm, w, valid, bidx):
+        x_half, new_m = half(R, Mom, dx, dy, bidx)
+        pulled = tree_map(lambda l: l[perm], R)  # pre-cohort peer rows
+        return commit(R, Mom, x_half, new_m, pulled, w, valid)
+
+    entry = (
+        jax.jit(full, donate_argnums=(0, 1)),
+        jax.jit(half),
+        jax.jit(commit, donate_argnums=(0, 1)),
+    )
+    _SHARDED_CACHE[key] = entry
+    return entry
+
+
 def _steps_for(algo: Algorithm, lr: float, mu: float, use_mix_kernel: bool,
                sr: int | None):
     if algo.batched_variant not in ("gossip", "ps-serial"):
@@ -430,8 +492,39 @@ def run_batched(
     step, chain_step, burst_step = _steps_for(algo, cfg.lr, cfg.momentum,
                                               cfg.use_mix_kernel, sr)
 
-    emas = [IterationTimeEMA(M, beta=cfg.ema_beta) for _ in range(M)]
+    # Device-sharded path (SimConfig.shard_workers; DESIGN.md §16): rows of
+    # the stacked pytree live split across the local mesh, and cohorts run
+    # as full-M masked steps through _sharded_steps.
+    shard = bool(getattr(cfg, "shard_workers", False))
+    mesh = None
+    if shard:
+        from jax.sharding import Mesh, NamedSharding
+        from jax.sharding import PartitionSpec as P
+
+        if variant != "gossip":
+            raise ValueError(
+                "cfg.shard_workers supports async gossip-family strategies "
+                f"only, not {algo.name!r} (variant {variant!r})"
+            )
+        devs = np.array(jax.devices())
+        if M % len(devs) != 0:
+            raise ValueError(
+                f"cfg.shard_workers needs n_workers ({M}) divisible by the "
+                f"device count ({len(devs)})"
+            )
+        mesh = Mesh(devs, ("workers",))
+        rows = NamedSharding(mesh, P("workers"))
+        R = tree_map(lambda l: jax.device_put(l, rows), R)
+        Mom = tree_map(lambda l: jax.device_put(l, rows), Mom)
+        sh_full, sh_half, sh_commit = _sharded_steps(algo, cfg.lr, cfg.momentum)
+
     monitor = algo.make_monitor(cfg, M, d=state.d) if algo.wants_monitor(cfg) else None
+    # Worker-side EMA matrices are M x (M,)-vectors — O(M^2) host memory.
+    # They only ever feed Monitor.collect, so monitor-less runs (the fleet
+    # sizes in benchmarks/run.py --suite simulator) skip them entirely;
+    # EMA updates consume no rng, so this is invisible to parity.
+    emas = ([IterationTimeEMA(M, beta=cfg.ema_beta) for _ in range(M)]
+            if monitor is not None else None)
     next_monitor = monitor.schedule_period if monitor else float("inf")
     prepare_monitor(monitor, link_model)
 
@@ -494,14 +587,16 @@ def run_batched(
             )
             res.trace_events.append(
                 (t_ev, timing.duration, i, m if m is not None else -1, kind,
-                 timing.comm, timing.compute)
+                 timing.comm, timing.compute, timing.net)
             )
         res.comm_time += timing.comm
         res.compute_time += timing.compute
         if failed:
             res.failed_pulls.append((t_ev, i, m))
-            next_monitor = notify_monitor(monitor, i, m, t_ev, next_monitor)
-        if algo.reports_ema and m is not None:
+            next_monitor = notify_monitor(
+                monitor, i, m, t_ev, next_monitor, link_model=link_model
+            )
+        if emas is not None and algo.reports_ema and m is not None:
             emas[i].update(m, timing.duration)
         heapq.heappush(heap, (t_ev + timing.duration, i))
         t = t_ev
@@ -582,13 +677,55 @@ def run_batched(
             ints[k, 3:] = e[5]
             w[k] = e[3]
         if B > K:  # pad rows: distinct idle workers, written back unchanged
-            free = np.fromiter(
-                (r for r in range(M) if r not in actors), np.int32, M - K
-            )[: B - K]
+            # First B-K non-actor rows, ascending — an incremental walk, so
+            # a fleet-sized M doesn't pay an O(M) scan per tiny cohort.
+            free = np.empty(B - K, np.int32)
+            n, r = 0, 0
+            while n < B - K:
+                if r not in actors:
+                    free[n] = r
+                    n += 1
+                r += 1
             ints[K:, 0] = free
             if sr is None:
                 ints[K:, 1] = free
         return ints, w
+
+    def dispatch_sharded(cohort):
+        """Execute one cohort as a full-M masked step on the worker mesh.
+
+        Host packing here is O(M) per cohort — acceptable because the
+        sharded path exists to distribute device memory, not to minimize
+        host work (the fleet benchmarks run unsharded).  The ppermute
+        lowering only engages at one worker per mesh slot; its shard_map
+        pairs are static, so each distinct peer map is its own program —
+        a demonstration lowering, with the sharded gather as the general
+        path."""
+        nonlocal R, Mom
+        blen = len(cohort[0][5])
+        perm = np.arange(M, dtype=np.int32)
+        wv = np.zeros(M, np.float32)
+        valid = np.zeros(M, bool)
+        bidx = np.zeros((M, blen), np.int32)
+        for e in cohort:
+            i = e[1]
+            perm[i] = e[2] if e[4] else i
+            wv[i] = e[3]
+            valid[i] = True
+            bidx[i] = e[5]
+        if mesh.size == M and len(set(perm.tolist())) == M:
+            # One worker per mesh slot AND the peer map is a true
+            # permutation (ppermute forbids repeated sources — see the
+            # repro.dist.gossip docstring): pull point-to-point.
+            from repro.dist.gossip import pull_ppermute
+
+            x_half, new_m = sh_half(R, Mom, dx, dy, bidx)
+            pulled = pull_ppermute(R, tuple(int(p) for p in perm),
+                                   mesh, ("workers",))
+            R, Mom = sh_commit(R, Mom, x_half, new_m, pulled, wv, valid)
+        else:
+            R, Mom = sh_full(R, Mom, dx, dy, perm, wv, valid, bidx)
+        res.dispatches += 1
 
     chain_acc: list = []  # consecutive fusable cohorts awaiting one dispatch
     chain_lo = chain_hi = 0  # row-bucket band of the accumulating chain
@@ -685,6 +822,12 @@ def run_batched(
                 cohort_log.append(
                     [(e[6], e[1], e[2] if e[4] else None) for e in cohort]
                 )
+        if shard:
+            # The sharded path has its own dispatch shape (full-M masked
+            # rows on the mesh); fusion machinery stays on the dense path.
+            for cohort in levels:
+                dispatch_sharded(cohort)
+            return
         if not fuse:
             for cohort in levels:
                 ints, w = pack(cohort, _bucket(len(cohort), M))
@@ -767,11 +910,16 @@ def run_batched(
         # loop fires them after the boundary event (Monitor first, then the
         # periodic evaluation) ----
         if monitor is not None and t_last >= next_monitor:
+            # Same home-pinned-Monitor semantics as the reference loop
+            # (scenarios/driver): parity demands identical reach decisions.
+            reach = monitor_reach(monitor, link_model, t_last)
             monitor.collect(
-                {j: emas[j].snapshot() for j in range(M) if j in active}
+                {j: emas[j].snapshot() for j in range(M)
+                 if j in active and (reach is None or reach[0][j])}
             )
             pol = monitor.step()
-            algo.on_policy(state, pol)
+            publish_policy(algo, state, pol,
+                           None if reach is None else reach[1])
             res.policy_updates += 1
             res.policy_log.append((t_last, pol.rho, pol.P.copy()))
             next_monitor += monitor.schedule_period

@@ -53,8 +53,10 @@ from repro.core.nettime import LinkTimeModel
 from repro.scenarios.driver import (
     apply_action,
     attempt_fails,
+    monitor_reach,
     notify_monitor,
     prepare_monitor,
+    publish_policy,
 )
 from repro.scenarios.timeline import ScenarioCursor
 from repro.train.elastic import reseed_replica
@@ -119,6 +121,12 @@ class SimConfig:
     # default (the paper's 2 minutes); setting it here is the single source
     # of truth — the simulator reads the period back off the Monitor.
     monitor_period: float | None = None
+    # Pin the Monitor control plane to a cluster (DESIGN.md §14/§16): when a
+    # scenario partitions that cluster off, reports from the far side are
+    # dropped, failure notifications are lost, and policy publishes only
+    # land on reachable workers — the far side keeps training on its stale
+    # policy.  None = legacy omniscient Monitor (bit-identical to history).
+    monitor_home_cluster: int | None = None
     ema_beta: float = 0.5
     policy_K: int = 8
     policy_R: int = 8
@@ -140,6 +148,13 @@ class SimConfig:
     # kernels/ops.mix_rows path (Pallas gossip_mix on TPU, jnp reference on
     # CPU) instead of the tree-map leaf rule.
     use_mix_kernel: bool = False
+    # Batched engine, async gossip family only: split the stacked replica
+    # pytree row-wise across the local device mesh (DESIGN.md §16).  Each
+    # cohort then runs as a full-M masked step — O(M/D) rows, grads, and
+    # batch gathers per device — with the peer pull lowered through
+    # repro.dist (lax.ppermute at one worker per mesh slot, a sharded
+    # gather otherwise).  Requires n_workers % len(jax.devices()) == 0.
+    shard_workers: bool = False
     # Batched engine only: fuse consecutive batch-length-homogeneous
     # cohorts (async) / rounds between record boundaries (sync) into single
     # lax.scan dispatches carrying (R, Mom), plus serial-burst scans for
@@ -176,13 +191,18 @@ class SimResult:
     failed_pulls: list = field(default_factory=list)
     policy_log: list = field(default_factory=list)
     # Per-event trace stream (SimConfig.trace; repro.trace): one tuple
-    # ``(t_start, duration, src, dst, kind, comm, compute)`` per event in
-    # pop order — kind in {"pull", "local", "timeout"} for async events
+    # ``(t_start, duration, src, dst, kind, comm, compute, net)`` per event
+    # in pop order — kind in {"pull", "local", "timeout"} for async events
     # (dst = -1 when there is no peer) and "round" for synchronous rounds
-    # (src = dst = -1).  Sync rounds additionally emit one "pull" (or
-    # "timeout") record per link the round queried, carrying the raw
-    # network time — that is what makes sync replay and calibration from
-    # sync traces exact.  Identical across engines, like failed_pulls.
+    # (src = dst = -1).  ``net`` is the raw link time the event drew
+    # (``Timing.net``) before any strategy multiplier — ps-async congestion,
+    # netmax-topk wire ratio — which is what lets replay serve it back
+    # through the link seam and re-apply the multipliers for bit-exact
+    # async replay of every strategy; None when no link time was drawn.
+    # Sync rounds additionally emit one "pull" (or "timeout") record per
+    # link the round queried, carrying the raw network time in ``duration``
+    # — that is what makes sync replay and calibration from sync traces
+    # exact.  Identical across engines, like failed_pulls.
     trace_events: list = field(default_factory=list)
 
     def time_to_loss(self, target: float) -> float:
@@ -217,11 +237,12 @@ def traced_round_timing(algo, state, cfg, link_model, groups, t, res):
     finally:
         link_model.query_tap = None
     res.trace_events.extend(
-        (t, v, i, m, "timeout" if dead else "pull", 0.0, 0.0)
+        (t, v, i, m, "timeout" if dead else "pull", 0.0, 0.0, None)
         for (i, m, v, dead) in taps
     )
     res.trace_events.append(
-        (t, timing.duration, -1, -1, "round", timing.comm, timing.compute)
+        (t, timing.duration, -1, -1, "round", timing.comm, timing.compute,
+         None)
     )
     return timing
 
@@ -337,8 +358,11 @@ def simulate(
         return res
 
     # ---------------- asynchronous strategies: event-driven loop --------------
-    emas = [IterationTimeEMA(M, beta=cfg.ema_beta) for _ in range(M)]
     monitor = algo.make_monitor(cfg, M, d=state.d) if algo.wants_monitor(cfg) else None
+    # O(M^2) worker-side EMA state only exists to feed Monitor.collect;
+    # monitor-less runs skip it (mirrors the batched engine exactly).
+    emas = ([IterationTimeEMA(M, beta=cfg.ema_beta) for _ in range(M)]
+            if monitor is not None else None)
     next_monitor = monitor.schedule_period if monitor else float("inf")
     prepare_monitor(monitor, link_model)
 
@@ -366,7 +390,9 @@ def simulate(
         if failed:
             algo.apply_failed(state, cfg, replicas, i, x_half)
             res.failed_pulls.append((t, i, m))
-            next_monitor = notify_monitor(monitor, i, m, t, next_monitor)
+            next_monitor = notify_monitor(
+                monitor, i, m, t, next_monitor, link_model=link_model
+            )
             communicated = True
         else:
             communicated = algo.apply_comm(state, cfg, replicas, i, m, x_half)
@@ -379,11 +405,11 @@ def simulate(
             )
             res.trace_events.append(
                 (t, timing.duration, i, m if m is not None else -1, kind,
-                 timing.comm, timing.compute)
+                 timing.comm, timing.compute, timing.net)
             )
         res.comm_time += timing.comm
         res.compute_time += timing.compute
-        if algo.reports_ema and m is not None:
+        if emas is not None and algo.reports_ema and m is not None:
             emas[i].update(m, timing.duration)
 
         heapq.heappush(heap, (t + timing.duration, i))
@@ -391,11 +417,16 @@ def simulate(
         # Network Monitor wakes every T_s (period owned by the Monitor) or
         # at an out-of-schedule failure-triggered refresh.
         if monitor is not None and t >= next_monitor:
+            # A home-pinned Monitor only hears reachable workers and only
+            # reaches them back; reach=None is the legacy omniscient path.
+            reach = monitor_reach(monitor, link_model, t)
             monitor.collect(
-                {j: emas[j].snapshot() for j in range(M) if j in active}
+                {j: emas[j].snapshot() for j in range(M)
+                 if j in active and (reach is None or reach[0][j])}
             )
             pol = monitor.step()
-            algo.on_policy(state, pol)
+            publish_policy(algo, state, pol,
+                           None if reach is None else reach[1])
             res.policy_updates += 1
             res.policy_log.append((t, pol.rho, pol.P.copy()))
             next_monitor += monitor.schedule_period

@@ -411,6 +411,23 @@ def test_engine_parity_scenarios(name, data):
         assert ref.policy_updates > 0
 
 
+def test_engine_parity_directed_outage_home_monitor(data):
+    """Asymmetric outage + home-pinned Monitor: reach filtering, dropped
+    notifications, and partial policy publishes are all host-side
+    decisions — both engines must make them identically."""
+    from repro.scenarios import ClusterOutage, Timeline
+
+    topo = Topology(8, workers_per_host=2, hosts_per_pod=2, pods_per_cluster=1)
+    tl = Timeline([ClusterOutage(1, 0.4, 2.5, direction="out")])
+    kw = dict(M=8, topo=topo, scenario=tl, monitor_period=0.3,
+              monitor_home_cluster=0)
+    ref = _sim("netmax", "reference", data, **kw)
+    bat = _sim("netmax", "batched", data, **kw)
+    assert ref.failed_pulls  # the one-direction outage actually bites
+    assert ref.policy_updates > 0
+    _assert_parity(ref, bat)
+
+
 def test_scenario_outage_stretches_sync_rounds(data):
     """Round strategies don't re-route: a dead member's ring link prices at
     the timeout, so outage-window rounds dominate the virtual clock."""

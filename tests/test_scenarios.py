@@ -222,7 +222,11 @@ def test_notified_link_is_masked():
     wake = mon.notify_failure(0, 5, now=3.0)
     assert wake == pytest.approx(3.5)  # now + reroute_delay
     res = mon.step()
-    assert res.P[0, 5] == 0 and res.P[5, 0] == 0
+    assert res.P[0, 5] == 0
+    # The evidence is directed (0's pull from 5 timed out) and so is the
+    # mask: under an asymmetric outage the reverse link may be fine, and if
+    # it is not, 5's own failed pulls report it independently.
+    assert res.P[5, 0] > 0
     assert res.P[1, 5] > 0  # only the reported link is masked
 
 
@@ -269,11 +273,21 @@ def test_cluster_escalation_masks_whole_pair():
     mon = _monitor(topo)
     _feed(mon)
     mon.notify_failure(0, 5, now=1.0)  # two distinct unreachable peers in
-    mon.notify_failure(1, 6, now=1.1)  # cluster 1 => the WAN pair is down
+    mon.notify_failure(1, 6, now=1.1)  # cluster 1 => that WAN direction down
     res = mon.step()
-    cross = cross_mask(topo)
-    assert res.P[cross].sum() == 0
+    cl = np.array([topo.cluster_of(i) for i in range(topo.n_workers)])
+    fwd = (cl[:, None] == 0) & (cl[None, :] == 1)  # observed direction
+    rev = (cl[:, None] == 1) & (cl[None, :] == 0)
+    assert res.P[fwd].sum() == 0
+    # All the evidence says cluster-0 pulls toward cluster 1 die; the
+    # reverse WAN direction has shown nothing wrong and stays routable.
+    assert res.P[rev].sum() > 0
     assert res.P[0, 1] > 0 and res.P[5, 4] > 0  # both intra sides alive
+    # Mirror evidence from the far side completes the full-pair mask.
+    mon.notify_failure(5, 0, now=1.2)
+    mon.notify_failure(6, 1, now=1.3)
+    _feed(mon)
+    assert mon.step().P[cross_mask(topo)].sum() == 0
 
 
 def test_failure_masks_expire_after_probation():
@@ -281,8 +295,10 @@ def test_failure_masks_expire_after_probation():
     mon = _monitor(topo, revive_after=2)
     cross = cross_mask(topo)
     _feed(mon)
-    mon.notify_failure(0, 5, now=1.0)
+    mon.notify_failure(0, 5, now=1.0)  # evidence in both WAN directions
     mon.notify_failure(1, 6, now=1.1)
+    mon.notify_failure(5, 0, now=1.2)
+    mon.notify_failure(6, 1, now=1.3)
     assert mon.step().P[cross].sum() == 0  # masked...
     _feed(mon)
     assert mon.step().P[cross].sum() == 0  # ...still within probation...
@@ -445,3 +461,158 @@ def test_partitioned_cluster_nonadaptive_baseline_keeps_failing(sim_data):
     assert all(cl[i] != cl[m] for _, i, m in res.failed_pulls)
     # Failures span the run, not just its start.
     assert res.failed_pulls[-1][0] > 0.5 * res.times[-1]
+
+
+# --------------------------------------------------------------------------
+# Asymmetric (one-direction) outages: directed ClusterOutage end to end
+# --------------------------------------------------------------------------
+
+
+def test_cluster_outage_direction_out():
+    """direction='out': pulls BY the cluster's workers across the WAN die;
+    pulls toward it keep flowing."""
+    topo = two_cluster_topo()
+    tl = Timeline([ClusterOutage(0, 1.0, 5.0, direction="out")]).compile(topo)
+    link = LinkTimeModel(topo, scenario=tl, seed=0)
+    link.advance_to(2.0)
+    assert link.link_dead(0, 5) and link.link_dead(3, 6)
+    assert not link.link_dead(5, 0) and not link.link_dead(6, 3)
+    assert not link.link_dead(0, 1) and not link.link_dead(5, 6)  # intra
+
+
+def test_cluster_outage_direction_in():
+    """direction='in': pulls FROM the cluster die; its own pulls survive."""
+    topo = two_cluster_topo()
+    tl = Timeline([ClusterOutage(0, 1.0, 5.0, direction="in")]).compile(topo)
+    link = LinkTimeModel(topo, scenario=tl, seed=0)
+    link.advance_to(2.0)
+    assert link.link_dead(5, 0) and link.link_dead(6, 3)
+    assert not link.link_dead(0, 5) and not link.link_dead(3, 6)
+    seg = tl.segments[1]
+    # The dense view agrees with the directed point queries.
+    dead = seg.dead
+    assert dead[5, 0] and not dead[0, 5]
+
+
+def test_cluster_outage_bad_direction_rejected():
+    with pytest.raises(ValueError, match="direction"):
+        Timeline([ClusterOutage(0, 1.0, 5.0, direction="sideways")]).compile(
+            two_cluster_topo()
+        )
+
+
+# --------------------------------------------------------------------------
+# Home-pinned Monitor (partition tolerance): the control plane shares fate
+# with its cluster — far-side reports are lost and publishes don't land
+# --------------------------------------------------------------------------
+
+
+def test_monitor_reach_directed_outage():
+    from repro.scenarios.driver import monitor_reach
+
+    topo = two_cluster_topo()
+    tl = Timeline([ClusterOutage(1, 1.0, 5.0, direction="out")]).compile(topo)
+    link = LinkTimeModel(topo, scenario=tl, seed=0)
+    mon = _monitor(topo)
+    mon.home_cluster = 0
+    far = np.array([topo.cluster_of(j) == 1 for j in range(8)])
+
+    reach_in, reach_out = monitor_reach(mon, link, 0.5)
+    assert reach_in.all() and reach_out.all()  # before the outage
+
+    # Cluster 1 lost its outbound WAN: its reports die in flight, but the
+    # Monitor's publishes (inbound to cluster 1) still land — reachability
+    # is directed, matching the outage.
+    reach_in, reach_out = monitor_reach(mon, link, 2.0)
+    assert not reach_in[far].any() and reach_in[~far].all()
+    assert reach_out.all()
+
+    # Omniscient Monitor (no home cluster): no reach filtering at all.
+    assert monitor_reach(_monitor(topo), link, 2.0) is None
+
+
+def test_monitor_reach_departed_worker():
+    from repro.scenarios.driver import monitor_reach
+
+    topo = two_cluster_topo()
+    tl = Timeline([WorkerLeave(3, 1.0), WorkerRejoin(3, 5.0)]).compile(topo)
+    link = LinkTimeModel(topo, scenario=tl, seed=0)
+    mon = _monitor(topo)
+    mon.home_cluster = 0
+    reach_in, reach_out = monitor_reach(mon, link, 2.0)
+    assert not reach_in[3] and not reach_out[3]
+    assert reach_in.sum() == 7 and reach_out.sum() == 7
+
+
+def test_publish_policy_partial_reach():
+    from types import SimpleNamespace
+
+    from repro.algos.netmax import NetMax
+    from repro.algos.base import guard_policy_rows
+    from repro.scenarios.driver import publish_policy
+    from repro.train.simulator import SimConfig
+
+    algo, M = NetMax(), 6
+    state = algo.init_state(SimConfig(algorithm="netmax", n_workers=M), M)
+    old_P, old_rho = state.P.copy(), state.rho
+    newP = np.full((M, M), 1.0 / (M - 1))
+    np.fill_diagonal(newP, 0.0)
+    pol = SimpleNamespace(P=newP, rho=old_rho + 0.5)
+    reach = np.array([True, True, True, False, False, False])
+
+    publish_policy(algo, state, pol, reach)
+    expect = guard_policy_rows(newP, state.d)
+    np.testing.assert_array_equal(state.P[:3], expect[:3])  # delivered
+    np.testing.assert_array_equal(state.P[3:], old_P[3:])   # stale rows kept
+    # rho is per-worker now: the far side keeps its stale consensus step.
+    assert state.rho == pol.rho
+    assert state.rho_of(0) == pol.rho and state.rho_of(4) == old_rho
+
+    # A later full publish collapses back to the scalar-rho fast path.
+    pol2 = SimpleNamespace(P=newP, rho=old_rho + 1.0)
+    publish_policy(algo, state, pol2, np.ones(M, dtype=bool))
+    assert state.rho_vec is None and state.rho == pol2.rho
+
+
+def test_home_pinned_monitor_far_side_keeps_stale_policy(sim_data):
+    """The satellite property: partition a home-pinned Monitor off from
+    cluster 1 and the far side keeps training on its stale policy — its
+    cross-partition attempts (invisible to the Monitor) never stop, while
+    the near side is re-routed as usual."""
+    from repro.algos.netmax import NetMax
+    from repro.train.simulator import SimConfig, simulate
+
+    class PatientNetMax(NetMax):
+        def make_monitor(self, cfg, M, d=None):
+            mon = super().make_monitor(cfg, M, d=d)
+            mon.revive_after = 10**9
+            return mon
+
+    topo = two_cluster_topo()
+    x, y, parts, ex, ey = sim_data
+    link = LinkTimeModel(topo, jitter=0.02, seed=5,
+                         scenario=presets.partition(topo, start=0.5),
+                         dead_link_timeout=1.0)
+    cfg = SimConfig(algorithm=PatientNetMax(), n_workers=8, total_events=700,
+                    lr=0.05, monitor_period=0.5, seed=0, engine="batched",
+                    monitor_home_cluster=0)
+    res = simulate(cfg, link, x, y, parts, ex, ey, record_every=100)
+    far = {j for j in range(8) if topo.cluster_of(j) == 1}
+
+    # The Monitor (fed only by near-side reports) still converges on a
+    # zero-cross policy: near evidence masks near->far, and the silent far
+    # side is declared dead after ``dead_after`` missed reports.
+    cross = cross_mask(topo)
+    reroute_t = next(
+        (t for t, _, P in res.policy_log if P[cross].sum() == 0), None
+    )
+    assert reroute_t is not None
+    # Near-side workers received that policy and never cross again...
+    assert all(t <= reroute_t for t, i, _ in res.failed_pulls if i not in far)
+    # ...but the publish never reaches the far side, which keeps training
+    # on its stale cross-heavy policy: its failed attempts span the run.
+    far_fail_times = [t for t, i, _ in res.failed_pulls if i in far]
+    assert far_fail_times and far_fail_times[-1] > 0.5 * res.times[-1]
+    assert max(far_fail_times) > reroute_t
+    # Both halves keep making progress despite the split control plane.
+    assert np.isfinite(res.losses[-1]) and res.losses[-1] < res.losses[0]
