@@ -742,6 +742,191 @@ def bench_trace(M=8, small=False, out_path=None,
     return {"results": results, "summary": summary}
 
 
+def bench_serve(sizes=(128, 256), serve_M=32, n_requests=600, K=8, R=8,
+                small=False, out_path=None):
+    """Policy-serving hot path (PR 8 tentpole): pricing/warm-sweep pivot
+    economics at M >= 128, the M=256 full-graph wall target, PolicyServer
+    latency under a jittered request stream, and the batched-sweep
+    dispatch.  Writes BENCH_serve.json.
+
+    Gated (hardware-portable ratios, scripts/check_bench.py):
+      * ``pivot_reduction_vs_dantzig`` — pivots of the pre-PR-shaped
+        baseline (Dantzig full pricing, cold restarts, via
+        ``lp_pricing("dantzig")``) over the serving stack's warm auto
+        sweep.  Deterministic; the ISSUE floor is >= 2x at M >= 128.
+      * ``no_uniform_fallback`` — 1.0 iff the sweep solved real LPs (the
+        pre-PR M=256 behaviour was an iteration-cap blowup into the
+        uniform AD-PSGD policy).
+      * ``cache_hit_rate`` / ``p99_is_hit`` — the served stream must be
+        dominated by cache hits, including at the p99 latency.
+      * ``same_grid_point_batched`` — the lockstep stacked sweep picks the
+        identical (rho, t_bar) as the serial path.
+    Wall-clock seconds are reported ungated (runner-dependent).
+
+    ``small`` is the CI smoke shape: M=128 only, a smaller served graph,
+    same metric keys so check_bench finds overlap with the committed
+    baseline.
+    """
+    import time as _time
+
+    import numpy as np
+
+    from repro.core import policy
+    from repro.serve import PolicyServer
+    from repro.solver.lp import lp_pricing
+
+    if small:
+        sizes = tuple(s for s in sizes if s <= 128) or (128,)
+        serve_M = min(serve_M, 16)
+        n_requests = min(n_requests, 200)
+
+    def hetero_T(M, seed=0):
+        rng = np.random.default_rng(seed)
+        T = rng.uniform(0.01, 0.05, size=(M, M))
+        T = (T + T.T) / 2
+        i, m = rng.choice(M, size=2, replace=False)
+        T[i, m] = T[m, i] = T[i, m] * 10.0
+        np.fill_diagonal(T, 0.0)
+        return T
+
+    # -- pricing: warm auto sweep vs the Dantzig-cold baseline ------------
+    pricing_rows = {}
+    for M in sizes:
+        T = hetero_T(M)
+        t0 = _time.time()
+        warm1 = policy.generate_policy_matrix(0.1, K=K, R=R, T=T)
+        first_s = _time.time() - t0
+        t0 = _time.time()
+        warm2 = policy.generate_policy_matrix(0.1, K=K, R=R, T=T,
+                                              warm=warm1.basis)
+        refresh_s = _time.time() - t0
+        with lp_pricing("dantzig"):
+            t0 = _time.time()
+            cold = policy.generate_policy_matrix(0.1, K=K, R=R, T=T,
+                                                 warm_start=False)
+            dantzig_s = _time.time() - t0
+        fallback = warm1.n_lp_feasible == 0 and not any(
+            np.isfinite(g[3]) for g in warm1.grid
+        )
+        row = dict(
+            warm_first_s=round(first_s, 4),
+            warm_refresh_s=round(refresh_s, 4),
+            dantzig_cold_s=round(dantzig_s, 4),
+            pivots_warm=warm1.n_pivots,
+            pivots_refresh=warm2.n_pivots,
+            pivots_dantzig_cold=cold.n_pivots,
+            pivot_reduction_vs_dantzig=round(
+                cold.n_pivots / max(1, warm1.n_pivots), 2
+            ),
+            wall_reduction_vs_dantzig=round(dantzig_s / first_s, 2),
+            warm_hit_rate=round(warm1.n_warm_used / max(1, warm1.n_solves), 3),
+            no_uniform_fallback=0.0 if fallback else 1.0,
+            same_grid_point_as_cold=bool(
+                warm1.rho == cold.rho and warm1.t_bar == cold.t_bar
+            ),
+            T_convergence=round(float(warm1.T_convergence), 4),
+        )
+        pricing_rows[f"M={M}"] = row
+        print(f"serve/pricing/M={M},{first_s * 1e6:.0f},"
+              f"warm={first_s:.2f}s_refresh={refresh_s:.2f}s_"
+              f"dantzig_cold={dantzig_s:.2f}s_"
+              f"piv_red={row['pivot_reduction_vs_dantzig']}x_"
+              f"wall_red={row['wall_reduction_vs_dantzig']}x_"
+              f"fallback={fallback}")
+
+    # -- served stream ----------------------------------------------------
+    # Access pattern: the Monitor publishes an EMA snapshot per epoch; a
+    # fleet of tenants (what-if probes, simulator replicas) then requests
+    # policies for that snapshot, each holding a copy that differs by
+    # fp-recompute noise (~1e-9 — absorbed by quantization, so the copies
+    # share one cache line despite differing bytes).  Epoch-to-epoch EMA
+    # drift (~1e-4) produces a genuinely new instance and one warm solve.
+    # Warm-up (priming the bases + one edge-churn invalidation cycle) is
+    # excluded from the latency percentiles, as serving benches do.
+    rng = np.random.default_rng(7)
+    bases = [hetero_T(serve_M, seed=s) for s in range(4)]
+    srv = PolicyServer(alpha=0.1, K=K, R=R, quant=0.05)
+    srv.request_many([(B, None) for B in bases])  # prime: 4 cold solves
+    solve_ms = list(srv.stats.latencies_ms)  # priming = pure solve latency
+    # Edge churn during warm-up: the PR-5 invalidation rule on the served
+    # path (drops base 0's line + warm basis; the re-request re-solves).
+    d = np.ones((serve_M, serve_M)) - np.eye(serve_M)
+    d[0, 1] = d[1, 0] = 0.0
+    srv.request(bases[0], d=d, tenant="churn")
+    srv.request(bases[0], tenant="churn")
+    warm_n = len(srv.stats.latencies_ms)
+    solves_before = srv.stats.n_solves
+    epochs = 5
+    per_epoch = max(1, n_requests // epochs)
+    for e in range(epochs):
+        B = bases[int(rng.integers(len(bases)))]
+        snapshot = B + rng.uniform(-1e-4, 1e-4, B.shape)  # EMA drift
+        for _ in range(per_epoch):
+            noise = rng.uniform(-1e-9, 1e-9, B.shape)  # fp-recompute noise
+            srv.request(snapshot + noise, tenant="stream")
+    lat = np.asarray(srv.stats.latencies_ms[warm_n:])
+    n_measured = len(lat)
+    misses = srv.stats.n_solves - solves_before
+    p50 = float(np.percentile(lat, 50))
+    p99 = float(np.percentile(lat, 99))
+    serving = dict(
+        M=serve_M, quant=0.05, epochs=epochs, requests=n_measured,
+        cache_hit_rate=round(1.0 - misses / n_measured, 4),
+        n_solves=misses,
+        n_invalidations=srv.stats.n_invalidations,
+        p50_ms=round(p50, 4),
+        p99_ms=round(p99, 4),
+        min_solve_ms=round(min(solve_ms), 3),
+        p99_is_hit=1.0 if p99 < min(solve_ms) else 0.0,
+    )
+    print(f"serve/stream/M={serve_M},{p50 * 1e3:.1f},"
+          f"hit={serving['cache_hit_rate']}_p50={serving['p50_ms']}ms_"
+          f"p99={serving['p99_ms']}ms_solves={serving['n_solves']}_"
+          f"inval={serving['n_invalidations']}")
+
+    # -- batched lockstep sweep vs serial cold at the served size ---------
+    Tb = bases[0]
+    t0 = _time.time()
+    serial_cold = policy.generate_policy_matrix(0.1, K=K, R=R, T=Tb,
+                                                warm_start=False)
+    serial_s = _time.time() - t0
+    t0 = _time.time()
+    batched = policy.generate_policy_matrix_batched(0.1, K=K, R=R, T=Tb)
+    batched_s = _time.time() - t0
+    batch_row = dict(
+        M=serve_M,
+        serial_cold_s=round(serial_s, 4),
+        batched_s=round(batched_s, 4),
+        batched_speedup_vs_serial_cold=round(serial_s / batched_s, 2),
+        same_grid_point_batched=1.0 if (
+            batched.rho == serial_cold.rho
+            and batched.t_bar == serial_cold.t_bar
+        ) else 0.0,
+        lp_instances=batched.n_solves,
+    )
+    print(f"serve/batched/M={serve_M},{batched_s * 1e6:.0f},"
+          f"serial_cold={serial_s:.3f}s_batched={batched_s:.3f}s_"
+          f"same_pt={bool(batch_row['same_grid_point_batched'])}")
+
+    out = {
+        "suite": "serve",
+        "K": K,
+        "R": R,
+        "sizes": list(sizes),
+        "small": bool(small),
+        "baseline": "lp_pricing('dantzig') + warm_start=False "
+                    "(pre-PR solver shape)",
+        "pricing": pricing_rows,
+        "serving": serving,
+        "batched": batch_row,
+    }
+    path = Path(out_path) if out_path else ROOT / "BENCH_serve.json"
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote {path}")
+    return out
+
+
 def bench_roofline_summary():
     """Summarize dry-run artifacts (if present) into roofline terms."""
     from repro.analysis.roofline import from_record
@@ -776,7 +961,7 @@ def main() -> None:
     ap.add_argument("--suite", default="all",
                     choices=["all", "paper", "kernels", "roofline", "quick",
                              "algos", "simulator", "policy", "scenarios",
-                             "trace"])
+                             "trace", "serve"])
     ap.add_argument("--events", type=int, default=4000)
     ap.add_argument("--policy-sizes", type=int, nargs="+", default=None,
                     help="worker counts for --suite policy "
@@ -789,7 +974,7 @@ def main() -> None:
                          "suite's batched-only rows (default 128 1024 4096; "
                          "pass 0 to skip; CI smoke passes 128 1024)")
     ap.add_argument("--small", action="store_true",
-                    help="CI smoke shape for --suite scenarios/trace "
+                    help="CI smoke shape for --suite scenarios/trace/serve "
                          "(fewer workers/events, same structure)")
     ap.add_argument("--out-dir", default=None,
                     help="write BENCH_*.json here instead of the repo root "
@@ -836,6 +1021,10 @@ def main() -> None:
     if args.suite in ("all", "trace"):
         out["trace"] = bench_trace(
             small=args.small, out_path=bench_path("BENCH_trace.json")
+        )
+    if args.suite in ("all", "serve"):
+        out["serve"] = bench_serve(
+            small=args.small, out_path=bench_path("BENCH_serve.json")
         )
     if args.suite in ("all", "paper"):
         out["policy_generation"] = pt.bench_policy_generation()

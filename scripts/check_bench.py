@@ -83,10 +83,39 @@ def _walk_trace(doc):
         yield "summary", k, s.get(k)
 
 
+def _walk_serve(doc):
+    """Yield ratio metrics from BENCH_serve.json (PR 8 serving hot path).
+
+    Gated: the deterministic pivot-reduction of the warm auto sweep over
+    the Dantzig-cold baseline (ISSUE floor >= 2x at M >= 128, committed
+    baseline ~9x), the no-uniform-fallback flag (1/0 — any fallback at
+    M >= 128 is the pre-PR blowup), the served cache hit rate, the
+    p99-is-a-cache-hit flag, and the batched-sweep grid-point agreement.
+    Wall-clock fields (warm_first_s, p50_ms, ...) are deliberately NOT
+    gated — they move with runner hardware; the ratios above carry the
+    regression signal portably."""
+    for size, row in doc.get("pricing", {}).items():
+        yield f"pricing/{size}", "pivot_reduction_vs_dantzig", row.get(
+            "pivot_reduction_vs_dantzig"
+        )
+        yield f"pricing/{size}", "no_uniform_fallback", row.get(
+            "no_uniform_fallback"
+        )
+        yield f"pricing/{size}", "warm_hit_rate", row.get("warm_hit_rate")
+    serving = doc.get("serving", {})
+    yield "serving", "cache_hit_rate", serving.get("cache_hit_rate")
+    yield "serving", "p99_is_hit", serving.get("p99_is_hit")
+    batched = doc.get("batched", {})
+    yield "batched", "same_grid_point_batched", batched.get(
+        "same_grid_point_batched"
+    )
+
+
 _WALKERS = {
     "simulator": _walk_simulator,
     "policy": _walk_policy,
     "trace": _walk_trace,
+    "serve": _walk_serve,
 }
 
 

@@ -93,6 +93,22 @@ class AlgoState:
     # Monitor could not reach keep their stale rho while reachable workers
     # adopt the fresh one.  None = everyone shares the scalar ``rho``.
     rho_vec: np.ndarray | None = None
+    # Monotonic publish counter: bumped automatically on every rebind of
+    # ``P`` (policy publish, partition-aware partial publish, tests).  This
+    # is the cache key for anything derived from P — ``id(state.P)`` is NOT
+    # safe: a freed policy matrix's address can be reused by a later
+    # allocation, silently serving stale derived state (the gossip
+    # peer-draw CDF cache hit exactly that).  P is never mutated in place
+    # by the engines, so "version changed iff P was rebound" holds.
+    policy_version: int = 0
+
+    def __setattr__(self, name, value):
+        if name == "P":
+            object.__setattr__(
+                self, "policy_version",
+                getattr(self, "policy_version", -1) + 1,
+            )
+        object.__setattr__(self, name, value)
 
     def rho_of(self, i: int) -> float:
         """Worker ``i``'s consensus step (stale-policy aware)."""

@@ -27,14 +27,17 @@ class GossipAlgorithm(Algorithm):
         # Cached-CDF draw. ``rng.choice(M, p=row)`` recomputes the row's
         # cumsum on every event — O(M) per draw, the dominant host cost at
         # fleet scale. P is only ever rebound (never mutated in place), so
-        # the per-row CDFs stay valid until ``id(state.P)`` changes. The
-        # draw mirrors Generator.choice's internals exactly (cumsum,
+        # the per-row CDFs stay valid until ``state.policy_version``
+        # changes — the counter AlgoState bumps on every rebind of P.
+        # (Keying on ``id(state.P)`` is unsound: a freed policy matrix's
+        # address can be reused by a later allocation, serving stale CDFs.)
+        # The draw mirrors Generator.choice's internals exactly (cumsum,
         # normalize by the last entry, searchsorted(random(), 'right')),
         # consuming one uniform — bit-identical to the rng.choice path.
         pid, cdfs = state.extras.get("_peer_cdf", (None, None))
-        if pid != id(state.P):
+        if pid != state.policy_version:
             cdfs = {}
-            state.extras["_peer_cdf"] = (id(state.P), cdfs)
+            state.extras["_peer_cdf"] = (state.policy_version, cdfs)
         cdf = cdfs.get(i)
         if cdf is None:
             row = state.P[i] / state.P[i].sum()

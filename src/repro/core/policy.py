@@ -22,11 +22,24 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+try:  # scipy ships in the target env; gate anyway per repo policy
+    import scipy.sparse as _sp
+except ImportError:  # pragma: no cover - exercised only without scipy
+    _sp = None
+
 from repro.core import consensus, theory
 from repro.solver.lp import BasisState, solve_lp
 
 # Strictness margin for the strict inequality Eq. (11): p > alpha*rho*(d+d').
 _FLOOR_MARGIN = 1e-6
+
+# At and above this M the Eq.-14 constraint matrix is built directly in CSC
+# form (each column holds at most two nonzeros — the worker's Eq.-10 row and
+# its Eq.-13 row), skipping the O(M^3) dense allocation entirely: ~2 MB
+# sparse vs ~270 MB dense at M=256 full graph.  The solver's LU engine
+# prices through CSC natively; values are identical to the dense build, so
+# this is a storage choice, not a behavior change.
+_SPARSE_A_MIN_M = 64
 
 
 @dataclass
@@ -72,6 +85,77 @@ class PolicyResult:
         return np.isfinite(self.T_convergence)
 
 
+@dataclass
+class _Eq14Instance:
+    """Eq.-14 LP skeleton shared across a whole (rho, t_bar) grid sweep.
+
+    Everything here depends only on (T, d): across the t_bar grid only
+    ``b`` changes and across rho steps only the Eq.-11 bound floors, so
+    the constraint matrix — the expensive part, O(M^3) dense at full
+    connectivity — is built once per policy generation instead of once
+    per grid point.  ``A`` is dense below ``_SPARSE_A_MIN_M`` (the
+    bit-exact historical path) and CSC at scale.
+    """
+
+    M: int
+    n: int
+    ii: np.ndarray      # edge row indices (ascending i, ascending m per row)
+    mm: np.ndarray      # edge col indices
+    pos: np.ndarray     # LP variable slot of each edge
+    start: np.ndarray   # LP variable slot of each diagonal p_{i,i}
+    c: np.ndarray
+    A: object           # ndarray or scipy.sparse CSC
+    ub: np.ndarray
+    dsym: np.ndarray    # d[ii, mm] + d[mm, ii] — the Eq.-11 floor weights
+
+
+def _build_eq14(T: np.ndarray, d: np.ndarray) -> _Eq14Instance:
+    """Build the Eq.-14 instance skeleton for connectivity ``d``.
+
+    Variable layout matches the historical per-(i, m) Python loop exactly:
+    for each worker i the diagonal p_{i,i} first, then p_{i,m} over edges
+    in ascending m.  (The simplex pivot path — hence the solution bits —
+    depends on variable order, so the vectorized build must preserve it.)
+    """
+    M = T.shape[0]
+    eye = np.eye(M, dtype=bool)
+    edge = (d != 0) & ~eye
+    n_per_row = 1 + edge.sum(axis=1)
+    start = np.concatenate(([0], np.cumsum(n_per_row)[:-1]))  # (i,i) slots
+    ii, mm = np.nonzero(edge)  # row-major: ascending i, ascending m per row
+    pos = start[ii] + edge.cumsum(axis=1)[ii, mm]  # edge slots
+    n = int(n_per_row.sum())
+    c = np.zeros(n)
+    c[start] = 1.0  # objective: minimize self-selection
+    ub = np.ones(n)
+    dsym = d[ii, mm] + d[mm, ii]
+    if M >= _SPARSE_A_MIN_M and _sp is not None:
+        # Direct CSC build: diagonal columns hold one nonzero (Eq.-13 row
+        # M+i), edge columns two (Eq.-10 row i with coefficient T_im, then
+        # Eq.-13 row M+i) — rows ascending within each column, columns in
+        # variable order, so the structure matches csc_matrix(dense).
+        col_nnz = np.ones(n, dtype=np.int64)
+        col_nnz[pos] = 2
+        indptr = np.concatenate(([0], np.cumsum(col_nnz)))
+        data = np.empty(int(indptr[-1]))
+        indices = np.empty(int(indptr[-1]), dtype=np.int32)
+        indices[indptr[start]] = M + np.arange(M)
+        data[indptr[start]] = 1.0
+        indices[indptr[pos]] = ii
+        data[indptr[pos]] = T[ii, mm]
+        indices[indptr[pos] + 1] = M + ii
+        data[indptr[pos] + 1] = 1.0
+        A = _sp.csc_matrix((data, indices, indptr), shape=(2 * M, n))
+    else:
+        A = np.zeros((2 * M, n))
+        # Eq. (10): sum_m t_{i,m} p_{i,m} d_{i,m} = M * t_bar.
+        A[ii, pos] = T[ii, mm]
+        # Eq. (13): sum_m p_{i,m} = 1 (diagonal included).
+        A[M + np.arange(M), start] = 1.0
+        A[M + ii, pos] = 1.0
+    return _Eq14Instance(M, n, ii, mm, pos, start, c, A, ub, dsym)
+
+
 def _solve_policy_lp(
     T: np.ndarray,
     d: np.ndarray,
@@ -79,6 +163,7 @@ def _solve_policy_lp(
     rho: float,
     t_bar: float,
     carry: WarmStartCarry | None = None,
+    inst: _Eq14Instance | None = None,
 ) -> np.ndarray | None:
     """LP of Eq. (14): min sum_i p_{i,i} s.t. Eqs. (10)-(13).
 
@@ -88,36 +173,20 @@ def _solve_policy_lp(
     iteration time == M * t_bar (equalizes p_i).  Eq. (11): p_{i,m} >=
     alpha*rho*(d_{i,m}+d_{m,i}) + margin on edges.  Eq. (13): rows sum to
     one (diagonal included).  ``carry`` (optional) supplies the warm-start
-    basis for the solve and receives the updated one.
+    basis for the solve and receives the updated one; ``inst`` reuses a
+    prebuilt ``_Eq14Instance`` across the grid (sweeps pass it — only
+    ``b`` and the floors change between grid points).
     """
-    M = T.shape[0]
-    eye = np.eye(M, dtype=bool)
-    edge = (d != 0) & ~eye
-    # Variable layout matches the historical per-(i, m) Python loop exactly:
-    # for each worker i the diagonal p_{i,i} first, then p_{i,m} over edges
-    # in ascending m.  (The simplex pivot path — hence the solution bits —
-    # depends on variable order, so the vectorized build must preserve it.)
-    n_per_row = 1 + edge.sum(axis=1)
-    start = np.concatenate(([0], np.cumsum(n_per_row)[:-1]))  # (i,i) slots
-    ii, mm = np.nonzero(edge)  # row-major: ascending i, ascending m per row
-    pos = start[ii] + edge.cumsum(axis=1)[ii, mm]  # edge slots
-    n = int(n_per_row.sum())
-    c = np.zeros(n)
-    c[start] = 1.0  # objective: minimize self-selection
+    if inst is None:
+        inst = _build_eq14(T, d)
+    M, n = inst.M, inst.n
     lb = np.zeros(n)
-    ub = np.ones(n)
-    lb[pos] = alpha * rho * (d[ii, mm] + d[mm, ii]) + _FLOOR_MARGIN
-    A = np.zeros((2 * M, n))
+    lb[inst.pos] = alpha * rho * inst.dsym + _FLOOR_MARGIN
     b = np.zeros(2 * M)
-    # Eq. (10): sum_m t_{i,m} p_{i,m} d_{i,m} = M * t_bar.
-    A[ii, pos] = T[ii, mm]
     b[:M] = M * t_bar
-    # Eq. (13): sum_m p_{i,m} = 1 (diagonal included).
-    A[M + np.arange(M), start] = 1.0
-    A[M + ii, pos] = 1.0
     b[M:] = 1.0
     warm = carry.basis if carry is not None and carry.enabled else None
-    res = solve_lp(c, A, b, lb=lb, ub=ub, warm=warm)
+    res = solve_lp(inst.c, inst.A, b, lb=lb, ub=inst.ub, warm=warm)
     if carry is not None:
         carry.n_solves += 1
         carry.n_pivots += res.pivots
@@ -128,8 +197,8 @@ def _solve_policy_lp(
         return None
     x = np.maximum(res.x, 0.0)
     P = np.zeros((M, M))
-    P[ii, mm] = x[pos]
-    P[np.arange(M), np.arange(M)] = x[start]
+    P[inst.ii, inst.mm] = x[inst.pos]
+    P[np.arange(M), np.arange(M)] = x[inst.start]
     return P
 
 
@@ -225,16 +294,21 @@ def inner_loop(
     d: np.ndarray,
     eps: float = 1e-2,
     carry: WarmStartCarry | None = None,
+    inst: _Eq14Instance | None = None,
 ) -> PolicyResult | None:
     """Algorithm 3 INNERLOOP: grid over t_bar in [L, U], LP + eig score.
 
     Across the grid only ``b`` changes (b[:M] = M*t_bar), so with ``carry``
-    each solve after the first is a warm dual-simplex restart.
+    each solve after the first is a warm dual-simplex restart.  ``inst``
+    (optional) reuses a prebuilt Eq.-14 skeleton — the outer loop passes
+    one so the constraint matrix is built once per policy generation.
     """
     L, U = _t_bar_interval(T, d, alpha, rho)
     if not np.isfinite(U) or U <= L:
         return None
     M = T.shape[0]
+    if inst is None:
+        inst = _build_eq14(T, d)
     lo, hi = _eq14_time_bounds(T, d, alpha, rho)
     best: PolicyResult | None = None
     n_solved = n_feasible = 0
@@ -252,7 +326,8 @@ def inner_loop(
             continue
         n_solved += 1
         try:
-            P = _solve_policy_lp(T, d, alpha, rho, t_bar, carry=carry)
+            P = _solve_policy_lp(T, d, alpha, rho, t_bar, carry=carry,
+                                 inst=inst)
         except (RuntimeError, MemoryError):
             # Simplex iteration cap / instance too large for this grid point:
             # score it infeasible so the Monitor degrades to other grid
@@ -334,13 +409,14 @@ def generate_policy_matrix(
     U_rho = _rho_grid_upper(alpha, Tm, d)
     delta = U_rho / K
     carry = WarmStartCarry(basis=warm, enabled=warm_start)
+    inst = _build_eq14(Tm, d)  # one constraint matrix for the whole sweep
     best: PolicyResult | None = None
     all_grid = []
     for k in range(1, K + 1):
         rho = k * delta
         # Across rho steps only the Eq.-11 bound floors change: the carry's
         # basis stays dual-feasible and restarts in a handful of pivots.
-        res = inner_loop(alpha, rho, R, Tm, d, eps, carry=carry)
+        res = inner_loop(alpha, rho, R, Tm, d, eps, carry=carry, inst=inst)
         if res is None:
             continue
         all_grid.extend(res.grid)
@@ -361,6 +437,135 @@ def generate_policy_matrix(
     best.n_pivots = carry.n_pivots
     best.n_warm_used = carry.n_warm_used
     best.n_solves = carry.n_solves
+    return best
+
+
+def generate_policy_matrix_batched(
+    alpha: float,
+    K: int,
+    R: int,
+    T: np.ndarray,
+    d: np.ndarray | None = None,
+    eps: float = 1e-2,
+) -> PolicyResult:
+    """Algorithm 3 with the whole (rho, t_bar) grid solved in one dispatch.
+
+    Semantically ``generate_policy_matrix`` (same grid, same feasibility
+    pre-filter, same scoring), but every surviving grid point becomes one
+    instance of a lockstep batched simplex (``repro.solver.batch``) — all
+    points price and ratio-test together in stacked GEMMs — and all
+    feasible policies are scored with a single stacked ``eigvalsh``.
+
+    Numerics follow a different summation order than the serial sweep, so
+    the selected grid point matches the serial path up to solver tolerance
+    (exactly, away from near-ties), not bit-for-bit — engine-parity
+    callers keep the serial path.  Best suited to small/medium M where the
+    grid, not one LP, dominates; at large M the serial warm-start sweep's
+    dual restarts are cheaper than lockstep cold starts.
+    """
+    T = np.asarray(T, dtype=np.float64)
+    M = T.shape[0]
+    if d is None:
+        d = np.ones((M, M)) - np.eye(M)
+    d = np.asarray(d, dtype=np.float64).copy()
+    dead = ~np.isfinite(T)
+    d[dead] = 0.0
+    d[dead.T] = 0.0
+    Tm = np.where(np.isfinite(T), T, 0.0)
+    np.fill_diagonal(d, 0.0)
+    live = np.where(d.sum(axis=1) > 0)[0]
+    if 0 < live.size < M:
+        sub = generate_policy_matrix_batched(
+            alpha, K, R, Tm[np.ix_(live, live)], d[np.ix_(live, live)], eps
+        )
+        P = np.zeros((M, M))
+        P[np.ix_(live, live)] = sub.P
+        return PolicyResult(
+            P, sub.rho, sub.t_bar, sub.lambda2, sub.T_convergence,
+            sub.n_lp_solved, sub.n_lp_feasible, sub.grid,
+            basis=sub.basis, n_pivots=sub.n_pivots,
+            n_warm_used=sub.n_warm_used, n_solves=sub.n_solves,
+        )
+
+    U_rho = _rho_grid_upper(alpha, Tm, d)
+    delta = U_rho / K
+    inst = _build_eq14(Tm, d)
+    cand: list[tuple[float, float]] = []
+    grid: list = []
+    for k in range(1, K + 1):
+        rho = k * delta
+        L, U = _t_bar_interval(Tm, d, alpha, rho)
+        if not np.isfinite(U) or U <= L:
+            continue
+        lo, hi = _eq14_time_bounds(Tm, d, alpha, rho)
+        for r in range(1, R + 1):
+            t_bar = L + (U - L) * r / R
+            target = M * t_bar
+            tol = 1e-6 * max(1.0, abs(target))
+            if target < lo - tol or target > hi + tol:
+                grid.append((rho, t_bar, None, np.inf))
+            else:
+                cand.append((rho, t_bar))
+
+    best: PolicyResult | None = None
+    n_pivots = 0
+    n_feasible = 0
+    if cand:
+        from repro.solver.batch import solve_lp_batch
+
+        S = len(cand)
+        rho_s = np.array([c0 for c0, _ in cand])
+        tb_s = np.array([c1 for _, c1 in cand])
+        b = np.zeros((S, 2 * M))
+        b[:, :M] = (M * tb_s)[:, None]
+        b[:, M:] = 1.0
+        lb = np.zeros((S, inst.n))
+        lb[:, inst.pos] = (
+            alpha * rho_s[:, None] * inst.dsym[None, :] + _FLOOR_MARGIN
+        )
+        results = solve_lp_batch(inst.c, inst.A, b, lb_stack=lb,
+                                 ub_stack=inst.ub)
+        n_pivots = int(sum(r.pivots for r in results))
+        Ps, feas = [], []
+        for s, res in enumerate(results):
+            if not res.ok:
+                grid.append((rho_s[s], tb_s[s], None, np.inf))
+                continue
+            x = np.maximum(res.x, 0.0)
+            P = np.zeros((M, M))
+            P[inst.ii, inst.mm] = x[inst.pos]
+            P[np.arange(M), np.arange(M)] = x[inst.start]
+            Ps.append(P)
+            feas.append(s)
+        n_feasible = len(feas)
+        if feas:
+            Ys = np.stack([
+                consensus.build_Y(P, alpha, rho_s[s], d)
+                for P, s in zip(Ps, feas)
+            ])
+            ev = np.linalg.eigvalsh(Ys)  # one stacked decomposition
+            lam2 = ev[:, -2] if M >= 2 else ev[:, -1]
+            for P, s, l2 in zip(Ps, feas, lam2):
+                Tc = theory.convergence_time(tb_s[s], float(l2), eps)
+                grid.append((rho_s[s], tb_s[s], float(l2), Tc))
+                if best is None or Tc < best.T_convergence:
+                    best = PolicyResult(
+                        P, float(rho_s[s]), float(tb_s[s]), float(l2), Tc
+                    )
+    if best is None:
+        P = uniform_policy(d)
+        rho = 0.25 / alpha / max(1.0, d.sum(axis=1).max())
+        Y = consensus.build_Y(P, alpha, rho, d)
+        lam2 = theory.lambda2(Y)
+        tbar = float(consensus.mean_iteration_times(P, Tm, d).mean())
+        best = PolicyResult(
+            P, rho, tbar, lam2, theory.convergence_time(tbar, lam2, eps)
+        )
+    best.n_lp_solved = len(cand)
+    best.n_lp_feasible = n_feasible
+    best.grid = grid
+    best.n_pivots = n_pivots
+    best.n_solves = len(cand)
     return best
 
 

@@ -24,8 +24,6 @@ every decision that a scenario adds to a loop lives here, written once:
 
 from __future__ import annotations
 
-import heapq
-
 import numpy as np
 
 from repro.core.monitor import IterationTimeEMA
@@ -140,7 +138,7 @@ def apply_action(
     active: set,
     reseed,
     rng=None,
-    heap: list | None = None,
+    heap=None,
     emas: list | None = None,
     ema_beta: float = 0.5,
 ) -> None:
@@ -152,13 +150,17 @@ def apply_action(
     round loops have none of the three (churn there is link-state plus the
     rejoin reseed; the barrier still spans all M workers — non-adaptive
     round strategies pay the timeout, which is the point).
+
+    ``heap`` is a ``train.events.EventHeap``: a leave marks the worker's
+    entry dead in O(1) (lazy invalidation — the stale entry is skipped when
+    it surfaces) instead of the old O(M) prune-and-reheapify, which made
+    the ``federated_cohorts`` t=0 leave storm O(M^2) at boot.
     """
     w = act.worker
     if isinstance(act, WorkerLeave):
         active.discard(w)
         if heap is not None:
-            heap[:] = [e for e in heap if e[1] != w]
-            heapq.heapify(heap)
+            heap.invalidate(w)
     elif isinstance(act, WorkerRejoin):
         active.add(w)
         src = act.seed_from
@@ -174,6 +176,6 @@ def apply_action(
         if emas is not None:
             emas[w] = IterationTimeEMA(len(emas), beta=ema_beta)
         if heap is not None:
-            heapq.heappush(heap, (act.time + rng.exponential(0.005), w))
+            heap.push(act.time + rng.exponential(0.005), w)
     else:  # pragma: no cover - compile() only emits churn actions
         raise TypeError(f"unexpected scenario action {act!r}")

@@ -1,1 +1,12 @@
-"""Serving runtime: KV-cache engine with batched prefill/decode."""
+"""Serving runtimes.
+
+* ``repro.serve.engine`` — KV-cache LM engine with batched prefill/decode
+  (imports jax; import the submodule directly).
+* ``repro.serve.policy`` — ``PolicyServer``, the caching/micro-batching
+  front-end over Algorithm 3 policy generation (numpy-only; re-exported
+  here).
+"""
+
+from repro.serve.policy import PolicyServer, ServeStats
+
+__all__ = ["PolicyServer", "ServeStats"]

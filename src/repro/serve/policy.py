@@ -1,0 +1,298 @@
+"""Policy-serving front-end: cache + micro-batch over Algorithm 3.
+
+``PolicyServer`` turns ``generate_policy_matrix`` from a per-caller
+computation into a served endpoint: many tenants (simulated clusters,
+what-if probes, Monitor replicas) request policies concurrently; the
+server answers most of them from cache and spends solver time only on
+genuinely new link-states.
+
+Three mechanisms (DESIGN.md §17):
+
+* **Quantized-key caching.**  A request's key is (M, connectivity key,
+  quantized T, alpha, K, R, eps).  Link-state T is snapped to a relative
+  grid before keying *and solving* — two tenants whose EMAs differ by
+  less than the quantum share one cache line and one solve, and the
+  cache stays coherent (a hit returns exactly what a solve of the same
+  key would).  Quantization error is bounded by ``quant`` (default 5%),
+  well inside the EMA noise the Monitor already tolerates.
+* **Warm-basis reuse + PR-5 invalidation.**  Per connectivity key the
+  server threads the last optimal basis into the next solve (the
+  Monitor's own steady-state trick, core/monitor.py).  The Monitor's
+  invalidation rule is mirrored verbatim: when a tenant's edge set
+  changes, that tenant's old connectivity key drops its cache lines and
+  its warm basis — a shrunken live set must never warm-start or serve a
+  stale-layout result.
+* **Micro-batching / coalescing.**  ``request_many`` deduplicates
+  compatible instances (same key) into one solve; concurrent
+  ``request`` calls for the same key coalesce on an in-flight event so
+  the solver runs once while every waiter blocks, not once per thread.
+  ``sweep="batched"`` routes each miss through the lockstep stacked
+  sweep (``generate_policy_matrix_batched``) — useful at small/medium M
+  where grid parallelism beats warm restarts.
+
+Latency accounting: every request records wall time; ``stats()`` reports
+p50/p99 and the hit rate — the serve benchmark gates the hit rate (a
+ratio, hardware-portable) and reports the latencies ungated.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from collections import OrderedDict
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.policy import (
+    PolicyResult,
+    connectivity_key,
+    generate_policy_matrix,
+    generate_policy_matrix_batched,
+)
+
+
+@dataclass
+class ServeStats:
+    """Counters + latency reservoir for one PolicyServer."""
+
+    n_requests: int = 0
+    n_hits: int = 0
+    n_coalesced: int = 0
+    n_solves: int = 0
+    n_invalidations: int = 0
+    n_evictions: int = 0
+    latencies_ms: list = field(default_factory=list)
+
+    @property
+    def hit_rate(self) -> float:
+        """Fraction of requests served without running a solver."""
+        served = self.n_hits + self.n_coalesced
+        return served / self.n_requests if self.n_requests else 0.0
+
+    def latency_ms(self, q: float) -> float:
+        if not self.latencies_ms:
+            return 0.0
+        return float(np.percentile(np.asarray(self.latencies_ms), q))
+
+    def snapshot(self) -> dict:
+        return {
+            "n_requests": self.n_requests,
+            "n_hits": self.n_hits,
+            "n_coalesced": self.n_coalesced,
+            "n_solves": self.n_solves,
+            "n_invalidations": self.n_invalidations,
+            "n_evictions": self.n_evictions,
+            "hit_rate": self.hit_rate,
+            "p50_ms": self.latency_ms(50),
+            "p99_ms": self.latency_ms(99),
+        }
+
+
+class PolicyServer:
+    """Concurrent, caching policy endpoint over Algorithm 3.
+
+    Thread-safe: cache/bookkeeping mutations hold one lock; solves run
+    outside it (concurrent distinct keys solve in parallel, concurrent
+    identical keys coalesce).  ``alpha``/``K``/``R``/``eps`` fix the
+    Algorithm-3 configuration for every request this server answers.
+    """
+
+    def __init__(
+        self,
+        alpha: float,
+        K: int = 5,
+        R: int = 6,
+        eps: float = 1e-2,
+        quant: float = 0.05,
+        cache_size: int = 256,
+        sweep: str = "serial",
+    ):
+        if sweep not in ("serial", "batched"):
+            raise ValueError(f"unknown sweep mode {sweep!r}")
+        self.alpha = float(alpha)
+        self.K = int(K)
+        self.R = int(R)
+        self.eps = float(eps)
+        self.quant = float(quant)
+        self.cache_size = int(cache_size)
+        self.sweep = sweep
+        self.stats = ServeStats()
+        self._lock = threading.Lock()
+        self._cache: OrderedDict = OrderedDict()  # key -> PolicyResult
+        self._warm: dict = {}          # conn_key -> BasisState
+        self._tenant_conn: dict = {}   # tenant -> conn_key (PR-5 rule)
+        self._inflight: dict = {}      # key -> threading.Event
+
+    # -- request path -------------------------------------------------------
+    def _normalize(self, T, d):
+        """Mirror generate_policy_matrix's dead-link masking so the cache
+        key describes exactly the instance that would be solved.
+
+        T entries off the live edge set (diagonal, dead links, d=0 pairs)
+        never enter the Eq.-14 instance, so they are zeroed — otherwise
+        irrelevant jitter (or an inf marker) would fragment the cache.
+        """
+        T = np.asarray(T, dtype=np.float64).copy()
+        M = T.shape[0]
+        if d is None:
+            d = np.ones((M, M)) - np.eye(M)
+        d = np.asarray(d, dtype=np.float64).copy()
+        dead = ~np.isfinite(T)
+        d[dead] = 0.0
+        d[dead.T] = 0.0
+        np.fill_diagonal(d, 0.0)
+        T[d == 0.0] = 0.0
+        return T, d
+
+    def _quantize(self, T):
+        """Snap finite link times to a relative grid of step ``quant``.
+
+        The quantum is ``quant`` times the matrix's magnitude bucketed to
+        a power of two — bucketing keeps the quantum itself stable under
+        small EMA jitter (a raw ``max(T)``-proportional quantum would
+        shift with every perturbation and defeat the cache).  quant=0
+        disables snapping (every distinct T is its own key).
+        """
+        if self.quant <= 0.0:
+            return T
+        finite = np.isfinite(T)
+        scale = float(T[finite].max()) if finite.any() else 1.0
+        if scale <= 0.0:
+            return T
+        q = self.quant * float(2.0 ** np.ceil(np.log2(scale)))
+        return np.where(finite, np.round(T / q) * q, T)
+
+    def _key(self, Tq, d, ck) -> tuple:
+        return (
+            Tq.shape[0], ck, Tq.tobytes(),
+            self.alpha, self.K, self.R, self.eps,
+        )
+
+    def _note_tenant(self, tenant, ck):
+        """PR-5 Monitor rule: a tenant whose edge set changed invalidates
+        its previous connectivity key's cache lines and warm basis."""
+        if tenant is None:
+            return
+        prev = self._tenant_conn.get(tenant)
+        if prev is not None and prev != ck:
+            self._invalidate_locked(prev)
+        self._tenant_conn[tenant] = ck
+
+    def _invalidate_locked(self, ck) -> None:
+        self._warm.pop(ck, None)
+        stale = [k for k in self._cache if k[1] == ck]
+        for k in stale:
+            del self._cache[k]
+        self.stats.n_invalidations += 1
+
+    def invalidate(self, d) -> None:
+        """Explicitly drop cache + warm basis for connectivity ``d``."""
+        with self._lock:
+            self._invalidate_locked(connectivity_key(np.asarray(d)))
+
+    def _solve(self, Tq, d, ck) -> PolicyResult:
+        if self.sweep == "batched":
+            return generate_policy_matrix_batched(
+                self.alpha, self.K, self.R, Tq, d=d, eps=self.eps
+            )
+        with self._lock:
+            warm = self._warm.get(ck)
+        res = generate_policy_matrix(
+            self.alpha, self.K, self.R, Tq, d=d, eps=self.eps, warm=warm
+        )
+        return res
+
+    def request(self, T, d=None, tenant=None) -> PolicyResult:
+        """Serve one policy request (blocking; thread-safe).
+
+        ``tenant`` (optional, hashable) enables the edge-set-change
+        invalidation rule; anonymous requests only read/populate the
+        cache.
+        """
+        t0 = time.perf_counter()
+        T, d = self._normalize(T, d)
+        Tq = self._quantize(T)
+        ck = connectivity_key(d)
+        key = self._key(Tq, d, ck)
+        wait_ev = None
+        with self._lock:
+            self.stats.n_requests += 1
+            self._note_tenant(tenant, ck)
+            hit = self._cache.get(key)
+            if hit is not None:
+                self._cache.move_to_end(key)
+                self.stats.n_hits += 1
+                self.stats.latencies_ms.append(
+                    (time.perf_counter() - t0) * 1e3
+                )
+                return hit
+            wait_ev = self._inflight.get(key)
+            if wait_ev is None:
+                self._inflight[key] = threading.Event()
+        if wait_ev is not None:
+            # Another thread is already solving this exact key: coalesce.
+            wait_ev.wait()
+            with self._lock:
+                self.stats.n_coalesced += 1
+                res = self._cache.get(key)
+                self.stats.latencies_ms.append(
+                    (time.perf_counter() - t0) * 1e3
+                )
+            if res is not None:
+                return res
+            # Solver owner failed to cache (infeasible edge case): fall
+            # through and solve independently.
+            return self._solve(Tq, d, ck)
+        try:
+            res = self._solve(Tq, d, ck)
+            with self._lock:
+                self.stats.n_solves += 1
+                if res.basis is not None:
+                    self._warm[ck] = res.basis
+                self._cache[key] = res
+                self._cache.move_to_end(key)
+                while len(self._cache) > self.cache_size:
+                    self._cache.popitem(last=False)
+                    self.stats.n_evictions += 1
+        finally:
+            with self._lock:
+                ev = self._inflight.pop(key, None)
+            if ev is not None:
+                ev.set()
+        self.stats.latencies_ms.append((time.perf_counter() - t0) * 1e3)
+        return res
+
+    def request_many(self, requests) -> list[PolicyResult]:
+        """Micro-batch a list of (T, d) or (T, d, tenant) requests.
+
+        Compatible instances — identical (M, connectivity, quantized T,
+        config) — collapse into one solve; the duplicates are counted as
+        coalesced.  Returns results in request order.
+        """
+        prepared = []
+        for req in requests:
+            T, d = req[0], req[1]
+            tenant = req[2] if len(req) > 2 else None
+            T, d = self._normalize(T, d)
+            Tq = self._quantize(T)
+            ck = connectivity_key(d)
+            prepared.append((self._key(Tq, d, ck), Tq, d, ck, tenant))
+        first_of: dict = {}
+        out: list = [None] * len(prepared)
+        for i, (key, Tq, d, ck, tenant) in enumerate(prepared):
+            if key in first_of:
+                with self._lock:
+                    self.stats.n_requests += 1
+                    self.stats.n_coalesced += 1
+                    self._note_tenant(tenant, ck)
+                out[i] = first_of[key]
+                continue
+            res = self.request(Tq, d, tenant=tenant)
+            first_of[key] = res
+            out[i] = res
+        return out
+
+    def cache_len(self) -> int:
+        with self._lock:
+            return len(self._cache)

@@ -8,11 +8,13 @@ Two backends live behind ``solve_lp``:
 
 * ``"revised"`` (default) — the bounded-variable revised simplex in
   ``repro.solver.revised``: no tableau, no ub-slack rows (bounds are
-  implicit in the nonbasic-at-bound statuses), an m x m product-form basis
-  inverse with periodic refactorization, and a warm-start protocol
+  implicit in the nonbasic-at-bound statuses), an m x m basis
+  factorization (dense product-form on small instances, sparse-LU + eta
+  file above ``_LU_MIN_ROWS``) with periodic refactorization, selectable
+  pricing (Dantzig / partial / Devex), and a warm-start protocol
   (``warm=``/``LPResult.basis``) that turns the Algorithm-3 (rho, t_bar)
-  grid sweep into dual-simplex restarts.  This is what makes M=128 policy
-  generation cheap (see DESIGN.md §13).
+  grid sweep into dual-simplex restarts.  This is what makes M=128+
+  policy generation cheap (see DESIGN.md §13/§17).
 * ``"dense"`` — the original two-phase tableau simplex, kept verbatim in
   ``repro.solver.dense`` as the differential-testing oracle (the role the
   reference event loop plays for the batched engine) and as an escape
@@ -20,27 +22,34 @@ Two backends live behind ``solve_lp``:
 
 ``lp_method("dense")`` switches the process-wide default inside a ``with``
 block — that is how the differential tests and the policy benchmark drive
-the whole Algorithm-3 stack through the oracle.
+the whole Algorithm-3 stack through the oracle.  ``lp_pricing("dantzig")``
+does the same for the revised backend's pricing rule — that is how the
+serve benchmark measures the Dantzig pivot baseline at M >= 128 without
+threading a parameter through Algorithm 3.
 """
 
 from __future__ import annotations
 
 from contextlib import contextmanager
 
+import numpy as np
+
 from repro.solver.dense import solve_lp_dense
 from repro.solver.result import BasisState, LPResult
-from repro.solver.revised import solve_lp_revised
+from repro.solver.revised import PRICING_RULES, solve_lp_revised
 
 __all__ = [
     "BasisState",
     "LPResult",
     "lp_method",
+    "lp_pricing",
     "solve_lp",
     "solve_lp_dense",
     "solve_lp_revised",
 ]
 
 _DEFAULT_METHOD = "revised"
+_DEFAULT_PRICING = "auto"
 
 
 @contextmanager
@@ -56,8 +65,32 @@ def lp_method(name: str):
         _DEFAULT_METHOD = old
 
 
+@contextmanager
+def lp_pricing(name: str):
+    """Temporarily pin the revised backend's pricing rule.
+
+    "auto" (default) prices small instances with Dantzig (bit-identical to
+    the historical solver) and large ones with a partial rotating window;
+    "dantzig"/"partial"/"devex" force one rule at every size — benchmarks
+    use this to compare pivot counts across rules on the same instance
+    stream.
+    """
+    global _DEFAULT_PRICING
+    if name not in PRICING_RULES:
+        raise ValueError(f"unknown LP pricing rule {name!r}")
+    old, _DEFAULT_PRICING = _DEFAULT_PRICING, name
+    try:
+        yield
+    finally:
+        _DEFAULT_PRICING = old
+
+
 def default_method() -> str:
     return _DEFAULT_METHOD
+
+
+def default_pricing() -> str:
+    return _DEFAULT_PRICING
 
 
 def solve_lp(
@@ -68,16 +101,23 @@ def solve_lp(
     ub=None,
     warm: BasisState | None = None,
     method: str | None = None,
+    pricing: str | None = None,
 ) -> LPResult:
     """Minimize c@x subject to A_eq@x=b_eq, lb<=x<=ub (elementwise).
 
     ``warm`` threads a ``BasisState`` from a prior solve into the revised
     backend (ignored by the dense oracle); the result's ``.basis`` is the
-    token to pass to the next same-shaped solve.
+    token to pass to the next same-shaped solve.  ``A_eq`` may be a
+    ``scipy.sparse`` matrix (densified for the dense oracle).
     """
     method = method or _DEFAULT_METHOD
     if method == "dense":
+        if hasattr(A_eq, "toarray") and not isinstance(A_eq, np.ndarray):
+            A_eq = A_eq.toarray()
         return solve_lp_dense(c, A_eq, b_eq, lb=lb, ub=ub)
     if method == "revised":
-        return solve_lp_revised(c, A_eq, b_eq, lb=lb, ub=ub, warm=warm)
+        return solve_lp_revised(
+            c, A_eq, b_eq, lb=lb, ub=ub, warm=warm,
+            pricing=pricing or _DEFAULT_PRICING,
+        )
     raise ValueError(f"unknown LP method {method!r}")

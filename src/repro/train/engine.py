@@ -80,8 +80,6 @@ trainer jits — or, for identity-delta strategies with
 
 from __future__ import annotations
 
-import heapq
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -99,6 +97,7 @@ from repro.scenarios.driver import (
 from repro.scenarios.timeline import ScenarioCursor
 from repro.train import simulator as _sim
 from repro.train.elastic import reseed_row
+from repro.train.events import EventHeap
 
 tree_map = jax.tree_util.tree_map
 
@@ -554,9 +553,9 @@ def run_batched(
 
     bsz = [min(cfg.batch_size, len(part_idx[i])) for i in range(M)]
 
-    heap = []
+    heap = EventHeap()
     for i in range(M):
-        heapq.heappush(heap, (rng.exponential(0.005), i))
+        heap.push(rng.exponential(0.005), i)
 
     ev = 0
     t = 0.0
@@ -569,7 +568,7 @@ def run_batched(
         the Monitor, and executes as a plain local step (communicated
         False => the fused step self-pulls with w=0)."""
         nonlocal ev, t, next_monitor
-        t_ev, i = heapq.heappop(heap)
+        t_ev, i = heap.pop()
         ev += 1
         m = algo.select_peer(state, i, rng)
         bidx = rng.choice(part_idx[i], size=bsz[i])
@@ -598,7 +597,7 @@ def run_batched(
             )
         if emas is not None and algo.reports_ema and m is not None:
             emas[i].update(m, timing.duration)
-        heapq.heappush(heap, (t_ev + timing.duration, i))
+        heap.push(t_ev + timing.duration, i)
         t = t_ev
         return (t_ev, i, m, float(w), communicated, bidx, ev)
 
@@ -887,13 +886,13 @@ def run_batched(
         # ---- scenario churn actions fire before the first event popping
         # at or after their time, between device dispatches ----
         if cursor is not None:
-            for act in cursor.pop_due(heap[0][0]):
+            for act in cursor.pop_due(heap.peek_time()):
                 apply_action(act, active=active, reseed=reseed, rng=rng,
                              heap=heap, emas=emas, ema_beta=cfg.ema_beta)
         # ---- draw one window of events, stopping at the next boundary ----
         window = []
         while len(window) < window_cap and ev < total:
-            if cursor is not None and heap[0][0] >= cursor.next_time:
+            if cursor is not None and heap.peek_time() >= cursor.next_time:
                 break  # scenario boundary: flush before crossing it
             e = draw_event()
             window.append(e)

@@ -40,7 +40,6 @@ losses/accuracies are measured, not modeled.
 
 from __future__ import annotations
 
-import heapq
 from dataclasses import dataclass, field
 
 import jax
@@ -60,6 +59,7 @@ from repro.scenarios.driver import (
 )
 from repro.scenarios.timeline import ScenarioCursor
 from repro.train.elastic import reseed_replica
+from repro.train.events import EventHeap
 
 
 # --------------------------------------------------------------------------
@@ -366,19 +366,19 @@ def simulate(
     next_monitor = monitor.schedule_period if monitor else float("inf")
     prepare_monitor(monitor, link_model)
 
-    heap = []
+    heap = EventHeap()
     for i in range(M):
-        heapq.heappush(heap, (rng.exponential(0.005), i))
+        heap.push(rng.exponential(0.005), i)
     ev = 0
     t = 0.0
     while ev < cfg.total_events:
         # Scenario churn actions fire before the first event popping at or
         # after their time (heap membership, EMA reset, replica reseed).
         if cursor is not None:
-            for act in cursor.pop_due(heap[0][0]):
+            for act in cursor.pop_due(heap.peek_time()):
                 apply_action(act, active=active, reseed=reseed, rng=rng,
                              heap=heap, emas=emas, ema_beta=cfg.ema_beta)
-        t, i = heapq.heappop(heap)
+        t, i = heap.pop()
         ev += 1
 
         m = algo.select_peer(state, i, rng)
@@ -412,7 +412,7 @@ def simulate(
         if emas is not None and algo.reports_ema and m is not None:
             emas[i].update(m, timing.duration)
 
-        heapq.heappush(heap, (t + timing.duration, i))
+        heap.push(t + timing.duration, i)
 
         # Network Monitor wakes every T_s (period owned by the Monitor) or
         # at an out-of-schedule failure-triggered refresh.

@@ -433,3 +433,235 @@ def test_facade_method_switch_and_default():
             np.array([1.0]), np.array([[1.0]]), np.array([1.0]),
             method="interior-point",
         )
+
+
+# --------------------------------------------------------------------------
+# Pricing rules, engines, sparse-LU drift (PR 8)
+# --------------------------------------------------------------------------
+
+
+def _eq14_lp(M, seed, kind, alpha=0.1):
+    """Raw (c, A, b, lb, ub) arrays for an Eq.-14 draw, or None.
+
+    For feasible kinds t_bar is picked inside the *exact* feasible range
+    (the Appendix-A interval is necessary, not sufficient), halving rho
+    until that range opens, so the optimum-matching assertions actually
+    exercise optima."""
+    if kind == "infeasible":
+        inst_pt = eq14_instance(M, seed, kind)
+        if inst_pt is None:
+            return None
+        T, d, rho, t_bar = inst_pt
+    else:
+        T = (
+            np.full((M, M), 0.02) - 0.02 * np.eye(M)
+            if kind == "degenerate"
+            else hetero_times(M, seed)
+        )
+        d = (
+            sparse_mask(M, seed)
+            if kind == "sparse"
+            else np.ones((M, M)) - np.eye(M)
+        )
+        rho = float(np.random.default_rng(seed + 99).uniform(0.05, 0.8))
+        for _ in range(8):
+            lo, hi = policy._eq14_time_bounds(T, d, alpha, rho)
+            if np.isfinite(hi) and hi > lo:
+                break
+            rho /= 2.0
+        else:
+            return None
+        t_bar = (lo + 0.6 * (hi - lo)) / M
+    sk = policy._build_eq14(T, d)
+    lb = np.zeros(sk.n)
+    lb[sk.pos] = alpha * rho * sk.dsym + policy._FLOOR_MARGIN
+    b = np.zeros(2 * sk.M)
+    b[: sk.M] = sk.M * t_bar
+    b[sk.M :] = 1.0
+    A = sk.A.toarray() if hasattr(sk.A, "toarray") else sk.A
+    return sk.c, A, b, lb, sk.ub
+
+
+@pytest.mark.parametrize("pricing", ["dantzig", "partial", "devex"])
+@pytest.mark.parametrize("kind", ["dense", "sparse", "degenerate", "infeasible"])
+def test_pricing_rules_match_dense_oracle(pricing, kind):
+    """Every pricing rule reaches the dense oracle's optimum (or verdict)
+    on randomized Eq.-14 instances — the rotation in partial pricing and
+    the reference-framework scores in Devex change the pivot *path*, never
+    the optimum."""
+    n_opt = 0
+    for M, seed in ((4, 1), (8, 2), (16, 3), (16, 9)):
+        lp5 = _eq14_lp(M, seed, kind)
+        if lp5 is None:
+            continue
+        c, A, b, lb, ub = lp5
+        ref = solve_lp_dense(c, A, b, lb=lb, ub=ub)
+        for engine in ("dense", "lu"):
+            r = solve_lp_revised(
+                c, A, b, lb=lb, ub=ub, pricing=pricing, engine=engine
+            )
+            assert r.status == ref.status, (M, seed, engine)
+            if ref.ok:
+                assert r.fun == pytest.approx(ref.fun, rel=1e-6, abs=1e-7)
+                assert np.allclose(A @ r.x, b, atol=1e-6)
+                assert np.all(r.x >= lb - 1e-7) and np.all(r.x <= ub + 1e-7)
+        if ref.ok:
+            n_opt += 1
+    if kind != "infeasible":
+        assert n_opt >= 2  # the sweep exercised real optima
+
+
+@pytest.mark.parametrize("M", [32, 64])
+def test_pricing_rules_agree_at_scale(M):
+    """At M = 32/64 (past the dense oracle's reach) all pricing rules and
+    both engines agree with the revised-Dantzig reference, including when
+    A arrives as a scipy CSC matrix."""
+    sp = pytest.importorskip("scipy.sparse")
+    lp5 = _eq14_lp(M, seed=5, kind="sparse")
+    if lp5 is None:
+        pytest.skip("empty t_bar interval for this draw")
+    c, A, b, lb, ub = lp5
+    ref = solve_lp_revised(c, A, b, lb=lb, ub=ub, pricing="dantzig")
+    assert ref.ok
+    A_sp = sp.csc_matrix(A)
+    for pricing in ("partial", "devex", "auto"):
+        for A_in in (A, A_sp):
+            r = solve_lp_revised(c, A_in, b, lb=lb, ub=ub, pricing=pricing)
+            assert r.ok
+            assert r.fun == pytest.approx(ref.fun, rel=1e-6, abs=1e-7)
+            assert np.allclose(A @ r.x, b, atol=1e-6)
+
+
+def test_lu_engine_matches_dense_engine_on_random_lps():
+    pytest.importorskip("scipy.sparse.linalg")
+    rng = np.random.default_rng(17)
+    n_ok = 0
+    for trial in range(20):
+        n, m = int(rng.integers(4, 12)), int(rng.integers(2, 6))
+        A = rng.normal(size=(m, n))
+        c = rng.normal(size=n)
+        if trial % 2:
+            b = A @ rng.uniform(0.1, 0.9, size=n)
+            lb, ub = np.zeros(n), np.ones(n)
+        else:
+            b = rng.normal(size=m)
+            lb, ub = np.zeros(n), np.full(n, np.inf)
+        r_d = solve_lp_revised(c, A, b, lb=lb, ub=ub, engine="dense")
+        r_l = solve_lp_revised(c, A, b, lb=lb, ub=ub, engine="lu")
+        assert r_d.status == r_l.status
+        if r_d.ok:
+            n_ok += 1
+            assert r_l.fun == pytest.approx(r_d.fun, rel=1e-6, abs=1e-7)
+    assert n_ok >= 5
+
+
+def test_sparse_lu_drift_bounded():
+    """The eta file accumulates pivots between refactorizations; the primal
+    solution it produces must still satisfy the constraints to tight
+    tolerance (drift is reset by periodic refactorization, never allowed
+    to reach the answer)."""
+    pytest.importorskip("scipy.sparse.linalg")
+    for M, seed in ((48, 3), (64, 8)):
+        lp5 = _eq14_lp(M, seed, "dense")
+        if lp5 is None:
+            continue
+        c, A, b, lb, ub = lp5
+        r = solve_lp_revised(c, A, b, lb=lb, ub=ub, engine="lu", pricing="devex")
+        assert r.ok
+        assert r.pivots > 64  # long enough for at least one refactor cycle
+        resid = np.abs(A @ r.x - b).max()
+        assert resid <= 1e-7 * max(1.0, np.abs(b).max())
+        assert np.all(r.x >= lb - 1e-8) and np.all(r.x <= ub + 1e-8)
+
+
+def test_lu_warm_restart_matches_cold():
+    """Warm restarts run through the LU engine too (the Monitor at M>=48
+    lives on this path): same optimum, strictly fewer pivots."""
+    pytest.importorskip("scipy.sparse.linalg")
+    lp5 = _eq14_lp(48, 3, "dense")
+    assert lp5 is not None
+    c, A, b, lb, ub = lp5
+    r1 = solve_lp_revised(c, A, b, lb=lb, ub=ub, engine="lu")
+    assert r1.ok and r1.basis is not None
+    b2 = b.copy()
+    b2[:48] *= 1.02  # drift the Eq.-10 budget, keep Eq.-13 rows
+    cold = solve_lp_revised(c, A, b2, lb=lb, ub=ub, engine="lu")
+    warm = solve_lp_revised(c, A, b2, lb=lb, ub=ub, engine="lu", warm=r1.basis)
+    assert cold.status == warm.status
+    if cold.ok:
+        assert warm.warm_used
+        assert warm.fun == pytest.approx(cold.fun, rel=1e-7, abs=1e-9)
+        assert warm.pivots < cold.pivots
+
+
+def test_lp_pricing_context_manager():
+    from repro.solver import lp
+
+    assert lp.default_pricing() == "auto"
+    with lp.lp_pricing("dantzig"):
+        assert lp.default_pricing() == "dantzig"
+        r = solve_lp(
+            np.array([1.0, 1.0]), np.array([[1.0, 1.0]]), np.array([1.0])
+        )
+        assert r.ok
+    assert lp.default_pricing() == "auto"
+    with pytest.raises(ValueError):
+        lp.lp_pricing("steepest-descent").__enter__()
+
+
+# --------------------------------------------------------------------------
+# Lockstep batched solver (PR 8)
+# --------------------------------------------------------------------------
+
+
+def test_solve_lp_batch_matches_serial_random():
+    from repro.solver.batch import solve_lp_batch
+
+    rng = np.random.default_rng(23)
+    n, m, S = 10, 4, 12
+    A = rng.normal(size=(m, n))
+    c = rng.normal(size=n)
+    b_stack = np.stack(
+        [A @ rng.uniform(0.1, 0.9, size=n) for _ in range(S - 2)]
+        + [rng.normal(size=m), rng.normal(size=m)]  # likely infeasible tail
+    )
+    lb = np.zeros((S, n))
+    lb[3] = 0.05  # per-instance floors
+    ub = np.ones((S, n))
+    batch = solve_lp_batch(c, A, b_stack, lb_stack=lb, ub_stack=ub)
+    assert len(batch) == S
+    for s in range(S):
+        ref = solve_lp_revised(c, A, b_stack[s], lb=lb[s], ub=ub[s])
+        if batch[s].status == "iteration_limit":
+            continue  # numerical breakdown escape hatch: never wrong, just out
+        assert batch[s].status == ref.status, s
+        if ref.ok:
+            assert batch[s].fun == pytest.approx(ref.fun, rel=1e-6, abs=1e-7)
+            assert np.allclose(A @ batch[s].x, b_stack[s], atol=1e-6)
+
+
+def test_solve_lp_batch_eq14_t_bar_stack():
+    """The batched sweep's actual shape: one Eq.-14 skeleton, a stack of
+    t_bar right-hand sides."""
+    from repro.solver.batch import solve_lp_batch
+
+    T = hetero_times(10, 4)
+    d = np.ones((10, 10)) - np.eye(10)
+    alpha, rho = 0.1, 0.1
+    sk = policy._build_eq14(T, d)
+    L, U = _t_bar_interval(T, d, alpha, rho)
+    assert np.isfinite(U) and U > L
+    t_bars = [L + (U - L) * f for f in (0.2, 0.4, 0.6, 0.8)]
+    lb = np.zeros(sk.n)
+    lb[sk.pos] = alpha * rho * sk.dsym + policy._FLOOR_MARGIN
+    b_stack = np.zeros((len(t_bars), 2 * sk.M))
+    for s, tb in enumerate(t_bars):
+        b_stack[s, : sk.M] = sk.M * tb
+        b_stack[s, sk.M :] = 1.0
+    A = sk.A.toarray() if hasattr(sk.A, "toarray") else sk.A
+    batch = solve_lp_batch(sk.c, A, b_stack, lb_stack=lb, ub_stack=sk.ub)
+    for s, tb in enumerate(t_bars):
+        ref = solve_lp_revised(sk.c, A, b_stack[s], lb=lb, ub=sk.ub)
+        assert batch[s].status == ref.status
+        if ref.ok:
+            assert batch[s].fun == pytest.approx(ref.fun, rel=1e-6, abs=1e-7)

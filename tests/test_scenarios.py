@@ -616,3 +616,91 @@ def test_home_pinned_monitor_far_side_keeps_stale_policy(sim_data):
     assert max(far_fail_times) > reroute_t
     # Both halves keep making progress despite the split control plane.
     assert np.isfinite(res.losses[-1]) and res.losses[-1] < res.losses[0]
+
+
+# --------------------------------------------------------------------------
+# EventHeap: lazy invalidation == eager pruning (PR 8)
+# --------------------------------------------------------------------------
+
+
+class _EagerHeap:
+    """Reference: the historical eager-prune behaviour (O(M) per leave)."""
+
+    def __init__(self):
+        self._entries = []  # sorted-on-demand list of (t, i)
+
+    def push(self, t, i):
+        self._entries = [(t_, i_) for t_, i_ in self._entries if i_ != i]
+        self._entries.append((t, i))
+
+    def invalidate(self, i):
+        self._entries = [(t_, i_) for t_, i_ in self._entries if i_ != i]
+
+    def peek_time(self):
+        return min(self._entries)[0] if self._entries else float("inf")
+
+    def pop(self):
+        e = min(self._entries)
+        self._entries.remove(e)
+        return e
+
+    def __len__(self):
+        return len(self._entries)
+
+    def __bool__(self):
+        return bool(self._entries)
+
+
+def test_event_heap_matches_eager_prune_on_random_schedules():
+    """Randomized push/invalidate/pop/peek schedules — including the
+    leave-then-rejoin-with-equal-time trap (a stale buried entry whose
+    (t, i) equals the live one) — produce identical event sequences."""
+    from repro.train.events import EventHeap
+
+    for seed in range(12):
+        rng = np.random.default_rng(seed)
+        lazy, eager = EventHeap(), _EagerHeap()
+        popped_lazy, popped_eager = [], []
+        scheduled = set()
+        for step in range(400):
+            op = rng.uniform()
+            i = int(rng.integers(0, 12))
+            if op < 0.45:
+                # Quantized times force exact duplicates across workers and
+                # across a worker's own leave/rejoin cycles.
+                t = round(float(rng.uniform(0, 4)), 1)
+                lazy.push(t, i)
+                eager.push(t, i)
+                scheduled.add(i)
+            elif op < 0.65:
+                lazy.invalidate(i)
+                eager.invalidate(i)
+                scheduled.discard(i)
+            elif op < 0.85 and eager:
+                popped_lazy.append(lazy.pop())
+                popped_eager.append(popped_eager_e := eager.pop())
+                scheduled.discard(popped_eager_e[1])
+            else:
+                assert lazy.peek_time() == eager.peek_time()
+            assert len(lazy) == len(eager) == len(scheduled)
+            assert bool(lazy) == bool(eager)
+        while eager:
+            popped_lazy.append(lazy.pop())
+            popped_eager.append(eager.pop())
+        assert not lazy
+        assert popped_lazy == popped_eager
+
+
+def test_event_heap_rejoin_with_equal_time_is_not_shadowed():
+    """A worker's stale pre-leave entry must not shadow its rejoin entry
+    even when both carry the same (t, i) value — liveness is entry
+    identity, not tuple equality."""
+    from repro.train.events import EventHeap
+
+    h = EventHeap()
+    h.push(1.0, 3)
+    h.invalidate(3)   # leave: entry (1.0, 3) goes stale but stays buried
+    h.push(1.0, 3)    # rejoin at the *same* time
+    assert len(h) == 1
+    assert h.pop() == (1.0, 3)
+    assert not h and h.peek_time() == float("inf")

@@ -1,0 +1,257 @@
+"""PolicyServer: cache semantics, quantization, invalidation, batching.
+
+The server's contract is *coherence*: every response is exactly what a
+direct ``generate_policy_matrix`` call on the quantized instance would
+return — caching, coalescing, and warm bases are invisible except in the
+counters.  These tests pin that contract plus the PR-5 invalidation rule
+(edge-set change drops cache lines and the warm basis).
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.policy import generate_policy_matrix
+from repro.serve import PolicyServer
+
+
+def make_T(M, seed, lo=0.5, hi=3.0):
+    rng = np.random.default_rng(seed)
+    T = rng.uniform(lo, hi, (M, M))
+    T = (T + T.T) / 2
+    np.fill_diagonal(T, 0.0)
+    return T
+
+
+# --------------------------------------------------------------------------
+# Cache hit / miss / coherence
+# --------------------------------------------------------------------------
+
+
+def test_exact_repeat_is_a_hit():
+    srv = PolicyServer(alpha=0.05)
+    T = make_T(10, 0)
+    r1 = srv.request(T)
+    r2 = srv.request(T.copy())
+    assert r2 is r1
+    assert srv.stats.n_solves == 1 and srv.stats.n_hits == 1
+    assert srv.stats.hit_rate == pytest.approx(0.5)
+
+
+def test_hit_result_equals_direct_solve():
+    """Coherence: the served result is bit-equal to solving the quantized
+    instance directly."""
+    srv = PolicyServer(alpha=0.05, quant=0.05)
+    T = make_T(12, 1)
+    served = srv.request(T)
+    Tn, dn = srv._normalize(T, None)
+    direct = generate_policy_matrix(0.05, 5, 6, srv._quantize(Tn), d=dn)
+    assert np.array_equal(served.P, direct.P)
+    assert served.rho == direct.rho and served.t_bar == direct.t_bar
+    assert served.T_convergence == direct.T_convergence
+
+
+def test_near_identical_link_state_shares_a_cache_line():
+    """EMA jitter well inside the quantum must not fragment the cache."""
+    srv = PolicyServer(alpha=0.05, quant=0.05)
+    rng = np.random.default_rng(2)
+    T = make_T(10, 2)
+    r1 = srv.request(T)
+    for _ in range(5):
+        jitter = rng.uniform(-1e-5, 1e-5, T.shape)
+        assert srv.request(T + jitter) is r1
+    assert srv.stats.n_solves == 1 and srv.stats.n_hits == 5
+
+
+def test_distinct_link_states_miss():
+    srv = PolicyServer(alpha=0.05, quant=0.05)
+    r1 = srv.request(make_T(10, 3))
+    r2 = srv.request(make_T(10, 4))
+    assert r2 is not r1
+    assert srv.stats.n_solves == 2 and srv.stats.n_hits == 0
+
+
+def test_irrelevant_entries_do_not_fragment_the_cache():
+    """T's diagonal and dead-link entries never enter Eq. 14 — changing
+    them must still hit."""
+    srv = PolicyServer(alpha=0.05)
+    M = 8
+    T = make_T(M, 5)
+    d = np.ones((M, M)) - np.eye(M)
+    d[0, 1] = d[1, 0] = 0.0
+    r1 = srv.request(T, d=d)
+    T2 = T.copy()
+    np.fill_diagonal(T2, 99.0)   # diagonal is irrelevant
+    T2[0, 1] = T2[1, 0] = 77.0   # d==0 edge is irrelevant
+    assert srv.request(T2, d=d) is r1
+    # inf on a live link means "dead" and produces a *different* edge set.
+    T3 = T.copy()
+    T3[2, 3] = T3[3, 2] = np.inf
+    r3 = srv.request(T3, d=d)
+    assert r3 is not r1
+
+
+def test_quantization_boundary_splits_the_cell():
+    """Values that quantize to different grid points are different keys —
+    straddling a cell boundary misses (correctness beats hit rate)."""
+    srv = PolicyServer(alpha=0.05, quant=0.05)
+    M = 8
+    T = np.full((M, M), 1.9)  # dominant max pins the scale bucket...
+    np.fill_diagonal(T, 0.0)
+    # ...at 2**ceil(log2(1.9)) = 2 -> quantum 0.1, cell boundary at 1.05.
+    Ta = T.copy()
+    Tb = T.copy()
+    Ta[0, 1] = Ta[1, 0] = 1.02  # rounds to 1.0
+    Tb[0, 1] = Tb[1, 0] = 1.08  # rounds to 1.1
+    ra = srv.request(Ta)
+    rb = srv.request(Tb)
+    assert rb is not ra and srv.stats.n_solves == 2
+    # ...while two values inside the same cell share a line.
+    Tc = T.copy()
+    Tc[0, 1] = Tc[1, 0] = 1.04  # also rounds to 1.0
+    assert srv.request(Tc) is ra
+
+
+def test_quant_zero_disables_snapping():
+    srv = PolicyServer(alpha=0.05, quant=0.0)
+    T = make_T(8, 6)
+    r1 = srv.request(T)
+    assert srv.request(T + 1e-9) is not r1
+    assert srv.stats.n_solves == 2
+
+
+def test_lru_eviction():
+    srv = PolicyServer(alpha=0.05, cache_size=2)
+    Ts = [make_T(8, 10 + k) for k in range(3)]
+    r0 = srv.request(Ts[0])
+    srv.request(Ts[1])
+    srv.request(Ts[2])  # evicts Ts[0]'s line
+    assert srv.stats.n_evictions == 1 and srv.cache_len() == 2
+    assert srv.request(Ts[0]) is not r0  # re-solved
+    assert srv.stats.n_solves == 4
+
+
+# --------------------------------------------------------------------------
+# PR-5 invalidation rule + warm-basis reuse
+# --------------------------------------------------------------------------
+
+
+def test_edge_set_change_drops_cache_and_warm_basis():
+    srv = PolicyServer(alpha=0.05)
+    M = 10
+    T = make_T(M, 7)
+    srv.request(T, tenant="w")
+    assert srv.cache_len() == 1 and len(srv._warm) == 1
+    d2 = np.ones((M, M)) - np.eye(M)
+    d2[0, 1] = d2[1, 0] = 0.0
+    srv.request(T, d=d2, tenant="w")  # tenant's edge set changed
+    assert srv.stats.n_invalidations == 1
+    # Full-graph line + warm basis are gone; a repeat re-solves.
+    n = srv.stats.n_solves
+    srv.request(T, tenant="other")
+    assert srv.stats.n_solves == n + 1
+
+
+def test_explicit_invalidate():
+    srv = PolicyServer(alpha=0.05)
+    M = 10
+    T = make_T(M, 8)
+    srv.request(T)
+    d = np.ones((M, M)) - np.eye(M)
+    srv.invalidate(d)
+    assert srv.cache_len() == 0 and not srv._warm
+    srv.request(T)
+    assert srv.stats.n_solves == 2
+
+
+def test_same_conn_key_reuses_warm_basis():
+    """Misses under an unchanged edge set restart from the previous optimal
+    basis — visible as warm-start hits inside the sweep counters."""
+    srv = PolicyServer(alpha=0.05, quant=0.05)
+    T = make_T(12, 9)
+    r1 = srv.request(T)
+    assert r1.basis is not None
+    r2 = srv.request(T * 1.3)  # same edges, different quantized key
+    assert srv.stats.n_solves == 2
+    assert r2.n_warm_used > 0
+
+
+# --------------------------------------------------------------------------
+# Concurrency + micro-batching
+# --------------------------------------------------------------------------
+
+
+def test_concurrent_identical_requests_coalesce():
+    srv = PolicyServer(alpha=0.05)
+    T = make_T(10, 11)
+    out = [None] * 6
+    def work(i):
+        out[i] = srv.request(T)
+    threads = [threading.Thread(target=work, args=(i,)) for i in range(6)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert srv.stats.n_solves == 1
+    assert srv.stats.n_hits + srv.stats.n_coalesced == 5
+    assert all(r is out[0] for r in out)
+
+
+def test_concurrent_distinct_requests_all_resolve():
+    srv = PolicyServer(alpha=0.05)
+    Ts = [make_T(8, 20 + k) for k in range(4)]
+    out = {}
+    def work(k):
+        out[k] = srv.request(Ts[k])
+    threads = [threading.Thread(target=work, args=(k,)) for k in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert srv.stats.n_solves == 4
+    for k in range(4):
+        assert out[k].ok
+        assert srv.request(Ts[k]) is out[k]  # each populated its line
+
+
+def test_request_many_dedups_compatible_instances():
+    srv = PolicyServer(alpha=0.05, quant=0.05)
+    T = make_T(10, 12)
+    Tj = T + 1e-6          # same quantized key
+    T_other = make_T(10, 13)
+    out = srv.request_many([(T, None), (Tj, None), (T_other, None), (T, None)])
+    assert len(out) == 4
+    assert out[0] is out[1] is out[3]
+    assert out[2] is not out[0]
+    assert srv.stats.n_solves == 2
+    assert srv.stats.n_requests == 4
+
+
+def test_batched_sweep_mode_matches_serial_mode():
+    T = make_T(12, 14)
+    serial = PolicyServer(alpha=0.05, sweep="serial").request(T)
+    batched = PolicyServer(alpha=0.05, sweep="batched").request(T)
+    assert batched.ok and serial.ok
+    # Both sweeps pick the identical grid point; P agrees to solver tol.
+    assert (batched.rho, batched.t_bar) == (serial.rho, serial.t_bar)
+    assert batched.T_convergence == pytest.approx(
+        serial.T_convergence, rel=1e-6
+    )
+    assert np.allclose(batched.P, serial.P, atol=1e-6)
+
+
+def test_stats_snapshot_shape():
+    srv = PolicyServer(alpha=0.05)
+    T = make_T(8, 15)
+    srv.request(T)
+    srv.request(T)
+    snap = srv.stats.snapshot()
+    assert snap["n_requests"] == 2 and snap["n_solves"] == 1
+    assert snap["p99_ms"] >= snap["p50_ms"] >= 0.0
+    assert 0.0 <= snap["hit_rate"] <= 1.0
+
+
+def test_invalid_sweep_mode_rejected():
+    with pytest.raises(ValueError):
+        PolicyServer(alpha=0.05, sweep="vectorized")
