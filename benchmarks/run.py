@@ -927,6 +927,300 @@ def bench_serve(sizes=(128, 256), serve_M=32, n_requests=600, K=8, R=8,
     return out
 
 
+def bench_storms(small=False, out_path=None):
+    """Failure-storm robustness suite (PR 9): cascading hazard storms,
+    Monitor failover, and degraded-mode policy serving.  Writes
+    BENCH_storms.json.
+
+    Three sections, all sized as CI smokes already (M=12 sims, M=16 served
+    graphs) — ``small`` is accepted for CLI symmetry with the other gated
+    suites but changes nothing, so the smoke and the committed baseline
+    compute *identical* virtual-time metrics (every gated number below is
+    seeded and wall-clock-free, hence bit-stable across hardware):
+
+    * ``throughput`` — netmax (home-pinned Monitor + failover) vs adpsgd
+      events per virtual second through the same self-exciting storm
+      timeline.  Gated ratio: ``netmax_vs_adpsgd_evps``.
+    * ``failover`` — the PR acceptance scenario: a permanent outage kills
+      the Monitor's home cluster.  Without failover the far side hammers
+      the dead cluster to the end of the run (``pinned_never_reroutes``);
+      with failover a standby is elected and dead-cluster pulls stop
+      (``reroutes_with_failover``, ``dead_pull_rate_reduction`` = the
+      far side's post-outage dead-cluster pulls per virtual second,
+      pinned over failover).  Total failed pulls is deliberately NOT the
+      comparator: the failover run's orphaned home-cluster workers —
+      unreachable behind the WAN cut, correctly degraded to their last
+      published rows — keep timing out on cross-cluster pulls for the
+      whole (longer) run, which is the expected degraded mode, not a
+      regression.
+    * ``serving`` — PolicyServer under injected solver faults
+      (scenarios.chaos): a 35%-fault stream with deadline+retry+stale
+      (``all_served``), then a total solver blackout where the circuit
+      breaker trips and every request still gets the uniform fallback
+      (``served_under_blackout``, ``breaker_tripped``), then fault clearing
+      where a probe closes the breaker (``breaker_recovered``).  p50/p99
+      latencies are reported ungated (wall-clock).
+    """
+    import time as _time
+
+    import numpy as np
+
+    from repro.core.nettime import LinkTimeModel, Topology
+    from repro.data.partition import uniform_partition
+    from repro.data.synthetic import train_eval_split
+    from repro.scenarios import ChaosInjector, presets, storm
+    from repro.serve import PolicyServer
+    from repro.train.simulator import SimConfig, simulate
+
+    del small  # suite is already smoke-sized; kept for CLI symmetry
+    M = 12
+    topo = Topology(n_workers=M, workers_per_host=2, hosts_per_pod=2,
+                    pods_per_cluster=1)  # 3 clusters of 4
+    cluster = np.array([topo.cluster_of(i) for i in range(M)])
+    x, y, ex, ey = train_eval_split(3000, 600, 32, 10, seed=0)
+    parts = uniform_partition(len(y), M, seed=0)
+
+    def run(algo, timeline, events, *, timeout, failover=False, seed=3):
+        link = LinkTimeModel(topo, jitter=0.02, seed=5, scenario=timeline,
+                             dead_link_timeout=timeout)
+        kw = {}
+        if algo == "netmax":
+            kw = dict(monitor_period=1.0, monitor_home_cluster=0,
+                      monitor_failover=failover)
+        cfg = SimConfig(algorithm=algo, n_workers=M, total_events=events,
+                        lr=0.05, seed=seed, engine="batched", **kw)
+        t0 = _time.time()
+        res = simulate(cfg, link, x, y, parts, ex, ey,
+                       record_every=max(50, events // 20))
+        return res, link, _time.time() - t0
+
+    # -- storm throughput: netmax+failover vs adpsgd ----------------------
+    # One self-exciting storm (trigger strike on the Monitor's home
+    # cluster at t=0.8, excitation cascades across correlated domains);
+    # both algorithms ride the identical compiled timeline.
+    tl = storm(topo, seed=7, horizon=40.0, intensity=2.0,
+               trigger_cluster=0, trigger_time=0.8)
+    events = 2000
+    throughput = {"storm_events": len(tl.events)}
+    evps = {}
+    for algo in ("netmax", "adpsgd"):
+        res, link, wall = run(algo, tl, events, timeout=0.5,
+                              failover=(algo == "netmax"))
+        evps[algo] = events / res.times[-1]
+        throughput[algo] = dict(
+            events=events,
+            wall_s=round(wall, 3),
+            virtual_time_s=round(res.times[-1], 3),
+            events_per_vsec=round(evps[algo], 2),
+            failed_pulls=len(res.failed_pulls),
+            failovers=len(res.leader_log),
+            skipped_refreshes=res.skipped_refreshes,
+            segments=len(link.compiled_scenario.segments),
+            final_loss=round(res.losses[-1], 4),
+        )
+        print(f"storms/throughput/{algo},{wall * 1e6 / events:.0f},"
+              f"evps={throughput[algo]['events_per_vsec']}_"
+              f"fails={throughput[algo]['failed_pulls']}_"
+              f"failovers={throughput[algo]['failovers']}")
+    throughput["netmax_vs_adpsgd_evps"] = round(
+        evps["netmax"] / evps["adpsgd"], 4
+    )
+
+    # -- failover: refreshes-to-reroute with/without standby Monitors -----
+    period, timeout, t0 = 0.5, 0.4, 1.0
+    outage = presets.cluster_outage(0, t0, 1e9)
+    runs = {}
+    for failover in (False, True):
+        link = LinkTimeModel(topo, jitter=0.02, seed=5, scenario=outage,
+                             dead_link_timeout=timeout)
+        cfg = SimConfig(algorithm="netmax", n_workers=M, total_events=1200,
+                        monitor_period=period, monitor_home_cluster=0,
+                        monitor_failover=failover, seed=3, engine="batched")
+        runs[failover] = simulate(cfg, link, x, y, parts, ex, ey,
+                                  record_every=600)
+    pinned, elected = runs[False], runs[True]
+
+    def into_dead(res):
+        return [t for t, i, m in res.failed_pulls
+                if cluster[i] != 0 and cluster[m] == 0]
+
+    # First post-outage refresh whose published policy carries zero mass
+    # into the dead cluster (same rule as bench_scenarios).
+    touch = cluster == 0
+    cross = (touch[:, None] | touch[None, :]) & (
+        cluster[:, None] != cluster[None, :]
+    )
+
+    def refreshes_to_reroute(res):
+        n = 0
+        for tq, _rho, P in res.policy_log:
+            if tq >= t0:
+                n += 1
+                if float(P[cross].sum()) <= 1e-12:
+                    return n
+        return None
+
+    t_elect = elected.leader_log[0][0] if elected.leader_log else None
+    late_pinned = into_dead(pinned)
+    dead_elected = into_dead(elected)
+    late_elected = [t for t in dead_elected
+                    if t_elect is not None
+                    and t > t_elect + 2 * period + timeout]
+
+    def dead_rate(res):
+        span = res.times[-1] - t0
+        return len(into_dead(res)) / span if span > 0 else 0.0
+
+    failover_row = dict(
+        outage_start=t0,
+        monitor_period=period,
+        pinned=dict(
+            failed_pulls=len(pinned.failed_pulls),
+            dead_cluster_pulls=len(late_pinned),
+            last_dead_pull_t=round(max(late_pinned), 3)
+            if late_pinned else None,
+            virtual_time_s=round(pinned.times[-1], 3),
+            refreshes_to_reroute=refreshes_to_reroute(pinned),
+            skipped_refreshes=pinned.skipped_refreshes,
+        ),
+        failover=dict(
+            failed_pulls=len(elected.failed_pulls),
+            dead_cluster_pulls=len(dead_elected),
+            virtual_time_s=round(elected.times[-1], 3),
+            failovers=len(elected.leader_log),
+            elected_cluster=elected.leader_log[0][1]
+            if elected.leader_log else None,
+            election_t=round(t_elect, 3) if t_elect is not None else None,
+            refreshes_to_reroute=refreshes_to_reroute(elected),
+            dead_pulls_after_handoff=len(late_elected),
+        ),
+        # Gated flags/ratios (virtual-time deterministic):
+        pinned_never_reroutes=1.0 if (
+            not pinned.leader_log
+            and late_pinned
+            and max(late_pinned) > 0.75 * pinned.times[-1]
+        ) else 0.0,
+        reroutes_with_failover=1.0 if (
+            elected.leader_log and not late_elected
+        ) else 0.0,
+        dead_pull_rate_reduction=round(
+            dead_rate(pinned) / max(dead_rate(elected), 1e-9), 3
+        ),
+    )
+    print(f"storms/failover,0,"
+          f"pinned_fails={failover_row['pinned']['failed_pulls']}_"
+          f"failover_fails={failover_row['failover']['failed_pulls']}_"
+          f"elect_t={failover_row['failover']['election_t']}_"
+          f"reroute_refreshes={failover_row['failover']['refreshes_to_reroute']}_"
+          f"dead_rate_red={failover_row['dead_pull_rate_reduction']}x")
+
+    # -- degraded-mode serving under injected solver faults ---------------
+    def hetero_T(Mw, seed=0):
+        rng = np.random.default_rng(seed)
+        T = rng.uniform(0.01, 0.05, size=(Mw, Mw))
+        T = (T + T.T) / 2
+        np.fill_diagonal(T, 0.0)
+        return T
+
+    serve_M = 16
+    bases = [hetero_T(serve_M, seed=s) for s in range(3)]
+    rng = np.random.default_rng(11)
+
+    # Phase 1: 35% per-attempt fault rate; bounded retry + stale-while-
+    # revalidate keep every request answered with a real policy object.
+    chaos = ChaosInjector(seed=3, solver_fail_rate=0.35)
+    srv = PolicyServer(alpha=0.1, K=6, R=6, quant=0.05, deadline_ms=2000.0,
+                       max_retries=2, backoff_ms=1.0, breaker_threshold=3,
+                       breaker_probe_every=4, chaos=chaos)
+    served = 0
+    n_requests = 0
+    t0w = _time.time()
+    for epoch in range(6):
+        B = bases[int(rng.integers(len(bases)))]
+        snapshot = B + rng.uniform(-1e-4, 1e-4, B.shape)  # EMA drift: miss
+        for _ in range(30):
+            noise = rng.uniform(-1e-9, 1e-9, B.shape)  # absorbed by quant
+            n_requests += 1
+            if srv.request(snapshot + noise, tenant="stream") is not None:
+                served += 1
+    stream_wall = _time.time() - t0w
+    st = srv.stats.snapshot()
+    serving = dict(
+        M=serve_M,
+        requests=n_requests,
+        chaos_fail_rate=0.35,
+        all_served=1.0 if served == n_requests else 0.0,
+        p50_ms=round(srv.stats.latency_ms(0.50), 4),
+        p99_ms=round(srv.stats.latency_ms(0.99), 4),
+        n_solves=st["n_solves"],
+        n_retries=st["n_retries"],
+        n_solve_errors=st["n_solve_errors"],
+        n_stale_served=st["n_stale_served"],
+        n_uniform_fallbacks=st["n_uniform_fallbacks"],
+        n_deadline_misses=st["n_deadline_misses"],
+        injected_faults=chaos.n_solver_faults,
+    )
+    print(f"storms/serving/faulty,{serving['p50_ms'] * 1e3:.1f},"
+          f"served={served}/{n_requests}_p99={serving['p99_ms']}ms_"
+          f"retries={serving['n_retries']}_stale={serving['n_stale_served']}_"
+          f"uniform={serving['n_uniform_fallbacks']}")
+
+    # Phase 2: total solver blackout -> breaker trips, every request still
+    # answered by the uniform fallback; then the fault clears and a
+    # breaker probe restores fresh solves.
+    blackout = ChaosInjector(seed=4, solver_fail_rate=1.0)
+    srv2 = PolicyServer(alpha=0.1, K=6, R=6, quant=0.05, deadline_ms=2000.0,
+                        max_retries=1, backoff_ms=1.0, breaker_threshold=2,
+                        breaker_probe_every=3, chaos=blackout)
+    dark_served = 0
+    n_dark = 12
+    for k in range(n_dark):
+        snap = bases[0] + rng.uniform(-1e-4, 1e-4, bases[0].shape)
+        res = srv2.request(snap, tenant="dark")
+        if res is not None and not res.ok:  # uniform fallback marker
+            dark_served += 1
+    tripped = srv2.stats.n_breaker_trips
+    blackout.solver_fail_rate = 0.0  # fault clears
+    recovered = None
+    for k in range(2 * srv2.breaker_probe_every):
+        snap = bases[0] + rng.uniform(-1e-4, 1e-4, bases[0].shape)
+        res = srv2.request(snap, tenant="dark")
+        if res is not None and res.ok:  # a probe closed the breaker
+            recovered = k + 1
+            break
+    st2 = srv2.stats.snapshot()
+    serving["blackout"] = dict(
+        requests=n_dark,
+        served_under_blackout=1.0 if dark_served == n_dark else 0.0,
+        breaker_tripped=1.0 if tripped >= 1 else 0.0,
+        breaker_probes=st2["n_breaker_probes"],
+        breaker_recovered=1.0
+        if st2["n_breaker_recoveries"] >= 1 and recovered is not None
+        else 0.0,
+        requests_to_recover=recovered,
+    )
+    print(f"storms/serving/blackout,0,"
+          f"served={dark_served}/{n_dark}_trips={tripped}_"
+          f"probes={st2['n_breaker_probes']}_"
+          f"recovered_after={recovered}_reqs")
+
+    out = {
+        "suite": "storms",
+        "topology": "3 clusters x 4 workers (M=12)",
+        "storm": {"seed": 7, "horizon_s": 40.0, "intensity": 2.0,
+                  "trigger_cluster": 0, "trigger_time": 0.8},
+        "throughput": throughput,
+        "failover": failover_row,
+        "serving": serving,
+        "stream_wall_s": round(stream_wall, 3),
+    }
+    path = Path(out_path) if out_path else ROOT / "BENCH_storms.json"
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote {path}")
+    return out
+
+
 def bench_roofline_summary():
     """Summarize dry-run artifacts (if present) into roofline terms."""
     from repro.analysis.roofline import from_record
@@ -961,7 +1255,7 @@ def main() -> None:
     ap.add_argument("--suite", default="all",
                     choices=["all", "paper", "kernels", "roofline", "quick",
                              "algos", "simulator", "policy", "scenarios",
-                             "trace", "serve"])
+                             "trace", "serve", "storms"])
     ap.add_argument("--events", type=int, default=4000)
     ap.add_argument("--policy-sizes", type=int, nargs="+", default=None,
                     help="worker counts for --suite policy "
@@ -1025,6 +1319,10 @@ def main() -> None:
     if args.suite in ("all", "serve"):
         out["serve"] = bench_serve(
             small=args.small, out_path=bench_path("BENCH_serve.json")
+        )
+    if args.suite in ("all", "storms"):
+        out["storms"] = bench_storms(
+            small=args.small, out_path=bench_path("BENCH_storms.json")
         )
     if args.suite in ("all", "paper"):
         out["policy_generation"] = pt.bench_policy_generation()

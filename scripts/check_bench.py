@@ -111,11 +111,42 @@ def _walk_serve(doc):
     )
 
 
+def _walk_storms(doc):
+    """Yield ratio metrics from BENCH_storms.json (PR 9 robustness suite).
+
+    Everything gated here is derived from seeded virtual-time simulation or
+    a seeded chaos stream — no wall clocks — so fresh-vs-baseline should
+    match bit-for-bit on any hardware; the 30% tolerance only absorbs
+    cross-version RNG drift.  Gated: netmax-vs-adpsgd throughput through
+    the storm (events per *virtual* second), the failover acceptance flags
+    (a pinned Monitor never reroutes, a standby election does) and the
+    far-side dead-pull-rate reduction failover buys, and the
+    degraded-serving flags
+    (every request answered under 35% faults and under total blackout,
+    breaker trips then recovers).  p50/p99 latencies and wall seconds are
+    deliberately NOT gated."""
+    th = doc.get("throughput", {})
+    yield "throughput", "netmax_vs_adpsgd_evps", th.get("netmax_vs_adpsgd_evps")
+    fo = doc.get("failover", {})
+    for k in (
+        "pinned_never_reroutes",
+        "reroutes_with_failover",
+        "dead_pull_rate_reduction",
+    ):
+        yield "failover", k, fo.get(k)
+    serving = doc.get("serving", {})
+    yield "serving", "all_served", serving.get("all_served")
+    blackout = serving.get("blackout", {})
+    for k in ("served_under_blackout", "breaker_tripped", "breaker_recovered"):
+        yield "serving/blackout", k, blackout.get(k)
+
+
 _WALKERS = {
     "simulator": _walk_simulator,
     "policy": _walk_policy,
     "trace": _walk_trace,
     "serve": _walk_serve,
+    "storms": _walk_storms,
 }
 
 

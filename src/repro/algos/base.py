@@ -265,6 +265,13 @@ class Algorithm(abc.ABC):
         home = getattr(cfg, "monitor_home_cluster", None)
         if home is not None:
             kw["home_cluster"] = int(home)
+        if getattr(cfg, "monitor_failover", False):
+            from repro.core.monitor import MonitorFailover
+
+            kw["failover"] = MonitorFailover(
+                lease_periods=getattr(cfg, "monitor_lease_periods", 1.0),
+                quorum=getattr(cfg, "monitor_quorum", None),
+            )
         return NetworkMonitor(M, **kw)
 
     def on_policy(self, state: AlgoState, pol) -> None:

@@ -64,6 +64,39 @@ class IterationTimeEMA:
 
 
 @dataclass
+class MonitorFailover:
+    """Standby-Monitor failover state (DESIGN.md §18).
+
+    One standby candidate runs in every cluster; the current leader renews
+    their **leases** by heartbeating at each Monitor wake (heartbeats ride
+    the same directed WAN reachability as EMA reports).  A standby whose
+    lease has been silent for ``lease_periods`` schedule periods considers
+    the leader gone; when enough mutually-reachable standbys agree
+    (``quorum``, default a majority of clusters — split-brain can then
+    never elect two leaders), the lowest-id fully-WAN-connected candidate
+    takes over.  The handoff re-seeds the EMA matrix from the new leader's
+    reachable reports, drops the warm LP basis, and clears stale failure
+    evidence (it was collected at the old vantage point); the election
+    wake itself doubles as the out-of-schedule refresh.  With no quorum
+    (or no eligible candidate) no refresh fires and the data plane keeps
+    training on its last published per-worker policy rows — degraded, not
+    stalled.
+
+    All decisions are pure functions of ``(segment, virtual time, this
+    state)`` and consume no RNG — both engines drive them through the
+    shared ``scenarios.driver.monitor_boundary``, which is what keeps
+    reference-vs-batched parity exact under failover.
+    """
+
+    lease_periods: float = 1.0
+    quorum: int | None = None  # None = majority of clusters
+    last_heartbeat: dict = field(default_factory=dict)  # cluster -> time
+    n_failovers: int = 0
+    n_skipped_refreshes: int = 0  # wakes with no live leader and no quorum
+    leader_log: list = field(default_factory=list)  # [(t, new leader cluster)]
+
+
+@dataclass
 class NetworkMonitor:
     """Algorithm 1.  ``collect`` <- worker EMAs; ``step`` -> (P, rho)."""
 
@@ -107,6 +140,10 @@ class NetworkMonitor:
     # reach — the far side of a partition keeps training on its stale
     # policy (scenarios/driver.monitor_reach / publish_policy).
     home_cluster: int | None = None
+    # Standby-Monitor failover (None = the PR-7 single pinned Monitor:
+    # if its cluster dies, no refresh ever fires again).  Requires
+    # ``home_cluster``; driven by scenarios/driver.monitor_boundary.
+    failover: MonitorFailover | None = None
 
     _T: np.ndarray = field(init=False)
     _missed: np.ndarray = field(init=False)
@@ -212,6 +249,32 @@ class NetworkMonitor:
                 a = np.array([c == ca for c in cluster])
                 b = np.array([c == cb for c in cluster])
                 conn[np.ix_(a, b)] = 0.0
+
+    def adopt_leader(self, cluster: int, now: float) -> None:
+        """Leadership handoff to the standby in ``cluster`` (DESIGN.md §18).
+
+        A standby holds none of the old leader's soft state, and all of it
+        is rebuildable from worker reports — so the handoff *drops* it:
+        the EMA matrix and missed-report counters reset (the next
+        ``collect`` re-seeds them from the workers the new leader can
+        reach), the warm LP basis is invalidated (PR-4 rule: never thread
+        a basis across a vantage change), and pending failure evidence is
+        cleared (it was directed evidence *toward the old home*; the new
+        leader re-accumulates its own within one reroute delay).
+        """
+        fo = self.failover
+        self.home_cluster = int(cluster)
+        self._T[:] = 0.0
+        self._missed[:] = 0
+        self._basis = None
+        self._basis_key = None
+        self._fail_links.clear()
+        self._fail_wake = None
+        fo.n_failovers += 1
+        fo.leader_log.append((float(now), int(cluster)))
+        # The new leader's own heartbeat starts every lease afresh.
+        for c in list(fo.last_heartbeat):
+            fo.last_heartbeat[c] = float(now)
 
     # -- control plane -------------------------------------------------------
     def step(self) -> PolicyResult:

@@ -3,6 +3,8 @@ degradation, and worker churn, compiled into the piecewise link-state
 machine that ``core.nettime.LinkTimeModel`` executes (DESIGN.md §14)."""
 
 from repro.scenarios import presets
+from repro.scenarios.chaos import ChaosError, ChaosInjector
+from repro.scenarios.hazard import HazardConfig, hazard_timeline, storm
 from repro.scenarios.timeline import (
     ACTION_EVENTS,
     ClusterOutage,
@@ -16,12 +18,17 @@ from repro.scenarios.timeline import (
 
 __all__ = [
     "ACTION_EVENTS",
+    "ChaosError",
+    "ChaosInjector",
     "ClusterOutage",
     "CompiledTimeline",
+    "HazardConfig",
     "LinkDegrade",
     "ScenarioCursor",
     "Timeline",
     "WorkerLeave",
     "WorkerRejoin",
+    "hazard_timeline",
     "presets",
+    "storm",
 ]

@@ -14,6 +14,12 @@ every decision that a scenario adds to a loop lives here, written once:
   Monitor, i.e. ``home_cluster`` unset or no scenario attached).
 * ``publish_policy``     — deliver (P, rho) only to reachable workers;
   the far side of a partition keeps training on its stale policy.
+* ``monitor_boundary``   — one whole Monitor wake: failover
+  heartbeat/lease tick and deterministic re-election (DESIGN.md §18),
+  chaos-injected report drops / lost publishes, collect, step, publish.
+  Both engines call this one function at identical virtual times, so
+  every failover and chaos decision is made exactly once per wake and
+  parity is preserved by construction.
 * ``apply_action``       — apply one churn action to loop state: heap
   membership, active set, EMA reset, and replica reseeding (via a
   caller-supplied callback, because the two engines store replicas
@@ -39,7 +45,15 @@ def prepare_monitor(monitor, link_model) -> None:
     point every worker that touched the dead domain has evidence pending,
     and one refresh masks the whole failure domain.
     """
-    if monitor is None or link_model.compiled_scenario is None:
+    if monitor is None:
+        return
+    if monitor.failover is not None and monitor.home_cluster is None:
+        raise ValueError(
+            "Monitor failover requires a home-pinned control plane: set "
+            "monitor_home_cluster (an omniscient Monitor has no home to "
+            "fail over from)"
+        )
+    if link_model.compiled_scenario is None:
         return
     if monitor.topology is None:
         monitor.topology = link_model.topology
@@ -111,6 +125,106 @@ def publish_policy(algo, state, pol, reach_out=None) -> None:
     rho_vec = np.full(state.M, state.rho, dtype=float)
     rho_vec[stale] = old_rho[stale]
     state.rho_vec = None if np.all(rho_vec == state.rho) else rho_vec
+
+
+def failover_tick(monitor, seg, t: float) -> bool:
+    """One heartbeat/lease/election step for a failover-enabled Monitor.
+
+    Pure function of ``(segment, virtual time, failover state)`` — no RNG —
+    called once per Monitor wake by ``monitor_boundary``.  Returns True
+    when a live leader holds the control plane after the tick (the refresh
+    proceeds, from the *new* vantage point if an election just happened)
+    and False when the leader's cluster is dead and no standby quorum
+    could elect (the refresh is skipped; workers keep training on their
+    last published per-worker policy rows).
+
+    Semantics (DESIGN.md §18):
+
+    * A cluster hosts a standby iff at least one of its workers is present
+      (``~seg.dead_out`` — churn can empty a cluster and take the standby
+      with it).  WAN outages partition a standby but do not kill it.
+    * Heartbeats ride the directed WAN: a live leader that can transmit
+      (``not wan_out[home]``) renews the lease of every live standby that
+      can receive (``not wan_in[c]``) at this wake.  Leases are lazily
+      initialised to 0.0, so a leader partitioned from boot is already
+      lease-expired at the first wake past the lease.
+    * A standby whose lease has been silent for ``lease_periods`` schedule
+      periods becomes an elector.  The lowest-id live, fully-WAN-connected
+      elector wins if its votes (itself plus every other elector whose
+      vote can reach it) meet the quorum (default: majority of clusters —
+      a minority partition can then never elect a second leader).
+    * ``adopt_leader`` re-homes the Monitor and renews every lease, so the
+      old leader's cluster coming back does not immediately re-elect.
+    """
+    fo = monitor.failover
+    home = int(monitor.home_cluster)
+    cl = seg.cluster
+    nc = len(seg.wan_out)
+    alive = np.zeros(nc, dtype=bool)
+    alive[np.unique(cl[~seg.dead_out])] = True
+    for c in range(nc):
+        fo.last_heartbeat.setdefault(c, 0.0)
+    if alive[home]:
+        fo.last_heartbeat[home] = t
+        if not seg.wan_out[home]:
+            for c in range(nc):
+                if c != home and alive[c] and not seg.wan_in[c]:
+                    fo.last_heartbeat[c] = t
+    lease = fo.lease_periods * monitor.schedule_period
+    electors = [
+        c
+        for c in range(nc)
+        if c != home and alive[c] and t - fo.last_heartbeat[c] >= lease
+    ]
+    if electors:
+        quorum = fo.quorum if fo.quorum is not None else nc // 2 + 1
+        for cand in electors:  # ascending cluster id: deterministic winner
+            if seg.wan_out[cand] or seg.wan_in[cand]:
+                continue  # a WAN-cut candidate could not lead anyone
+            votes = 1 + sum(1 for s in electors if s != cand and not seg.wan_out[s])
+            if votes >= quorum:
+                monitor.adopt_leader(cand, t)
+                return True
+    if alive[home]:
+        return True  # leader present (possibly partitioned): refresh runs
+    fo.n_skipped_refreshes += 1
+    return False
+
+
+def monitor_boundary(
+    monitor, algo, state, link_model, emas, active, t: float, chaos=None
+):
+    """One whole Monitor wake, shared verbatim by every engine loop.
+
+    Failover tick (maybe re-homing the Monitor), chaos-filtered report
+    collection, Algorithm-1 step, chaos-aware publish.  Returns the fresh
+    ``PolicyResult`` — or None when a dead leader and no quorum skipped
+    the refresh — and the caller logs it and advances ``next_monitor``.
+    Both engines call this at identical virtual times with identical
+    arguments, so every failover and chaos decision is made exactly once
+    per wake and reference-vs-batched parity holds by construction.
+    """
+    if monitor.failover is not None and link_model is not None:
+        link_model.advance_to(t)
+        seg = link_model.current_segment
+        if seg is not None and not failover_tick(monitor, seg, t):
+            return None
+    reach = monitor_reach(monitor, link_model, t)
+    reports = {
+        j: emas[j].snapshot()
+        for j in range(monitor.n_workers)
+        if j in active and (reach is None or reach[0][j])
+    }
+    if chaos is not None:
+        reports = {j: r for j, r in reports.items() if not chaos.drop_report(j, t)}
+    monitor.collect(reports)
+    pol = monitor.step()
+    if chaos is not None and chaos.publish_lost(t, monitor.schedule_period):
+        # Publish delayed past the next refresh: it never lands anywhere.
+        publish_policy(algo, state, pol, np.zeros(monitor.n_workers, dtype=bool))
+    else:
+        publish_policy(algo, state, pol, None if reach is None else reach[1])
+    return pol
 
 
 def notify_monitor(

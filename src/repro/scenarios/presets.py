@@ -92,8 +92,10 @@ def federated_cohorts(
         stay = {int(w) for w in
                 rng.choice(sorted(cohort), size=carryover, replace=False)}
         pool = sorted(set(range(M)) - cohort)
-        fresh = {int(w) for w in
-                 rng.choice(pool, size=cohort_size - carryover, replace=False)}
+        fresh = {
+            int(w)
+            for w in rng.choice(pool, size=cohort_size - carryover, replace=False)
+        }
         for w in sorted(cohort - stay):
             tl.add(WorkerLeave(w, t))
         for w in sorted(fresh):
@@ -120,23 +122,66 @@ def random_timeline(
     paper's 2x-100x slow-link sweep), and worker leave/rejoin blips from
     ``np.random.default_rng(seed)``; the result is declarative, so the same
     (topology, seed) always produces the same timeline.
+
+    Generation is overlap-free by construction: candidate windows that
+    would collide with an earlier event on the same failure domain (same
+    cluster+direction, same directed link) are redrawn a bounded number of
+    times, then dropped — the compiled timeline always passes the
+    same-domain overlap validation ``Timeline.compile`` enforces.
     """
+    if not (np.isfinite(horizon) and horizon > 0):
+        raise ValueError(f"need finite horizon > 0, got {horizon}")
+    for name, n in (
+        ("n_outages", n_outages),
+        ("n_degrades", n_degrades),
+        ("n_churn", n_churn),
+    ):
+        if n < 0:
+            raise ValueError(f"{name} must be >= 0, got {n}")
+    for name, pair in (
+        ("outage_len", outage_len),
+        ("degrade_len", degrade_len),
+        ("churn_len", churn_len),
+        ("degrade_factor", degrade_factor),
+    ):
+        lo, hi = pair
+        if not (np.isfinite(lo) and np.isfinite(hi) and 0 < lo <= hi):
+            raise ValueError(f"{name} must be a finite ordered range > 0, got {pair}")
     rng = np.random.default_rng(seed)
     M = topology.n_workers
     nc = topology.n_clusters
     tl = Timeline()
+
+    def place(spans, domain, t0, t1):
+        """Claim [t0, t1) on ``domain`` unless it overlaps a prior claim."""
+        for a, b in spans.setdefault(domain, []):
+            if t0 < b and a < t1:
+                return False
+        spans[domain].append((t0, t1))
+        return True
+
+    outage_spans: dict = {}
     for _ in range(n_outages if nc > 1 else 0):
-        c = int(rng.integers(nc))
-        t0 = float(rng.uniform(0.0, horizon))
-        tl.add(ClusterOutage(c, t0, t0 + float(rng.uniform(*outage_len))))
+        for _attempt in range(8):
+            c = int(rng.integers(nc))
+            t0 = float(rng.uniform(0.0, horizon))
+            t1 = t0 + float(rng.uniform(*outage_len))
+            if place(outage_spans, c, t0, t1):
+                tl.add(ClusterOutage(c, t0, t1))
+                break
+    degrade_spans: dict = {}
     for _ in range(n_degrades):
-        i = int(rng.integers(M))
-        m = int(rng.integers(M - 1))
-        m = m if m < i else m + 1
-        t0 = float(rng.uniform(0.0, horizon))
-        length = float(rng.uniform(*degrade_len))
-        factor = float(rng.uniform(*degrade_factor))
-        tl.add(LinkDegrade(i, m, t0, t0 + length, factor))
+        for _attempt in range(8):
+            i = int(rng.integers(M))
+            m = int(rng.integers(M - 1))
+            m = m if m < i else m + 1
+            t0 = float(rng.uniform(0.0, horizon))
+            t1 = t0 + float(rng.uniform(*degrade_len))
+            factor = float(rng.uniform(*degrade_factor))
+            # Degrades default symmetric: the domain is the unordered pair.
+            if place(degrade_spans, (min(i, m), max(i, m)), t0, t1):
+                tl.add(LinkDegrade(i, m, t0, t1, factor))
+                break
     # Churn blips use distinct workers so leave/rejoin pairs never overlap.
     churned = rng.choice(M, size=min(n_churn, M - 1), replace=False)
     for w in churned:

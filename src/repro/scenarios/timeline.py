@@ -118,8 +118,9 @@ class Segment:
         "degrade_map", "cluster", "_dead_dense", "_degrade_dense",
     )
 
-    def __init__(self, start, dead_out, dead_in, wan_out, wan_in,
-                 degrade_map, cluster):
+    def __init__(
+        self, start, dead_out, dead_in, wan_out, wan_in, degrade_map, cluster
+    ):
         self.start = float(start)
         self.dead_out = dead_out  # (M,) bool
         self.dead_in = dead_in  # (M,) bool
@@ -285,6 +286,15 @@ class Timeline:
         M = topology.n_workers
         nc = topology.n_clusters
         pending: dict[int, bool] = {}  # worker -> currently departed
+        # Overlap detection per failure domain: two events occupying the
+        # same directed domain over intersecting [start, end) windows would
+        # compile into an ambiguous segment machine (outage flags OR
+        # silently, degrade factors *multiply* silently) — reject loudly
+        # instead.  Domains: (cluster, wan-direction) for outages, the
+        # directed link (i, m) for degrades (a symmetric degrade occupies
+        # both directions).
+        outage_spans: dict[tuple, list] = {}
+        degrade_spans: dict[tuple, list] = {}
         # Same (time, rank) order compile() and the runtime use — equal-time
         # leaves fire before rejoins, and validation must see that order.
         for e in sorted(self.events, key=lambda e: (_event_time(e), _event_rank(e))):
@@ -294,29 +304,44 @@ class Timeline:
                         f"ClusterOutage cluster {e.cluster} out of range "
                         f"(topology has {nc} clusters)"
                     )
-                if not (np.isfinite(e.start) and e.start < e.end):
-                    raise ValueError(f"ClusterOutage needs start < end, got {e}")
+                if not (np.isfinite(e.start) and e.start >= 0 and e.start < e.end):
+                    raise ValueError(f"ClusterOutage needs 0 <= start < end, got {e}")
                 if e.direction not in ("both", "out", "in"):
                     raise ValueError(
                         f"ClusterOutage direction must be 'both', 'out' or "
                         f"'in', got {e.direction!r}"
+                    )
+                dirs = ("out", "in") if e.direction == "both" else (e.direction,)
+                for dr in dirs:
+                    _note_span(
+                        outage_spans,
+                        (e.cluster, dr),
+                        e,
+                        f"cluster {e.cluster} WAN-{dr} outage",
                     )
             elif isinstance(e, LinkDegrade):
                 if not (0 <= e.i < M and 0 <= e.m < M and e.i != e.m):
                     raise ValueError(f"LinkDegrade endpoints invalid: {e}")
                 if not (e.factor > 0 and np.isfinite(e.factor)):
                     raise ValueError(f"LinkDegrade factor must be finite > 0: {e}")
-                if not (np.isfinite(e.start) and e.start < e.end):
-                    raise ValueError(f"LinkDegrade needs start < end, got {e}")
+                if not (np.isfinite(e.start) and e.start >= 0 and e.start < e.end):
+                    raise ValueError(f"LinkDegrade needs 0 <= start < end, got {e}")
+                links = ((e.i, e.m), (e.m, e.i)) if e.symmetric else ((e.i, e.m),)
+                for lk in links:
+                    _note_span(degrade_spans, lk, e, f"link {lk[0]}->{lk[1]} degrade")
             elif isinstance(e, WorkerLeave):
-                if not (0 <= e.worker < M) or not np.isfinite(e.time):
+                if not (0 <= e.worker < M) or not (np.isfinite(e.time) and e.time >= 0):
                     raise ValueError(f"WorkerLeave worker/time invalid: {e}")
                 if pending.get(e.worker, False):
                     raise ValueError(f"worker {e.worker} leaves twice without a rejoin")
                 pending[e.worker] = True
             elif isinstance(e, WorkerRejoin):
-                if not (0 <= e.worker < M) or not np.isfinite(e.time):
+                if not (0 <= e.worker < M) or not (np.isfinite(e.time) and e.time >= 0):
                     raise ValueError(f"WorkerRejoin worker/time invalid: {e}")
+                if e.seed_from is not None and not (
+                    0 <= e.seed_from < M and e.seed_from != e.worker
+                ):
+                    raise ValueError(f"WorkerRejoin seed_from invalid: {e}")
                 if not pending.get(e.worker, False):
                     raise ValueError(f"worker {e.worker} rejoins without having left")
                 pending[e.worker] = False
@@ -421,6 +446,23 @@ class Timeline:
             boundaries=boundaries,
             events=events,
         )
+
+
+def _note_span(spans: dict, domain, e, what: str) -> None:
+    """Record ``e``'s [start, end) against ``domain``; raise on overlap.
+
+    Events arrive in ascending start order (the caller iterates the sorted
+    list), so overlap with the previous span on the same domain is the
+    only case to check — half-open windows may abut (a.end == b.start)."""
+    prev = spans.get(domain)
+    if prev is not None and e.start < prev[1]:
+        raise ValueError(
+            f"overlapping same-domain events: {what} [{e.start}, {e.end}) "
+            f"overlaps an earlier event on the same domain "
+            f"[{prev[0]}, {prev[1]})"
+        )
+    if prev is None or e.end > prev[1]:
+        spans[domain] = (e.start, e.end)
 
 
 def _event_time(e) -> float:

@@ -33,6 +33,35 @@ Three mechanisms (DESIGN.md §17):
 Latency accounting: every request records wall time; ``stats()`` reports
 p50/p99 and the hit rate — the serve benchmark gates the hit rate (a
 ratio, hardware-portable) and reports the latencies ungated.
+
+**Degraded-mode serving (DESIGN.md §18).**  A solver failure must never
+become a caller-visible exception — a worker that cannot fetch a policy
+keeps training on *something*, so the server walks a degradation ladder
+on every miss whose solve goes wrong:
+
+1. **Bounded retry with backoff** — up to ``max_retries`` re-attempts,
+   exponential backoff charged against the request's ``deadline_ms``
+   (backoff and chaos-injected latency are charged *virtually*, not
+   slept, so tests are deterministic and fast; wall time still counts).
+   A blown deadline stops retrying immediately.
+2. **Stale-while-revalidate** — the last good result for the same
+   connectivity key (``_last_good``) is served in place of the failed
+   solve.  Edge-set invalidation drops it (a stale result for a changed
+   layout must never be served), and degraded results are never cached
+   and never become ``_last_good`` themselves.
+3. **Uniform fallback** — with no stale result to serve, the
+   AD-PSGD-style ``uniform_policy`` ships with a safe rho (the
+   ``generate_policy_matrix`` infeasible-sweep fallback, core/policy.py)
+   and ``T_convergence = inf`` — so ``PolicyResult.ok`` is False, which
+   is how callers (and tests) recognize a degraded answer.
+
+A **circuit breaker** guards the solver: ``breaker_threshold``
+consecutive failed solves open it, after which misses short-circuit
+straight to the ladder's stale/uniform steps without burning a solver
+attempt; every ``breaker_probe_every``-th short-circuited miss probes
+the solver once (no retries), and a successful probe closes the breaker.
+Fault injection for all of this is ``scenarios.chaos.ChaosInjector``
+passed as ``chaos=``; every rung is surfaced in ``ServeStats``.
 """
 
 from __future__ import annotations
@@ -49,12 +78,20 @@ from repro.core.policy import (
     connectivity_key,
     generate_policy_matrix,
     generate_policy_matrix_batched,
+    uniform_policy,
 )
 
 
 @dataclass
 class ServeStats:
-    """Counters + latency reservoir for one PolicyServer."""
+    """Counters + latency reservoir for one PolicyServer.
+
+    Thread-safe on its own lock: counters are mutated via ``bump`` and
+    latencies via ``note_latency`` from any thread, with or without the
+    server's cache lock held — the final latency append of a request
+    deliberately happens *after* the server releases its lock, so the
+    stats object must not rely on it.
+    """
 
     n_requests: int = 0
     n_hits: int = 0
@@ -62,7 +99,27 @@ class ServeStats:
     n_solves: int = 0
     n_invalidations: int = 0
     n_evictions: int = 0
+    # Degraded-mode ladder (module docstring): every rung is counted.
+    n_solve_errors: int = 0
+    n_retries: int = 0
+    n_deadline_misses: int = 0
+    n_stale_served: int = 0
+    n_uniform_fallbacks: int = 0
+    n_breaker_trips: int = 0
+    n_breaker_probes: int = 0
+    n_breaker_recoveries: int = 0
     latencies_ms: list = field(default_factory=list)
+    _lock: threading.Lock = field(
+        init=False, repr=False, compare=False, default_factory=threading.Lock
+    )
+
+    def bump(self, name: str, k: int = 1) -> None:
+        with self._lock:
+            setattr(self, name, getattr(self, name) + k)
+
+    def note_latency(self, ms: float) -> None:
+        with self._lock:
+            self.latencies_ms.append(ms)
 
     @property
     def hit_rate(self) -> float:
@@ -70,10 +127,17 @@ class ServeStats:
         served = self.n_hits + self.n_coalesced
         return served / self.n_requests if self.n_requests else 0.0
 
+    @property
+    def n_degraded(self) -> int:
+        """Requests answered from the ladder instead of a fresh solve."""
+        return self.n_stale_served + self.n_uniform_fallbacks
+
     def latency_ms(self, q: float) -> float:
-        if not self.latencies_ms:
+        with self._lock:
+            lat = np.asarray(self.latencies_ms)
+        if lat.size == 0:
             return 0.0
-        return float(np.percentile(np.asarray(self.latencies_ms), q))
+        return float(np.percentile(lat, q))
 
     def snapshot(self) -> dict:
         return {
@@ -83,6 +147,14 @@ class ServeStats:
             "n_solves": self.n_solves,
             "n_invalidations": self.n_invalidations,
             "n_evictions": self.n_evictions,
+            "n_solve_errors": self.n_solve_errors,
+            "n_retries": self.n_retries,
+            "n_deadline_misses": self.n_deadline_misses,
+            "n_stale_served": self.n_stale_served,
+            "n_uniform_fallbacks": self.n_uniform_fallbacks,
+            "n_breaker_trips": self.n_breaker_trips,
+            "n_breaker_probes": self.n_breaker_probes,
+            "n_breaker_recoveries": self.n_breaker_recoveries,
             "hit_rate": self.hit_rate,
             "p50_ms": self.latency_ms(50),
             "p99_ms": self.latency_ms(99),
@@ -107,9 +179,23 @@ class PolicyServer:
         quant: float = 0.05,
         cache_size: int = 256,
         sweep: str = "serial",
+        deadline_ms: float | None = None,
+        max_retries: int = 2,
+        backoff_ms: float = 1.0,
+        breaker_threshold: int = 3,
+        breaker_probe_every: int = 8,
+        chaos=None,
     ):
         if sweep not in ("serial", "batched"):
             raise ValueError(f"unknown sweep mode {sweep!r}")
+        if deadline_ms is not None and not deadline_ms > 0:
+            raise ValueError(f"deadline_ms must be > 0, got {deadline_ms}")
+        if max_retries < 0 or backoff_ms < 0:
+            raise ValueError("max_retries and backoff_ms must be >= 0")
+        if breaker_threshold < 1 or breaker_probe_every < 1:
+            raise ValueError(
+                "breaker_threshold and breaker_probe_every must be >= 1"
+            )
         self.alpha = float(alpha)
         self.K = int(K)
         self.R = int(R)
@@ -117,12 +203,28 @@ class PolicyServer:
         self.quant = float(quant)
         self.cache_size = int(cache_size)
         self.sweep = sweep
+        self.deadline_ms = None if deadline_ms is None else float(deadline_ms)
+        self.max_retries = int(max_retries)
+        self.backoff_ms = float(backoff_ms)
+        self.breaker_threshold = int(breaker_threshold)
+        self.breaker_probe_every = int(breaker_probe_every)
+        self.chaos = chaos  # scenarios.chaos.ChaosInjector (solver channels)
         self.stats = ServeStats()
         self._lock = threading.Lock()
         self._cache: OrderedDict = OrderedDict()  # key -> PolicyResult
         self._warm: dict = {}          # conn_key -> BasisState
         self._tenant_conn: dict = {}   # tenant -> conn_key (PR-5 rule)
         self._inflight: dict = {}      # key -> threading.Event
+        self._last_good: dict = {}     # conn_key -> last fresh PolicyResult
+        self._inval_epoch: dict = {}   # conn_key -> invalidation counter
+        self._consec_failures = 0
+        self._breaker_open = False
+        self._probe_tick = 0
+
+    @property
+    def breaker_open(self) -> bool:
+        with self._lock:
+            return self._breaker_open
 
     # -- request path -------------------------------------------------------
     def _normalize(self, T, d):
@@ -181,10 +283,17 @@ class PolicyServer:
 
     def _invalidate_locked(self, ck) -> None:
         self._warm.pop(ck, None)
+        # Stale-while-revalidate must respect the same rule: a last-good
+        # result for a changed edge set has the wrong layout — drop it
+        # (the ladder then falls through to the uniform policy).
+        self._last_good.pop(ck, None)
+        # Epoch bump: a solve that started before this invalidation must
+        # not insert its (stale-layout) result when it finishes.
+        self._inval_epoch[ck] = self._inval_epoch.get(ck, 0) + 1
         stale = [k for k in self._cache if k[1] == ck]
         for k in stale:
             del self._cache[k]
-        self.stats.n_invalidations += 1
+        self.stats.bump("n_invalidations")
 
     def invalidate(self, d) -> None:
         """Explicitly drop cache + warm basis for connectivity ``d``."""
@@ -203,12 +312,140 @@ class PolicyServer:
         )
         return res
 
+    # -- degradation ladder (module docstring) -------------------------------
+    def _solve_guarded(self, Tq, d, ck, t0: float, max_retries: int):
+        """Bounded-retry solve under the deadline.
+
+        Returns the fresh ``PolicyResult`` or None when the retry budget
+        or the deadline is exhausted.  Backoff and chaos-injected latency
+        are charged *virtually* against the deadline (never slept), so
+        the ladder is deterministic under test; real wall time counts too.
+        """
+        charged_ms = 0.0
+
+        def over_deadline() -> bool:
+            if self.deadline_ms is None:
+                return False
+            spent = (time.perf_counter() - t0) * 1e3 + charged_ms
+            return spent > self.deadline_ms
+
+        for attempt in range(max_retries + 1):
+            if self.chaos is not None:
+                charged_ms += self.chaos.injected_delay_ms()
+            try:
+                if self.chaos is not None:
+                    self.chaos.maybe_fail_solver()
+                res = self._solve(Tq, d, ck)
+            except Exception:
+                self.stats.bump("n_solve_errors")
+                res = None
+            if res is not None:
+                # A late success is still served (the fresh result is in
+                # hand; stale would be strictly worse) — but the miss is
+                # counted: the deadline's job is bounding the retry tail.
+                if over_deadline():
+                    self.stats.bump("n_deadline_misses")
+                return res
+            if over_deadline():
+                self.stats.bump("n_deadline_misses")
+                return None
+            if attempt < max_retries:
+                self.stats.bump("n_retries")
+                charged_ms += self.backoff_ms * (2.0 ** attempt)
+        return None
+
+    def _degraded(self, d, ck) -> PolicyResult:
+        """Stale-while-revalidate, then the uniform fallback (never cached,
+        never an exception — the caller always gets a usable policy)."""
+        with self._lock:
+            stale = self._last_good.get(ck)
+        if stale is not None:
+            self.stats.bump("n_stale_served")
+            return stale
+        self.stats.bump("n_uniform_fallbacks")
+        P = uniform_policy(d)
+        rho = 0.25 / self.alpha / max(1.0, d.sum(axis=1).max())
+        # T_convergence=inf => PolicyResult.ok is False: the degraded
+        # marker callers and tests key off.
+        return PolicyResult(P, rho, 0.0, 1.0, float("inf"))
+
+    def _breaker_gate(self) -> str:
+        """'closed' = solve normally, 'probe' = one no-retry attempt,
+        'short' = short-circuit straight to the degraded ladder."""
+        with self._lock:
+            if not self._breaker_open:
+                return "closed"
+            self._probe_tick += 1
+            if self._probe_tick >= self.breaker_probe_every:
+                self._probe_tick = 0
+                probe = True
+            else:
+                probe = False
+        if probe:
+            self.stats.bump("n_breaker_probes")
+            return "probe"
+        return "short"
+
+    def _note_solve_outcome(self, success: bool) -> None:
+        tripped = recovered = False
+        with self._lock:
+            if success:
+                self._consec_failures = 0
+                if self._breaker_open:
+                    self._breaker_open = False
+                    recovered = True
+            else:
+                self._consec_failures += 1
+                if (not self._breaker_open
+                        and self._consec_failures >= self.breaker_threshold):
+                    self._breaker_open = True
+                    self._probe_tick = 0
+                    tripped = True
+        if tripped:
+            self.stats.bump("n_breaker_trips")
+        if recovered:
+            self.stats.bump("n_breaker_recoveries")
+
+    def _serve_miss(self, Tq, d, ck, t0, cache_key=None, epoch=None):
+        """One cache miss through breaker -> guarded solve -> ladder.
+
+        ``cache_key``/``epoch`` are set only for the in-flight owner: the
+        fresh result is inserted unless the key's invalidation epoch moved
+        while the solve ran (a concurrent ``invalidate`` must win — its
+        caller's edge set changed, so the just-solved layout is stale).
+        Coalesced waiters falling through a degraded owner pass None and
+        never populate the cache.  Degraded results are never cached.
+        """
+        gate = self._breaker_gate()
+        if gate == "short":
+            return self._degraded(d, ck)
+        retries = 0 if gate == "probe" else self.max_retries
+        res = self._solve_guarded(Tq, d, ck, t0, retries)
+        self._note_solve_outcome(res is not None)
+        if res is None:
+            return self._degraded(d, ck)
+        self.stats.bump("n_solves")
+        with self._lock:
+            fresh = self._inval_epoch.get(ck, 0) == epoch
+            if cache_key is not None and fresh:
+                if res.basis is not None:
+                    self._warm[ck] = res.basis
+                self._last_good[ck] = res
+                self._cache[cache_key] = res
+                self._cache.move_to_end(cache_key)
+                while len(self._cache) > self.cache_size:
+                    self._cache.popitem(last=False)
+                    self.stats.bump("n_evictions")
+        return res
+
     def request(self, T, d=None, tenant=None) -> PolicyResult:
-        """Serve one policy request (blocking; thread-safe).
+        """Serve one policy request (blocking; thread-safe; total).
 
         ``tenant`` (optional, hashable) enables the edge-set-change
         invalidation rule; anonymous requests only read/populate the
-        cache.
+        cache.  *Total*: solver failures (real or chaos-injected) never
+        escape — the degradation ladder answers instead (module
+        docstring), and ``ServeStats`` records which rung did.
         """
         t0 = time.perf_counter()
         T, d = self._normalize(T, d)
@@ -217,50 +454,38 @@ class PolicyServer:
         key = self._key(Tq, d, ck)
         wait_ev = None
         with self._lock:
-            self.stats.n_requests += 1
+            self.stats.bump("n_requests")
             self._note_tenant(tenant, ck)
             hit = self._cache.get(key)
             if hit is not None:
                 self._cache.move_to_end(key)
-                self.stats.n_hits += 1
-                self.stats.latencies_ms.append(
-                    (time.perf_counter() - t0) * 1e3
-                )
+                self.stats.bump("n_hits")
+                self.stats.note_latency((time.perf_counter() - t0) * 1e3)
                 return hit
             wait_ev = self._inflight.get(key)
             if wait_ev is None:
                 self._inflight[key] = threading.Event()
+                epoch = self._inval_epoch.get(ck, 0)
         if wait_ev is not None:
             # Another thread is already solving this exact key: coalesce.
             wait_ev.wait()
+            self.stats.bump("n_coalesced")
             with self._lock:
-                self.stats.n_coalesced += 1
                 res = self._cache.get(key)
-                self.stats.latencies_ms.append(
-                    (time.perf_counter() - t0) * 1e3
-                )
-            if res is not None:
-                return res
-            # Solver owner failed to cache (infeasible edge case): fall
-            # through and solve independently.
-            return self._solve(Tq, d, ck)
+            if res is None:
+                # The owner degraded (or an invalidation raced its insert):
+                # walk the guarded ladder ourselves — never the raw solver.
+                res = self._serve_miss(Tq, d, ck, time.perf_counter())
+            self.stats.note_latency((time.perf_counter() - t0) * 1e3)
+            return res
         try:
-            res = self._solve(Tq, d, ck)
-            with self._lock:
-                self.stats.n_solves += 1
-                if res.basis is not None:
-                    self._warm[ck] = res.basis
-                self._cache[key] = res
-                self._cache.move_to_end(key)
-                while len(self._cache) > self.cache_size:
-                    self._cache.popitem(last=False)
-                    self.stats.n_evictions += 1
+            res = self._serve_miss(Tq, d, ck, t0, cache_key=key, epoch=epoch)
         finally:
             with self._lock:
                 ev = self._inflight.pop(key, None)
             if ev is not None:
                 ev.set()
-        self.stats.latencies_ms.append((time.perf_counter() - t0) * 1e3)
+        self.stats.note_latency((time.perf_counter() - t0) * 1e3)
         return res
 
     def request_many(self, requests) -> list[PolicyResult]:
@@ -282,9 +507,9 @@ class PolicyServer:
         out: list = [None] * len(prepared)
         for i, (key, Tq, d, ck, tenant) in enumerate(prepared):
             if key in first_of:
+                self.stats.bump("n_requests")
+                self.stats.bump("n_coalesced")
                 with self._lock:
-                    self.stats.n_requests += 1
-                    self.stats.n_coalesced += 1
                     self._note_tenant(tenant, ck)
                 out[i] = first_of[key]
                 continue

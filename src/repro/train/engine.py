@@ -89,10 +89,9 @@ from repro.core.monitor import IterationTimeEMA
 from repro.scenarios.driver import (
     apply_action,
     attempt_fails,
-    monitor_reach,
+    monitor_boundary,
     notify_monitor,
     prepare_monitor,
-    publish_policy,
 )
 from repro.scenarios.timeline import ScenarioCursor
 from repro.train import simulator as _sim
@@ -909,23 +908,25 @@ def run_batched(
         # loop fires them after the boundary event (Monitor first, then the
         # periodic evaluation) ----
         if monitor is not None and t_last >= next_monitor:
-            # Same home-pinned-Monitor semantics as the reference loop
-            # (scenarios/driver): parity demands identical reach decisions.
-            reach = monitor_reach(monitor, link_model, t_last)
-            monitor.collect(
-                {j: emas[j].snapshot() for j in range(M)
-                 if j in active and (reach is None or reach[0][j])}
+            # The whole wake — failover, chaos, collect, step, publish —
+            # is one shared function (scenarios/driver.monitor_boundary):
+            # parity demands identical decisions, so both loops make them
+            # through identical code at identical virtual times.
+            pol = monitor_boundary(
+                monitor, algo, state, link_model, emas, active, t_last,
+                chaos=cfg.chaos,
             )
-            pol = monitor.step()
-            publish_policy(algo, state, pol,
-                           None if reach is None else reach[1])
-            res.policy_updates += 1
-            res.policy_log.append((t_last, pol.rho, pol.P.copy()))
+            if pol is not None:
+                res.policy_updates += 1
+                res.policy_log.append((t_last, pol.rho, pol.P.copy()))
             next_monitor += monitor.schedule_period
         if ev_last % record_every == 0:
             eval_now(t_last, ev_last)
 
     eval_now(t, ev)
+    if monitor is not None and monitor.failover is not None:
+        res.leader_log = list(monitor.failover.leader_log)
+        res.skipped_refreshes = monitor.failover.n_skipped_refreshes
     res.engine = "batched"
     return res
 

@@ -52,10 +52,9 @@ from repro.core.nettime import LinkTimeModel
 from repro.scenarios.driver import (
     apply_action,
     attempt_fails,
-    monitor_reach,
+    monitor_boundary,
     notify_monitor,
     prepare_monitor,
-    publish_policy,
 )
 from repro.scenarios.timeline import ScenarioCursor
 from repro.train.elastic import reseed_replica
@@ -127,6 +126,22 @@ class SimConfig:
     # land on reachable workers — the far side keeps training on its stale
     # policy.  None = legacy omniscient Monitor (bit-identical to history).
     monitor_home_cluster: int | None = None
+    # Standby-Monitor failover (DESIGN.md §18): one standby per cluster,
+    # heartbeat leases, deterministic re-election when the home cluster is
+    # gone.  Requires monitor_home_cluster (an omniscient Monitor has no
+    # home to fail over from).  Off = PR-7 behavior, bit-identical.
+    monitor_failover: bool = False
+    # Lease length in schedule periods, and the election quorum (None =
+    # majority of clusters; small test topologies with 2 clusters need an
+    # explicit quorum=1 because the single standby can never be a majority).
+    monitor_lease_periods: float = 1.0
+    monitor_quorum: int | None = None
+    # Control-plane fault injection (scenarios.chaos.ChaosInjector): dropped
+    # EMA reports and lost policy publishes, decided once per wake inside
+    # the shared monitor_boundary — so engine parity survives chaos.  The
+    # injector is stateful (rng streams advance per call); pass a fresh one
+    # per run when comparing runs.
+    chaos: object | None = None
     ema_beta: float = 0.5
     policy_K: int = 8
     policy_R: int = 8
@@ -190,6 +205,12 @@ class SimResult:
     # (t, rho, P) — the bench suite reads time-to-reroute off these.
     failed_pulls: list = field(default_factory=list)
     policy_log: list = field(default_factory=list)
+    # Failover telemetry (monitor_failover=True): every leadership change
+    # as (t, new leader cluster), and how many scheduled refreshes were
+    # skipped because no live leader held the control plane.  Identical
+    # across engines (the shared monitor_boundary makes every decision).
+    leader_log: list = field(default_factory=list)
+    skipped_refreshes: int = 0
     # Per-event trace stream (SimConfig.trace; repro.trace): one tuple
     # ``(t_start, duration, src, dst, kind, comm, compute, net)`` per event
     # in pop order — kind in {"pull", "local", "timeout"} for async events
@@ -417,21 +438,22 @@ def simulate(
         # Network Monitor wakes every T_s (period owned by the Monitor) or
         # at an out-of-schedule failure-triggered refresh.
         if monitor is not None and t >= next_monitor:
-            # A home-pinned Monitor only hears reachable workers and only
-            # reaches them back; reach=None is the legacy omniscient path.
-            reach = monitor_reach(monitor, link_model, t)
-            monitor.collect(
-                {j: emas[j].snapshot() for j in range(M)
-                 if j in active and (reach is None or reach[0][j])}
+            # Failover tick + chaos + collect + step + publish, shared with
+            # the batched loop (scenarios/driver); None = refresh skipped
+            # because the leader's cluster is dead and no quorum elected.
+            pol = monitor_boundary(
+                monitor, algo, state, link_model, emas, active, t,
+                chaos=cfg.chaos,
             )
-            pol = monitor.step()
-            publish_policy(algo, state, pol,
-                           None if reach is None else reach[1])
-            res.policy_updates += 1
-            res.policy_log.append((t, pol.rho, pol.P.copy()))
+            if pol is not None:
+                res.policy_updates += 1
+                res.policy_log.append((t, pol.rho, pol.P.copy()))
             next_monitor += monitor.schedule_period
 
         if ev % record_every == 0:
             eval_now(t, ev)
     eval_now(t, ev)
+    if monitor is not None and monitor.failover is not None:
+        res.leader_log = list(monitor.failover.leader_log)
+        res.skipped_refreshes = monitor.failover.n_skipped_refreshes
     return res

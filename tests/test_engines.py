@@ -82,6 +82,10 @@ def _assert_parity(ref, bat, loss_tol=5e-4):
     for (ta, ra, Pa), (tb, rb, Pb) in zip(ref.policy_log, bat.policy_log):
         assert ta == tb and ra == rb
         np.testing.assert_array_equal(Pa, Pb)
+    # Failover telemetry rides the shared monitor_boundary: every election
+    # and every skipped refresh must match exactly ([] / 0 when disabled).
+    assert bat.leader_log == ref.leader_log
+    assert bat.skipped_refreshes == ref.skipped_refreshes
     np.testing.assert_allclose(bat.losses, ref.losses, rtol=loss_tol, atol=loss_tol)
     np.testing.assert_allclose(bat.accs, ref.accs, atol=0.02)
 
@@ -552,3 +556,30 @@ def test_batched_faster_dispatch_count(data):
     bat = _sim("netmax", "batched", data, M=16, events=800, record_every=800,
                monitor_period=1e9)
     assert bat.cohorts <= 800 / 2  # at least 2x fewer dispatches than events
+
+
+def test_engine_parity_storm_failover_chaos(data):
+    """PR-9 robustness parity: a cascading storm kills the Monitor's home
+    cluster, failover elects a standby, and chaos drops reports / loses
+    publishes — every one of those decisions is host-side state made in
+    the shared monitor_boundary, so both engines must agree exactly,
+    election times and all."""
+    from repro.scenarios import ChaosInjector, storm
+
+    topo = Topology(12, workers_per_host=2, hosts_per_pod=2,
+                    pods_per_cluster=1)  # 3 clusters of 4
+    tl = storm(topo, seed=7, horizon=60.0, intensity=2.0,
+               trigger_cluster=0, trigger_time=0.8, worker_blips=True)
+    kw = dict(M=12, topo=topo, scenario=tl, events=500, monitor_period=0.4,
+              monitor_home_cluster=0, monitor_failover=True)
+    # One injector per run: its rng streams advance per call, so sharing
+    # an instance across the two runs would desynchronize them.
+    ref = _sim("netmax", "reference", data,
+               chaos=ChaosInjector(seed=11, report_drop_rate=0.15,
+                                   publish_delay_rate=0.15), **kw)
+    bat = _sim("netmax", "batched", data,
+               chaos=ChaosInjector(seed=11, report_drop_rate=0.15,
+                                   publish_delay_rate=0.15), **kw)
+    _assert_parity(ref, bat)
+    assert ref.leader_log, "the storm never forced an election"
+    assert ref.failed_pulls  # the storm actually bit

@@ -45,20 +45,25 @@ def fleet_topo(M):
 
 
 def rich_timeline(topo, seed=0, horizon=10.0):
-    """Outages (all three directions), degrades, and churn in one timeline."""
+    """Outages (all three directions), degrades, and churn in one timeline.
+
+    Windows and degrade links are chosen overlap-free per failure domain
+    (compile() now rejects same-domain overlap): the directed out/in cuts
+    may share a window (different directed domains), the symmetric cut
+    gets its own, and degrade links are distinct unordered pairs.
+    """
     M = topo.n_workers
     rng = np.random.default_rng(seed)
     ev = [
         ClusterOutage(0, 1.0, 4.0, direction="out"),
         ClusterOutage(topo.n_clusters - 1, 2.0, 6.0, direction="in"),
-        ClusterOutage(min(1, topo.n_clusters - 1), 3.0, 5.0),
+        ClusterOutage(min(1, topo.n_clusters - 1), 6.5, 8.0),
     ]
-    for _ in range(4):
-        i = int(rng.integers(M))
-        m = int(rng.integers(M - 1))
-        m = m if m < i else m + 1
+    iu, ju = np.triu_indices(M, 1)
+    for k in rng.choice(len(iu), size=4, replace=False):
         t0 = float(rng.uniform(0, horizon / 2))
-        ev.append(LinkDegrade(i, m, t0, t0 + 2.0, float(rng.uniform(2, 50))))
+        ev.append(LinkDegrade(int(iu[k]), int(ju[k]), t0, t0 + 2.0,
+                              float(rng.uniform(2, 50))))
     w = int(rng.integers(1, M))
     ev += [WorkerLeave(w, 1.5), WorkerRejoin(w, 7.0)]
     return Timeline(ev)
@@ -328,3 +333,46 @@ def test_shard_workers_rejects_unsupported_shapes():
                     lr=0.05, seed=0, engine="batched", shard_workers=True)
     with pytest.raises(ValueError, match="gossip"):
         simulate(cfg, link, x, y, parts, ex, ey, record_every=50)
+
+
+@pytest.mark.slow
+def test_fleet_storm_smoke_m1024():
+    """Fleet-sized cascading storm (PR 9): the federated-cohorts churn
+    pattern composed with a storm timeline (worker_blips=False — the
+    cohort preset owns worker churn) at M=1024.  Pins that the EventHeap's
+    lazy invalidation and the O(M) link state survive a storm's boundary
+    density: the run completes, learns, and stays inside the same host
+    peak budget as the quiet fleet smoke."""
+    import tracemalloc
+
+    from repro.scenarios import storm
+
+    M, events = 1024, 1500
+    topo = fleet_topo(M)
+    x, y, ex, ey = train_eval_split(4000, 800, 32, 10, seed=0)
+    parts = uniform_partition(len(y), M, seed=0)
+    cohorts = presets.federated_cohorts(topo, seed=1, horizon=40.0, rounds=4,
+                                        cohort_size=256, carryover=8)
+    blast = storm(topo, seed=9, horizon=40.0, intensity=5.0,
+                  trigger_cluster=0, trigger_time=1.0, worker_blips=False)
+    tl = Timeline(list(cohorts.events) + list(blast.events))
+    link = LinkTimeModel(topo, jitter=0.02, seed=5, scenario=tl,
+                         dead_link_timeout=5.0)
+    n_seg = len(link.compiled_scenario.segments)
+    assert n_seg > 10  # the storm produced real boundary density
+    cfg = SimConfig(algorithm="adpsgd", n_workers=M, total_events=events,
+                    lr=0.05, batch_size=16, seed=0, engine="batched")
+    tracemalloc.start()
+    res = simulate(cfg, link, x, y, parts, ex, ey, record_every=events)
+    _, peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    assert res.events[-1] == events
+    assert np.isfinite(res.losses[-1])
+    assert res.failed_pulls  # the storm actually bit the active cohort
+    # O(M) per segment: a storm's boundary density multiplies segments,
+    # not the per-segment footprint — the compiled state must stay far
+    # below one dense (M, M) mask *per segment*.
+    assert link.link_state_nbytes() * 20 < n_seg * M * M * 9
+    # Same host-peak budget as the quiet M=1024 smoke: a storm must not
+    # change the memory class of the run.
+    assert peak < 300 * 1024 * 1024, f"host peak {peak / 1e6:.0f} MB"

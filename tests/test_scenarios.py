@@ -704,3 +704,325 @@ def test_event_heap_rejoin_with_equal_time_is_not_shadowed():
     assert len(h) == 1
     assert h.pop() == (1.0, 3)
     assert not h and h.peek_time() == float("inf")
+
+
+# --------------------------------------------------------------------------
+# Compile-time validation hardening (PR 9 satellite): same-domain overlap,
+# negative times, and reseed-source range checks fail loudly at compile
+# --------------------------------------------------------------------------
+
+
+def test_compile_rejects_same_domain_overlap():
+    topo = two_cluster_topo()
+    with pytest.raises(ValueError, match="overlapping same-domain"):
+        Timeline(
+            [ClusterOutage(1, 1.0, 3.0), ClusterOutage(1, 2.0, 4.0)]
+        ).compile(topo)
+    with pytest.raises(ValueError, match="overlapping same-domain"):
+        Timeline(
+            [LinkDegrade(0, 2, 1.0, 3.0, 8.0), LinkDegrade(0, 2, 2.5, 5.0, 4.0)]
+        ).compile(topo)
+    # A symmetric degrade occupies both directions: the reverse link in an
+    # overlapping window collides with it.
+    with pytest.raises(ValueError, match="overlapping same-domain"):
+        Timeline(
+            [LinkDegrade(0, 2, 1.0, 3.0, 8.0),
+             LinkDegrade(2, 0, 2.0, 5.0, 4.0, symmetric=False)]
+        ).compile(topo)
+
+
+def test_compile_allows_disjoint_and_distinct_domains():
+    topo = two_cluster_topo()
+    # Half-open windows may abut: [1, 3) then [3, 4) on the same cluster.
+    Timeline(
+        [ClusterOutage(1, 1.0, 3.0), ClusterOutage(1, 3.0, 4.0)]
+    ).compile(topo)
+    # Opposite directions of the same cluster are distinct failure domains.
+    Timeline(
+        [ClusterOutage(1, 1.0, 3.0, direction="out"),
+         ClusterOutage(1, 2.0, 4.0, direction="in")]
+    ).compile(topo)
+    # Distinct directed links are distinct domains even between the same
+    # endpoints.
+    Timeline(
+        [LinkDegrade(0, 2, 1.0, 3.0, 8.0, symmetric=False),
+         LinkDegrade(2, 0, 2.0, 5.0, 4.0, symmetric=False)]
+    ).compile(topo)
+
+
+def test_compile_rejects_negative_times_and_bad_seed_from():
+    topo = two_cluster_topo()
+    with pytest.raises(ValueError, match="0 <= start"):
+        Timeline([ClusterOutage(1, -1.0, 3.0)]).compile(topo)
+    with pytest.raises(ValueError, match="0 <= start"):
+        Timeline([LinkDegrade(0, 2, -0.5, 3.0, 8.0)]).compile(topo)
+    with pytest.raises(ValueError, match="time invalid"):
+        Timeline([WorkerLeave(3, -0.5), WorkerRejoin(3, 1.0)]).compile(topo)
+    with pytest.raises(ValueError, match="seed_from"):
+        Timeline([WorkerLeave(3, 1.0), WorkerRejoin(3, 2.0, 99)]).compile(topo)
+    with pytest.raises(ValueError, match="seed_from"):
+        # A worker must not reseed from itself.
+        Timeline([WorkerLeave(3, 1.0), WorkerRejoin(3, 2.0, 3)]).compile(topo)
+
+
+def test_random_timeline_rejects_bad_knobs():
+    topo = two_cluster_topo()
+    with pytest.raises(ValueError, match="horizon"):
+        presets.random_timeline(topo, seed=0, horizon=-5.0)
+    with pytest.raises(ValueError, match="n_outages"):
+        presets.random_timeline(topo, seed=0, horizon=10.0, n_outages=-1)
+    with pytest.raises(ValueError, match="outage_len"):
+        presets.random_timeline(topo, seed=0, horizon=10.0,
+                                outage_len=(5.0, 1.0))
+    with pytest.raises(ValueError, match="degrade_factor"):
+        presets.random_timeline(topo, seed=0, horizon=10.0,
+                                degrade_factor=(0.0, 2.0))
+
+
+def test_random_timeline_always_compiles_overlap_free():
+    """Generation redraws colliding windows, so every seed compiles."""
+    topo = two_cluster_topo()
+    for seed in range(12):
+        presets.random_timeline(
+            topo, seed=seed, horizon=30.0, n_outages=4, n_degrades=6,
+            n_churn=3,
+        ).compile(topo)
+
+
+# --------------------------------------------------------------------------
+# Cascading-storm hazard process (PR 9 tentpole): seeded Hawkes generator
+# --------------------------------------------------------------------------
+
+
+def four_cluster_topo(M=16):
+    return Topology(M, workers_per_host=2, hosts_per_pod=2, pods_per_cluster=1)
+
+
+def test_storm_deterministic_and_compiles():
+    from repro.scenarios import storm
+
+    topo = four_cluster_topo()
+    a = storm(topo, seed=3, horizon=400.0, intensity=2.0)
+    b = storm(topo, seed=3, horizon=400.0, intensity=2.0)
+    assert a.events == b.events
+    assert storm(topo, seed=4, horizon=400.0, intensity=2.0).events != a.events
+    comp = a.compile(topo)  # generation is overlap-free by construction
+    assert list(comp.boundaries) == sorted(comp.boundaries)
+
+
+def test_storm_trigger_plants_the_first_strike():
+    from repro.scenarios import storm
+
+    topo = four_cluster_topo()
+    tl = storm(topo, seed=0, horizon=300.0, trigger_cluster=1,
+               trigger_time=5.0)
+    strikes = [e for e in tl.events
+               if isinstance(e, ClusterOutage) and e.cluster == 1
+               and e.start == 5.0]
+    assert len(strikes) == 1
+    tl.compile(topo)
+
+
+def test_hazard_excitation_cascades_from_the_trigger():
+    """With all base rates zero, every event after the trigger is pure
+    cascade — the self-exciting part demonstrably fires."""
+    from repro.scenarios import hazard_timeline
+
+    topo = four_cluster_topo()
+    quiet = hazard_timeline(
+        topo, seed=1, horizon=300.0,
+        base_cluster_rate=0.0, base_degrade_rate=0.0, base_worker_rate=0.0,
+    )
+    assert not quiet.events
+    stormy = hazard_timeline(
+        topo, seed=1, horizon=300.0,
+        base_cluster_rate=0.0, base_degrade_rate=0.0, base_worker_rate=0.0,
+        excite_spread=2.0, excite_links=2.0, excite_workers=0.0,
+        trigger_cluster=0, trigger_time=1.0,
+    )
+    cascade = [e for e in stormy.events
+               if not (isinstance(e, ClusterOutage) and e.start == 1.0)]
+    assert cascade, "excitation produced no follow-up events"
+    stormy.compile(topo)
+
+
+def test_storm_worker_blips_off_emits_no_churn():
+    from repro.scenarios import storm
+
+    topo = four_cluster_topo()
+    tl = storm(topo, seed=2, horizon=400.0, intensity=3.0,
+               worker_blips=False)
+    assert not any(isinstance(e, (WorkerLeave, WorkerRejoin))
+                   for e in tl.events)
+    assert tl.events  # the storm itself still happened
+
+
+def test_storm_event_cap_and_bad_intensity():
+    from repro.scenarios import storm
+
+    topo = four_cluster_topo()
+    tl = storm(topo, seed=5, horizon=5000.0, intensity=10.0, max_events=20)
+    # Each fired hazard emits at most 2 timeline events (leave+rejoin).
+    assert len(tl.events) <= 41  # 2 * max_events + the forced trigger
+    with pytest.raises(ValueError, match="intensity"):
+        storm(topo, seed=0, horizon=10.0, intensity=0.0)
+
+
+# --------------------------------------------------------------------------
+# Monitor failover (PR 9 tentpole): heartbeat leases, deterministic
+# election, degraded mode when no quorum
+# --------------------------------------------------------------------------
+
+
+def three_cluster_topo(M=12):
+    return Topology(M, workers_per_host=2, hosts_per_pod=2, pods_per_cluster=1)
+
+
+def test_failover_tick_elects_lowest_reachable_standby():
+    from repro.core.monitor import MonitorFailover
+    from repro.scenarios.driver import failover_tick
+
+    topo = three_cluster_topo()
+    comp = Timeline([ClusterOutage(0, 1.0, 50.0)]).compile(topo)
+    mon = _monitor(topo, M=12, home_cluster=0, schedule_period=1.0,
+                   failover=MonitorFailover())
+
+    def seg(t):
+        return comp.segments[comp.segment_index(t)]
+
+    # Healthy wake: the leader renews every standby's lease.
+    assert failover_tick(mon, seg(0.5), 0.5)
+    assert mon.failover.last_heartbeat == {0: 0.5, 1: 0.5, 2: 0.5}
+    # First partitioned wake: leases still fresh, no election yet.
+    assert failover_tick(mon, seg(1.2), 1.2)
+    assert mon.home_cluster == 0 and mon.failover.n_failovers == 0
+    # Leases expired: both standbys elect; the lowest-id candidate wins
+    # with 2 votes >= the majority quorum (3 clusters -> 2).
+    assert failover_tick(mon, seg(2.2), 2.2)
+    assert mon.home_cluster == 1
+    assert mon.failover.n_failovers == 1
+    assert mon.failover.leader_log == [(2.2, 1)]
+    # Stable afterwards: the new leader renews reachable standbys, the
+    # partitioned old home is WAN-cut and ineligible — no flapping.
+    assert failover_tick(mon, seg(3.2), 3.2)
+    assert failover_tick(mon, seg(4.2), 4.2)
+    assert mon.failover.n_failovers == 1
+
+
+def test_failover_handoff_drops_soft_state():
+    """adopt_leader resets the EMA matrix, missed counters, warm basis,
+    and failure evidence — all of it was collected at the old vantage."""
+    from repro.core.monitor import MonitorFailover
+
+    mon = _monitor(three_cluster_topo(), M=12, home_cluster=0,
+                   failover=MonitorFailover())
+    mon.collect({i: np.full(12, 2.0) for i in range(12)})
+    mon.notify_failure(4, 1, 1.0)
+    mon._basis, mon._basis_key = object(), b"stale"
+    mon.adopt_leader(2, now=7.0)
+    assert mon.home_cluster == 2
+    assert not mon._T.any() and not mon._missed.any()
+    assert mon._basis is None and mon._basis_key is None
+    assert not mon._fail_links and mon._fail_wake is None
+    assert mon.failover.leader_log == [(7.0, 2)]
+    assert all(hb == 7.0 for hb in mon.failover.last_heartbeat.values())
+
+
+def test_failover_no_quorum_single_standby():
+    """Two clusters: the lone standby can never reach the default majority
+    quorum (split-brain guard); an explicit quorum=1 opts in."""
+    from repro.core.monitor import MonitorFailover
+    from repro.scenarios.driver import failover_tick
+
+    topo = two_cluster_topo()
+    comp = Timeline([ClusterOutage(0, 1.0, 50.0)]).compile(topo)
+    seg = comp.segments[comp.segment_index(2.0)]
+
+    mon = _monitor(topo, home_cluster=0, schedule_period=1.0,
+                   failover=MonitorFailover())
+    # The home cluster is alive (WAN-cut, not dead): the refresh proceeds
+    # from the partitioned vantage even though no election is possible.
+    assert failover_tick(mon, seg, 5.0)
+    assert mon.home_cluster == 0 and mon.failover.n_failovers == 0
+
+    mon = _monitor(topo, home_cluster=0, schedule_period=1.0,
+                   failover=MonitorFailover(quorum=1))
+    assert failover_tick(mon, seg, 5.0)
+    assert mon.home_cluster == 1 and mon.failover.n_failovers == 1
+
+
+def test_failover_dead_home_and_no_quorum_skips_refresh():
+    """Churn empties the home cluster and the quorum is unreachable: the
+    wake is skipped (degraded mode), and counted."""
+    from repro.core.monitor import MonitorFailover
+    from repro.scenarios.driver import failover_tick
+
+    topo = two_cluster_topo()
+    comp = Timeline(
+        [WorkerLeave(w, 1.0) for w in range(4)]  # cluster 0 empties out
+    ).compile(topo)
+    seg = comp.segments[comp.segment_index(2.0)]
+    mon = _monitor(topo, home_cluster=0, schedule_period=1.0,
+                   failover=MonitorFailover())  # majority quorum = 2
+    assert not failover_tick(mon, seg, 5.0)
+    assert mon.failover.n_skipped_refreshes == 1
+    # quorum=1: the surviving cluster's standby takes over instead.
+    mon = _monitor(topo, home_cluster=0, schedule_period=1.0,
+                   failover=MonitorFailover(quorum=1))
+    assert failover_tick(mon, seg, 5.0)
+    assert mon.home_cluster == 1
+
+
+def test_prepare_monitor_failover_requires_home():
+    from repro.core.monitor import MonitorFailover
+    from repro.scenarios.driver import prepare_monitor
+
+    topo = two_cluster_topo()
+    link = LinkTimeModel(topo, seed=0)
+    mon = _monitor(topo, failover=MonitorFailover())
+    with pytest.raises(ValueError, match="home"):
+        prepare_monitor(mon, link)
+
+
+def test_failover_reroutes_what_a_pinned_monitor_never_does(sim_data):
+    """The PR's acceptance scenario: an outage kills the Monitor's home
+    cluster.  Without failover the far side hammers the dead cluster to
+    the end of the run; with failover a standby is elected and the dead
+    domain is routed around within two refreshes of the election."""
+    from repro.data.partition import uniform_partition
+    from repro.train.simulator import SimConfig, simulate
+
+    M = 12
+    topo = three_cluster_topo(M)
+    x, y, _, ex, ey = sim_data
+    parts = uniform_partition(len(y), M, seed=0)
+    cl = np.array([topo.cluster_of(w) for w in range(M)])
+    period, timeout = 0.5, 0.4
+    out = {}
+    for failover in (False, True):
+        link = LinkTimeModel(topo, jitter=0.02, seed=5,
+                             scenario=presets.cluster_outage(0, 1.0, 1e9),
+                             dead_link_timeout=timeout)
+        cfg = SimConfig(algorithm="netmax", n_workers=M, total_events=1200,
+                        monitor_period=period, monitor_home_cluster=0,
+                        monitor_failover=failover, seed=3, engine="batched")
+        out[failover] = simulate(cfg, link, x, y, parts, ex, ey,
+                                 record_every=600)
+    pinned, elected = out[False], out[True]
+
+    assert pinned.leader_log == []
+    assert elected.leader_log, "no leader was ever elected"
+    t_elect, new_home = elected.leader_log[0]
+    assert new_home != 0
+
+    def into_dead(res):
+        return [t for t, i, m in res.failed_pulls if cl[i] != 0 and cl[m] == 0]
+
+    # Far-side pulls into the dead cluster cease within two refreshes of
+    # the election (election wake + failure-evidence refresh), plus the
+    # in-flight timeout tail.
+    late = [t for t in into_dead(elected) if t > t_elect + 2 * period + timeout]
+    assert not late, f"pulls into the dead cluster persisted: {late[:5]}"
+    # The pinned Monitor's far side never hears a new policy: timeouts
+    # into the dead cluster keep happening deep into the run.
+    assert into_dead(pinned) and max(into_dead(pinned)) > 0.75 * pinned.times[-1]

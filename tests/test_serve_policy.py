@@ -255,3 +255,227 @@ def test_stats_snapshot_shape():
 def test_invalid_sweep_mode_rejected():
     with pytest.raises(ValueError):
         PolicyServer(alpha=0.05, sweep="vectorized")
+
+
+# --------------------------------------------------------------------------
+# Degraded-mode serving (PR 9): retry -> stale -> uniform, circuit breaker
+# --------------------------------------------------------------------------
+
+
+def _conn(M):
+    return np.ones((M, M)) - np.eye(M)
+
+
+def test_uniform_fallback_when_solver_always_fails():
+    from repro.scenarios import ChaosInjector
+
+    srv = PolicyServer(alpha=0.05, max_retries=2,
+                       chaos=ChaosInjector(seed=1, solver_fail_rate=1.0))
+    T = make_T(8, 40)
+    res = srv.request(T)
+    # Never an exception: the uniform fallback is served, marked degraded.
+    assert not res.ok
+    assert np.allclose(res.P.sum(axis=1), 1.0)
+    assert (np.diag(res.P) == 0).all()
+    assert res.rho > 0
+    assert srv.stats.n_uniform_fallbacks == 1
+    assert srv.stats.n_solve_errors == 3  # first attempt + 2 retries
+    assert srv.stats.n_retries == 2
+    # Degraded results are never cached: the same request misses again.
+    srv.request(T)
+    assert srv.stats.n_hits == 0
+
+
+def test_stale_while_revalidate_serves_last_good():
+    from repro.scenarios import ChaosInjector
+
+    srv = PolicyServer(alpha=0.05, max_retries=0,
+                       chaos=ChaosInjector(seed=2, solver_fail_rate=0.0))
+    good = srv.request(make_T(8, 41))
+    assert good.ok
+    srv.chaos.solver_fail_rate = 1.0
+    # Different quantized T, same connectivity: the failed solve serves
+    # the last good result for that edge set instead of degrading further.
+    stale = srv.request(make_T(8, 41) + 5.0)
+    assert stale is good
+    assert srv.stats.n_stale_served == 1
+    assert srv.stats.n_uniform_fallbacks == 0
+
+
+def test_invalidation_drops_stale_fallback():
+    from repro.scenarios import ChaosInjector
+
+    srv = PolicyServer(alpha=0.05, max_retries=0,
+                       chaos=ChaosInjector(seed=3))
+    srv.request(make_T(8, 42))
+    srv.invalidate(_conn(8))  # edge-set rule: last-good layout is stale
+    srv.chaos.solver_fail_rate = 1.0
+    res = srv.request(make_T(8, 42) + 5.0)
+    assert not res.ok  # uniform, not the dropped stale result
+    assert srv.stats.n_uniform_fallbacks == 1
+
+
+def test_breaker_trips_probes_and_recovers():
+    from repro.scenarios import ChaosInjector
+
+    srv = PolicyServer(alpha=0.05, max_retries=0, breaker_threshold=2,
+                       breaker_probe_every=3,
+                       chaos=ChaosInjector(seed=4, solver_fail_rate=1.0))
+    for k in range(2):
+        srv.request(make_T(8, 50 + k))
+    assert srv.breaker_open
+    assert srv.stats.n_breaker_trips == 1
+    solves_when_tripped = srv.stats.n_solve_errors
+    # While open, misses short-circuit: no solver attempts except probes
+    # (every 3rd short-circuited miss).
+    for k in range(4):
+        srv.request(make_T(8, 60 + k))
+    assert srv.stats.n_breaker_probes == 1
+    assert srv.stats.n_solve_errors == solves_when_tripped + 1
+    # Heal the solver: the next probe closes the breaker.
+    srv.chaos.solver_fail_rate = 0.0
+    served = [srv.request(make_T(8, 70 + k)) for k in range(6)]
+    assert not srv.breaker_open
+    assert srv.stats.n_breaker_recoveries == 1
+    assert any(r.ok for r in served)
+    # Fully recovered: fresh solves flow again.
+    assert srv.request(make_T(8, 99)).ok
+
+
+def test_deadline_bounds_the_retry_tail():
+    from repro.scenarios import ChaosInjector
+
+    srv = PolicyServer(
+        alpha=0.05, max_retries=5, deadline_ms=10.0,
+        chaos=ChaosInjector(seed=5, solver_fail_rate=1.0,
+                            solver_delay_rate=1.0, solver_delay_ms=50.0),
+    )
+    res = srv.request(make_T(8, 43))
+    assert not res.ok  # degraded, not an exception
+    assert srv.stats.n_deadline_misses == 1
+    # The 50ms injected delay blew the 10ms deadline on attempt one: the
+    # other 5 retries were never burned.
+    assert srv.stats.n_solve_errors == 1
+    assert srv.stats.n_retries == 0
+
+
+def test_retry_recovers_from_transient_faults():
+    from repro.scenarios import ChaosInjector
+
+    # seed=5 stream: the first attempt fails, the retry re-rolls and
+    # succeeds (deterministic for the fixed seed).
+    srv = PolicyServer(alpha=0.05, max_retries=5,
+                       chaos=ChaosInjector(seed=5, solver_fail_rate=0.5))
+    res = srv.request(make_T(8, 44))
+    assert res.ok
+    assert srv.stats.n_retries >= 1
+    assert srv.stats.n_solves == 1
+
+
+def test_chaos_rate_validation():
+    from repro.scenarios import ChaosInjector
+
+    with pytest.raises(ValueError, match="solver_fail_rate"):
+        ChaosInjector(solver_fail_rate=1.5)
+    with pytest.raises(ValueError, match="report_drop_rate"):
+        ChaosInjector(report_drop_rate=-0.1)
+
+
+def test_server_degraded_knob_validation():
+    with pytest.raises(ValueError, match="deadline_ms"):
+        PolicyServer(alpha=0.05, deadline_ms=0.0)
+    with pytest.raises(ValueError, match="max_retries"):
+        PolicyServer(alpha=0.05, max_retries=-1)
+    with pytest.raises(ValueError, match="breaker"):
+        PolicyServer(alpha=0.05, breaker_threshold=0)
+
+
+# --------------------------------------------------------------------------
+# Concurrency audit (PR 9 satellite): stats race fixed, invalidation vs
+# in-flight solves, coalescing under interleaved invalidations
+# --------------------------------------------------------------------------
+
+
+def test_invalidate_during_solve_is_not_cached():
+    """An invalidation that lands while a solve is in flight must win: the
+    solve started from the pre-invalidation edge set, so its result is
+    never inserted (epoch check) — the next request re-solves."""
+    srv = PolicyServer(alpha=0.05)
+    T = make_T(8, 45)
+    real_solve = srv._solve
+    started, release = threading.Event(), threading.Event()
+
+    def slow_solve(Tq, d, ck):
+        started.set()
+        release.wait()
+        return real_solve(Tq, d, ck)
+
+    srv._solve = slow_solve
+    out = {}
+    th = threading.Thread(target=lambda: out.setdefault("r", srv.request(T)))
+    th.start()
+    started.wait()
+    srv.invalidate(_conn(8))  # races the in-flight solve
+    release.set()
+    th.join()
+    srv._solve = real_solve
+    assert out["r"].ok  # the racing caller still got its fresh result
+    assert srv.cache_len() == 0  # ... but it was not cached
+    srv.request(T)
+    assert srv.stats.n_hits == 0 and srv.stats.n_solves == 2
+    assert srv.request(T).ok and srv.stats.n_hits == 1  # now cached
+
+
+def test_coalescing_with_interleaved_invalidations():
+    """6 requester threads on one key interleaved with invalidator threads:
+    every request is answered (no exception, no deadlock), counters add
+    up, and the cache never serves a result across an invalidation epoch."""
+    srv = PolicyServer(alpha=0.05)
+    T = make_T(10, 46)
+    d = _conn(10)
+    rounds, n_req = 6, 6
+    results = []
+    res_lock = threading.Lock()
+    for _ in range(rounds):
+        def work(_k):
+            r = srv.request(T, d)
+            with res_lock:
+                results.append(r)
+
+        def chaos_invalidate():
+            srv.invalidate(d)
+
+        threads = [threading.Thread(target=work, args=(k,))
+                   for k in range(n_req)]
+        threads += [threading.Thread(target=chaos_invalidate)
+                    for _ in range(2)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    assert len(results) == rounds * n_req
+    for r in results:
+        assert r is not None and r.ok
+        assert np.allclose(r.P.sum(axis=1), 1.0)
+    s = srv.stats
+    assert s.n_requests == rounds * n_req
+    # Every request was answered by exactly one path.
+    assert (s.n_hits + s.n_coalesced + s.n_solves + s.n_degraded
+            >= s.n_requests)
+    assert s.n_invalidations == rounds * 2
+    assert len(s.latencies_ms) == s.n_requests
+
+
+def test_degraded_results_never_enter_last_good():
+    """A stale-served result must be the last *fresh* solve, never a
+    previously degraded answer (no degraded-feedback loop)."""
+    from repro.scenarios import ChaosInjector
+
+    srv = PolicyServer(alpha=0.05, max_retries=0,
+                       chaos=ChaosInjector(seed=7))
+    good = srv.request(make_T(8, 47))
+    srv.chaos.solver_fail_rate = 1.0
+    first = srv.request(make_T(8, 47) + 3.0)   # stale <- good
+    second = srv.request(make_T(8, 47) + 6.0)  # stale <- still good
+    assert first is good and second is good
+    assert srv.stats.n_stale_served == 2
