@@ -761,7 +761,14 @@ def bench_serve(sizes=(128, 256), serve_M=32, n_requests=600, K=8, R=8,
         dominated by cache hits, including at the p99 latency.
       * ``same_grid_point_batched`` — the lockstep stacked sweep picks the
         identical (rho, t_bar) as the serial path.
-    Wall-clock seconds are reported ungated (runner-dependent).
+      * ``same_grid_point_jax`` — the jitted device sweep (PR 10) picks
+        the identical grid point as the numpy lockstep path.
+      * ``all_answered`` — 1.0 iff every RPC request through the sharded
+        service + admission stack got an answer (sheds count; errors and
+        hangs do not).
+    Wall-clock seconds — including requests/s and shed rate through the
+    RPC front-end at 1 vs 4 shards, and the jax compile/warm sweep walls
+    — are reported ungated (runner-dependent).
 
     ``small`` is the CI smoke shape: M=128 only, a smaller served graph,
     same metric keys so check_bench finds overlap with the committed
@@ -908,6 +915,134 @@ def bench_serve(sizes=(128, 256), serve_M=32, n_requests=600, K=8, R=8,
           f"serial_cold={serial_s:.3f}s_batched={batched_s:.3f}s_"
           f"same_pt={bool(batch_row['same_grid_point_batched'])}")
 
+    # -- jax lockstep sweep vs numpy at the served size (PR 10) -----------
+    # Two calls: the first pays jit compilation (reported separately —
+    # compile cost amortizes across a serving process's lifetime), the
+    # second is the steady-state device sweep.  Gated: the grid-point
+    # agreement flag (deterministic); wall clocks reported ungated.
+    try:
+        import jax  # noqa: F401  (availability probe)
+
+        t0 = _time.time()
+        jax_cold = policy.generate_policy_matrix_batched(
+            0.1, K=K, R=R, T=Tb, backend="jax"
+        )
+        jax_compile_s = _time.time() - t0
+        t0 = _time.time()
+        jax_warm = policy.generate_policy_matrix_batched(
+            0.1, K=K, R=R, T=Tb, backend="jax"
+        )
+        jax_warm_s = _time.time() - t0
+        jax_row = dict(
+            M=serve_M,
+            numpy_s=round(batched_s, 4),
+            jax_compile_s=round(jax_compile_s, 4),
+            jax_warm_s=round(jax_warm_s, 4),
+            jax_warm_speedup_vs_numpy=round(batched_s / jax_warm_s, 2),
+            same_grid_point_jax=1.0 if (
+                jax_warm.rho == batched.rho
+                and jax_warm.t_bar == batched.t_bar
+                and jax_cold.rho == batched.rho
+            ) else 0.0,
+        )
+        print(f"serve/jax/M={serve_M},{jax_warm_s * 1e6:.0f},"
+              f"compile={jax_compile_s:.1f}s_warm={jax_warm_s:.3f}s_"
+              f"numpy={batched_s:.3f}s_"
+              f"same_pt={bool(jax_row['same_grid_point_jax'])}")
+    except ImportError:
+        jax_row = dict(M=serve_M, skipped="jax unavailable")
+        print(f"serve/jax/M={serve_M},0,skipped_jax_unavailable")
+
+    # -- RPC service: requests/s + shed rate at 1 vs 4 shards (PR 10) ----
+    # Real sockets, real threads: N client threads drive a sharded
+    # PolicyService (admission in front) with a mix of edge sets so
+    # traffic actually spreads.  requests/s and shed rate are reported
+    # ungated (wall-clock-derived); the all-answered flag is gated —
+    # the service contract is that overload sheds, it never errors or
+    # hangs.
+    import threading as _threading
+
+    from repro.serve import (
+        AdmissionController,
+        PolicyClient,
+        PolicyService,
+        ShardRouter,
+    )
+
+    svc_M = min(serve_M, 16)
+    n_svc_requests = 120 if small else 240
+    n_clients = 4
+
+    def ring_d(M, chord):
+        dd = np.zeros((M, M))
+        for i in range(M):
+            dd[i, (i + 1) % M] = dd[(i + 1) % M, i] = 1.0
+        i, j = chord
+        dd[i, j] = dd[j, i] = 1.0
+        return dd
+
+    edge_sets = [None] + [
+        ring_d(svc_M, (0, 2 + k)) for k in range(7)
+    ]
+    service_rows = {}
+    for n_shards in (1, 4):
+        router = ShardRouter.build(
+            n_shards, 0.1, K=K, R=R, quant=0.05
+        )
+        adm = AdmissionController(router, max_queue=64, workers=4)
+        svc = PolicyService(adm).start()
+        answered = [0] * n_clients
+        per_client = n_svc_requests // n_clients
+
+        def drive(k, answered=answered, svc=svc):
+            with PolicyClient(svc.address) as cli:
+                for i in range(per_client):
+                    j = (k * per_client + i) % len(edge_sets)
+                    # Tenant sticks to one edge set: a per-client tenant
+                    # would trip the PR-5 invalidation rule on every
+                    # rotation and measure cache thrash, not sharding.
+                    res = cli.request(
+                        hetero_T(svc_M, seed=j), d=edge_sets[j],
+                        tenant=f"c{k}-e{j}", deadline_ms=30_000.0,
+                    )
+                    if res is not None:
+                        answered[k] += 1
+
+        t0 = _time.time()
+        threads = [
+            _threading.Thread(target=drive, args=(k,))
+            for k in range(n_clients)
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        wall = _time.time() - t0
+        svc.stop()
+        adm.close()
+        n_answered = sum(answered)
+        st = router.stats()
+        row = dict(
+            M=svc_M,
+            n_shards=n_shards,
+            clients=n_clients,
+            requests=n_svc_requests,
+            wall_s=round(wall, 4),
+            requests_per_s=round(n_answered / wall, 1),
+            shed_rate=round(
+                adm.stats.n_shed / max(1, adm.stats.n_submitted), 4
+            ),
+            all_answered=1.0 if n_answered == n_svc_requests else 0.0,
+            cache_hit_rate=round(st["hit_rate"], 4),
+            p50_ms=round(st["p50_ms"], 4),
+            p99_ms=round(st["p99_ms"], 4),
+        )
+        service_rows[f"shards={n_shards}"] = row
+        print(f"serve/service/shards={n_shards},{wall * 1e6:.0f},"
+              f"rps={row['requests_per_s']}_shed={row['shed_rate']}_"
+              f"hit={row['cache_hit_rate']}_"
+              f"all_answered={bool(row['all_answered'])}")
+
     out = {
         "suite": "serve",
         "K": K,
@@ -919,6 +1054,8 @@ def bench_serve(sizes=(128, 256), serve_M=32, n_requests=600, K=8, R=8,
         "pricing": pricing_rows,
         "serving": serving,
         "batched": batch_row,
+        "jax": jax_row,
+        "service": service_rows,
     }
     path = Path(out_path) if out_path else ROOT / "BENCH_serve.json"
     with open(path, "w") as f:

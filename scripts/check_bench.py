@@ -90,10 +90,13 @@ def _walk_serve(doc):
     the Dantzig-cold baseline (ISSUE floor >= 2x at M >= 128, committed
     baseline ~9x), the no-uniform-fallback flag (1/0 — any fallback at
     M >= 128 is the pre-PR blowup), the served cache hit rate, the
-    p99-is-a-cache-hit flag, and the batched-sweep grid-point agreement.
-    Wall-clock fields (warm_first_s, p50_ms, ...) are deliberately NOT
-    gated — they move with runner hardware; the ratios above carry the
-    regression signal portably."""
+    p99-is-a-cache-hit flag, the batched-sweep grid-point agreement, the
+    jax-sweep grid-point agreement (PR 10), and the RPC service
+    all-answered flags at each shard count (PR 10 — overload sheds, it
+    never errors or hangs).  Wall-clock fields (warm_first_s, p50_ms,
+    requests_per_s, shed_rate, jax_compile_s, ...) are deliberately NOT
+    gated — they move with runner hardware and load; the ratios and
+    flags above carry the regression signal portably."""
     for size, row in doc.get("pricing", {}).items():
         yield f"pricing/{size}", "pivot_reduction_vs_dantzig", row.get(
             "pivot_reduction_vs_dantzig"
@@ -109,6 +112,11 @@ def _walk_serve(doc):
     yield "batched", "same_grid_point_batched", batched.get(
         "same_grid_point_batched"
     )
+    yield "jax", "same_grid_point_jax", doc.get("jax", {}).get(
+        "same_grid_point_jax"
+    )
+    for shards, row in doc.get("service", {}).items():
+        yield f"service/{shards}", "all_answered", row.get("all_answered")
 
 
 def _walk_storms(doc):

@@ -1,0 +1,104 @@
+"""CI doc-drift gate (DESIGN.md §19).
+
+Two checks keep the prose honest:
+
+1. Every fenced ``python`` block in README.md is *executed* (in order,
+   each in a fresh namespace, with ``src/`` on ``sys.path``) — the
+   quickstart is living documentation, and an API rename that breaks it
+   fails CI instead of rotting silently.
+2. Every ``§N`` section reference in README.md and docs/serving.md must
+   name a ``## §N`` heading that actually exists in DESIGN.md.
+
+Usage (what .github/workflows/ci.yml runs):
+
+    python scripts/check_docs.py
+
+Exit 0 when every block runs and every reference resolves; exit 1 with
+a per-failure report otherwise.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+import time
+import traceback
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+# Files whose python blocks are executed.  docs/serving.md's blocks are
+# deployment sketches (they bind real ports and reference operator
+# infrastructure), so they are reference-checked but not executed.
+EXEC_DOCS = ["README.md"]
+REF_DOCS = ["README.md", "docs/serving.md"]
+
+_FENCE = re.compile(r"^```python\s*$(.*?)^```\s*$", re.M | re.S)
+_SECTION_REF = re.compile(r"§+(\d+)")
+_SECTION_DEF = re.compile(r"^## §(\d+)\b", re.M)
+
+
+def python_blocks(text: str) -> list[tuple[int, str]]:
+    """Return (1-indexed start line, source) for each ```python fence."""
+    out = []
+    for m in _FENCE.finditer(text):
+        line = text.count("\n", 0, m.start(1)) + 1
+        out.append((line, m.group(1)))
+    return out
+
+
+def check_quickstart(failures: list[str]) -> None:
+    """Execute every README python block; record tracebacks as failures."""
+    sys.path.insert(0, str(REPO / "src"))
+    for doc in EXEC_DOCS:
+        text = (REPO / doc).read_text()
+        blocks = python_blocks(text)
+        if not blocks:
+            failures.append(f"{doc}: no ```python quickstart blocks found")
+            continue
+        for line, src in blocks:
+            t0 = time.perf_counter()
+            try:
+                exec(compile(src, f"{doc}:{line}", "exec"), {"__name__": "__docs__"})
+            except Exception:
+                tb = traceback.format_exc(limit=4)
+                failures.append(f"{doc}:{line} quickstart block raised:\n{tb}")
+            else:
+                dt = time.perf_counter() - t0
+                print(f"check_docs: ok    {doc}:{line} block ran ({dt:.1f}s)")
+
+
+def check_section_refs(failures: list[str]) -> None:
+    """Every §N mentioned in the docs must exist as a DESIGN.md heading."""
+    defined = {int(n) for n in _SECTION_DEF.findall((REPO / "DESIGN.md").read_text())}
+    if not defined:
+        failures.append("DESIGN.md: no '## §N' headings found")
+        return
+    for doc in REF_DOCS:
+        text = (REPO / doc).read_text()
+        refs = sorted({int(n) for n in _SECTION_REF.findall(text)})
+        missing = [n for n in refs if n not in defined]
+        for n in missing:
+            failures.append(f"{doc}: references DESIGN.md §{n}, which does not exist")
+        print(
+            f"check_docs: ok    {doc} references §{{{', '.join(map(str, refs))}}}"
+            f" ({len(refs) - len(missing)}/{len(refs)} resolve)"
+        )
+
+
+def main() -> int:
+    """Run both checks and report; non-zero exit on any failure."""
+    failures: list[str] = []
+    check_section_refs(failures)
+    check_quickstart(failures)
+    if failures:
+        print(f"\ncheck_docs: {len(failures)} failure(s)", file=sys.stderr)
+        for f in failures:
+            print(f"  FAIL  {f}", file=sys.stderr)
+        return 1
+    print("check_docs: all quickstart blocks ran, all § references resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

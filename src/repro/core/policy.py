@@ -447,6 +447,7 @@ def generate_policy_matrix_batched(
     T: np.ndarray,
     d: np.ndarray | None = None,
     eps: float = 1e-2,
+    backend: str = "numpy",
 ) -> PolicyResult:
     """Algorithm 3 with the whole (rho, t_bar) grid solved in one dispatch.
 
@@ -456,6 +457,12 @@ def generate_policy_matrix_batched(
     points price and ratio-test together in stacked GEMMs — and all
     feasible policies are scored with a single stacked ``eigvalsh``.
 
+    ``backend`` selects the lockstep engine: ``"numpy"`` (default) is the
+    host path; ``"jax"`` routes the same stack through the jitted
+    ``repro.solver.batch_jax`` device program (masked ``lax.while_loop``
+    termination, batched einsum FTRAN/BTRAN) — same pivot rules, so both
+    backends pick the same grid point (pinned in tests/test_revised.py).
+
     Numerics follow a different summation order than the serial sweep, so
     the selected grid point matches the serial path up to solver tolerance
     (exactly, away from near-ties), not bit-for-bit — engine-parity
@@ -463,6 +470,8 @@ def generate_policy_matrix_batched(
     grid, not one LP, dominates; at large M the serial warm-start sweep's
     dual restarts are cheaper than lockstep cold starts.
     """
+    if backend not in ("numpy", "jax"):
+        raise ValueError(f"unknown batched-sweep backend {backend!r}")
     T = np.asarray(T, dtype=np.float64)
     M = T.shape[0]
     if d is None:
@@ -476,7 +485,8 @@ def generate_policy_matrix_batched(
     live = np.where(d.sum(axis=1) > 0)[0]
     if 0 < live.size < M:
         sub = generate_policy_matrix_batched(
-            alpha, K, R, Tm[np.ix_(live, live)], d[np.ix_(live, live)], eps
+            alpha, K, R, Tm[np.ix_(live, live)], d[np.ix_(live, live)], eps,
+            backend=backend,
         )
         P = np.zeros((M, M))
         P[np.ix_(live, live)] = sub.P
@@ -511,7 +521,10 @@ def generate_policy_matrix_batched(
     n_pivots = 0
     n_feasible = 0
     if cand:
-        from repro.solver.batch import solve_lp_batch
+        if backend == "jax":
+            from repro.solver.batch_jax import solve_lp_batch_jax as _batch
+        else:
+            from repro.solver.batch import solve_lp_batch as _batch
 
         S = len(cand)
         rho_s = np.array([c0 for c0, _ in cand])
@@ -523,8 +536,7 @@ def generate_policy_matrix_batched(
         lb[:, inst.pos] = (
             alpha * rho_s[:, None] * inst.dsym[None, :] + _FLOOR_MARGIN
         )
-        results = solve_lp_batch(inst.c, inst.A, b, lb_stack=lb,
-                                 ub_stack=inst.ub)
+        results = _batch(inst.c, inst.A, b, lb_stack=lb, ub_stack=inst.ub)
         n_pivots = int(sum(r.pivots for r in results))
         Ps, feas = [], []
         for s, res in enumerate(results):

@@ -11,6 +11,11 @@ exercise the degraded-mode machinery without any real failure happening:
 * **dropped Monitor reports** — ``drop_report(worker, t)`` decides
   whether a worker's EMA report is lost on the way to the Monitor this
   refresh (``report_drop_rate``).
+* **admission-queue delay** — ``injected_queue_delay_ms()`` charges
+  artificial queueing latency against a request's deadline before the
+  ``serve.admission`` controller dispatches it (``queue_delay_rate``),
+  deterministically steering chosen requests into the hopeless-deadline
+  shed path.
 * **delayed policy publishes** — ``publish_lost(t, period)`` models a
   publish delayed past the point of usefulness: a delay drawn beyond the
   refresh period is superseded by the next refresh before it lands, so
@@ -52,11 +57,16 @@ class ChaosInjector:
     # Injected publish delay, in units of the Monitor refresh period; >= 1
     # means the publish is superseded before it lands (treated as lost).
     publish_delay_periods: float = 1.0
+    # Admission-queue channel (serve.admission): artificial queueing
+    # latency charged against a request's deadline before it is served.
+    queue_delay_rate: float = 0.0
+    queue_delay_ms: float = 0.0
     # Fault counters (surfaced by tests/benchmarks next to ServeStats).
     n_solver_faults: int = field(init=False, default=0)
     n_injected_delays: int = field(init=False, default=0)
     n_dropped_reports: int = field(init=False, default=0)
     n_lost_publishes: int = field(init=False, default=0)
+    n_queue_delays: int = field(init=False, default=0)
 
     def __post_init__(self):
         for name in (
@@ -64,18 +74,23 @@ class ChaosInjector:
             "solver_delay_rate",
             "report_drop_rate",
             "publish_delay_rate",
+            "queue_delay_rate",
         ):
             p = getattr(self, name)
             if not (0.0 <= p <= 1.0):
                 raise ValueError(f"{name} must be in [0, 1], got {p}")
-        solver, delay, report, publish = (
+        # Spawned children are deterministic by index, so appending the
+        # queue stream leaves the first four channels' draws untouched —
+        # existing seeded tests/benchmarks see identical fault schedules.
+        solver, delay, report, publish, queue = (
             np.random.default_rng(s)
-            for s in np.random.SeedSequence(self.seed).spawn(4)
+            for s in np.random.SeedSequence(self.seed).spawn(5)
         )
         self._solver_rng = solver
         self._delay_rng = delay
         self._report_rng = report
         self._publish_rng = publish
+        self._queue_rng = queue
 
     # -- solver channel (PolicyServer) --------------------------------------
     def maybe_fail_solver(self) -> None:
@@ -93,6 +108,23 @@ class ChaosInjector:
         ):
             self.n_injected_delays += 1
             return float(self.solver_delay_ms)
+        return 0.0
+
+    # -- admission-queue channel (serve.admission) ---------------------------
+    def injected_queue_delay_ms(self) -> float:
+        """Artificial queueing latency charged against a request deadline.
+
+        Drawn by ``AdmissionController`` when an entry is dequeued; like
+        the solver delay it is charged *virtually* (never slept), so a
+        seeded injector pushes specific requests past their deadline —
+        deterministically — to exercise the hopeless-deadline shed path.
+        """
+        if (
+            self.queue_delay_rate
+            and self._queue_rng.uniform() < self.queue_delay_rate
+        ):
+            self.n_queue_delays += 1
+            return float(self.queue_delay_ms)
         return 0.0
 
     # -- Monitor control-plane channels -------------------------------------

@@ -3,10 +3,29 @@
 * ``repro.serve.engine`` — KV-cache LM engine with batched prefill/decode
   (imports jax; import the submodule directly).
 * ``repro.serve.policy`` — ``PolicyServer``, the caching/micro-batching
-  front-end over Algorithm 3 policy generation (numpy-only; re-exported
-  here).
+  front-end over Algorithm 3 policy generation (numpy-only).
+* ``repro.serve.shard`` — ``ShardRouter``, connectivity-keyed routing
+  across N ``PolicyServer`` workers.
+* ``repro.serve.admission`` — ``AdmissionController``, bounded-queue EDF
+  admission with deadline-aware shedding.
+* ``repro.serve.rpc`` — ``PolicyService``/``PolicyClient``, the
+  length-prefixed JSON-over-socket front-end (schema ``repro.serve/v1``).
+
+Everything except ``engine`` is numpy-only and re-exported here.
 """
 
+from repro.serve.admission import AdmissionController, AdmissionStats
 from repro.serve.policy import PolicyServer, ServeStats
+from repro.serve.rpc import PolicyClient, PolicyService, RpcError
+from repro.serve.shard import ShardRouter
 
-__all__ = ["PolicyServer", "ServeStats"]
+__all__ = [
+    "AdmissionController",
+    "AdmissionStats",
+    "PolicyClient",
+    "PolicyServer",
+    "PolicyService",
+    "RpcError",
+    "ServeStats",
+    "ShardRouter",
+]

@@ -25,6 +25,8 @@ from repro.models import lm, transformer
 
 @dataclass
 class Request:
+    """One generation request: prompt tokens in, generated tokens out."""
+
     rid: int
     prompt: np.ndarray  # (P,) int32
     max_new: int
@@ -33,10 +35,14 @@ class Request:
 
 
 class ServeEngine:
-    """Single-host engine (CPU smoke / examples); the SPMD path reuses the
-    same step functions under pjit (launch/dryrun lowers them)."""
+    """Single-host continuous-batching engine for CPU smoke runs and examples.
+
+    The SPMD path reuses the same step functions under pjit
+    (launch/dryrun lowers them).
+    """
 
     def __init__(self, cfg: ArchConfig, params, batch_capacity: int, max_seq: int):
+        """Preallocate a ``batch_capacity`` x ``max_seq`` KV cache and jit the step."""
         self.cfg = cfg
         self.params = params
         self.B = batch_capacity
@@ -50,6 +56,7 @@ class ServeEngine:
 
     # -- admission -----------------------------------------------------------
     def admit(self, req: Request) -> bool:
+        """Place ``req`` into a free batch slot and prefill it; False if full."""
         for i, s in enumerate(self.slots):
             if s is None:
                 self.slots[i] = req
@@ -58,8 +65,11 @@ class ServeEngine:
         return False
 
     def _prefill_slot(self, i: int, req: Request) -> None:
-        """Feed the prompt token-by-token (correct for every family incl.
-        recurrent; batched flash prefill is the fast path used at scale)."""
+        """Feed the prompt token-by-token into slot ``i``.
+
+        Correct for every family incl. recurrent; batched flash prefill is
+        the fast path used at scale.
+        """
         for t, tok in enumerate(req.prompt):
             token = jnp.zeros((self.B,), jnp.int32).at[i].set(int(tok))
             logits, self.cache = self._step(self.params, self.cache, token, int(self.pos[i]))
@@ -67,6 +77,7 @@ class ServeEngine:
 
     # -- decode loop ----------------------------------------------------------
     def step(self, greedy: bool = True) -> None:
+        """Advance every active slot by one decode token; retire finished slots."""
         token = jnp.zeros((self.B,), jnp.int32)
         active = [i for i, s in enumerate(self.slots) if s is not None]
         if not active:
@@ -86,6 +97,7 @@ class ServeEngine:
                 self.slots[i] = None
 
     def run(self, requests: list[Request]) -> list[Request]:
+        """Drive admission + decode until every request completes; return them."""
         pending = list(requests)
         done: list[Request] = []
         while pending or any(s is not None for s in self.slots):
@@ -97,8 +109,11 @@ class ServeEngine:
 
 
 def capture_prefill(cfg: ArchConfig, params, tokens: jnp.ndarray, max_seq: int):
-    """Batched prefill that RETURNS the KV cache (attention families): runs
-    the chunked-flash forward while re-projecting K/V into the cache layout."""
+    """Run a batched prefill that returns the filled KV cache (attention families).
+
+    Runs the chunked-flash forward while re-projecting K/V into the cache
+    layout.
+    """
     B, P = tokens.shape
     cache = lm.init_cache(cfg, B, max_seq)
     # Single forward gives last-position logits; cache is filled by replaying

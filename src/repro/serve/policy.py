@@ -82,6 +82,30 @@ from repro.core.policy import (
 )
 
 
+def normalize_instance(T, d):
+    """Mirror generate_policy_matrix's dead-link masking.
+
+    Returns ``(T, d)`` float64 copies describing exactly the instance a
+    solve would see: T entries off the live edge set (diagonal, dead
+    links, d=0 pairs) are zeroed so irrelevant jitter (or an inf marker)
+    cannot fragment the cache, and infinite-T links are dropped from
+    ``d``.  Shared by ``PolicyServer`` (cache keying) and ``ShardRouter``
+    (routing must hash the same effective edge set the target shard will
+    key on).
+    """
+    T = np.asarray(T, dtype=np.float64).copy()
+    M = T.shape[0]
+    if d is None:
+        d = np.ones((M, M)) - np.eye(M)
+    d = np.asarray(d, dtype=np.float64).copy()
+    dead = ~np.isfinite(T)
+    d[dead] = 0.0
+    d[dead.T] = 0.0
+    np.fill_diagonal(d, 0.0)
+    T[d == 0.0] = 0.0
+    return T, d
+
+
 @dataclass
 class ServeStats:
     """Counters + latency reservoir for one PolicyServer.
@@ -114,10 +138,12 @@ class ServeStats:
     )
 
     def bump(self, name: str, k: int = 1) -> None:
+        """Atomically add ``k`` to counter ``name``."""
         with self._lock:
             setattr(self, name, getattr(self, name) + k)
 
     def note_latency(self, ms: float) -> None:
+        """Record one request latency sample in milliseconds."""
         with self._lock:
             self.latencies_ms.append(ms)
 
@@ -133,6 +159,7 @@ class ServeStats:
         return self.n_stale_served + self.n_uniform_fallbacks
 
     def latency_ms(self, q: float) -> float:
+        """Latency percentile ``q`` (0-100) in ms over recorded samples."""
         with self._lock:
             lat = np.asarray(self.latencies_ms)
         if lat.size == 0:
@@ -140,6 +167,7 @@ class ServeStats:
         return float(np.percentile(lat, q))
 
     def snapshot(self) -> dict:
+        """Export all counters plus derived rates as a plain dict."""
         return {
             "n_requests": self.n_requests,
             "n_hits": self.n_hits,
@@ -186,6 +214,7 @@ class PolicyServer:
         breaker_probe_every: int = 8,
         chaos=None,
     ):
+        """Validate and pin the Algorithm-3 + degradation-ladder configuration."""
         if sweep not in ("serial", "batched"):
             raise ValueError(f"unknown sweep mode {sweep!r}")
         if deadline_ms is not None and not deadline_ms > 0:
@@ -223,29 +252,18 @@ class PolicyServer:
 
     @property
     def breaker_open(self) -> bool:
+        """Whether the circuit breaker is currently tripped open."""
         with self._lock:
             return self._breaker_open
 
     # -- request path -------------------------------------------------------
     def _normalize(self, T, d):
-        """Mirror generate_policy_matrix's dead-link masking so the cache
-        key describes exactly the instance that would be solved.
+        """Delegate to module-level ``normalize_instance``.
 
-        T entries off the live edge set (diagonal, dead links, d=0 pairs)
-        never enter the Eq.-14 instance, so they are zeroed — otherwise
-        irrelevant jitter (or an inf marker) would fragment the cache.
+        Shared with the shard router, which must hash the same effective
+        edge set.
         """
-        T = np.asarray(T, dtype=np.float64).copy()
-        M = T.shape[0]
-        if d is None:
-            d = np.ones((M, M)) - np.eye(M)
-        d = np.asarray(d, dtype=np.float64).copy()
-        dead = ~np.isfinite(T)
-        d[dead] = 0.0
-        d[dead.T] = 0.0
-        np.fill_diagonal(d, 0.0)
-        T[d == 0.0] = 0.0
-        return T, d
+        return normalize_instance(T, d)
 
     def _quantize(self, T):
         """Snap finite link times to a relative grid of step ``quant``.
@@ -272,8 +290,11 @@ class PolicyServer:
         )
 
     def _note_tenant(self, tenant, ck):
-        """PR-5 Monitor rule: a tenant whose edge set changed invalidates
-        its previous connectivity key's cache lines and warm basis."""
+        """Apply the PR-5 Monitor rule for ``tenant``.
+
+        A tenant whose edge set changed invalidates its previous
+        connectivity key's cache lines and warm basis.
+        """
         if tenant is None:
             return
         prev = self._tenant_conn.get(tenant)
@@ -324,6 +345,7 @@ class PolicyServer:
         charged_ms = 0.0
 
         def over_deadline() -> bool:
+            """Whether wall time plus virtually-charged ms exceeds the deadline."""
             if self.deadline_ms is None:
                 return False
             spent = (time.perf_counter() - t0) * 1e3 + charged_ms
@@ -354,24 +376,31 @@ class PolicyServer:
                 charged_ms += self.backoff_ms * (2.0 ** attempt)
         return None
 
-    def _degraded(self, d, ck) -> PolicyResult:
-        """Stale-while-revalidate, then the uniform fallback (never cached,
-        never an exception — the caller always gets a usable policy)."""
+    def _degraded(self, d, ck):
+        """Walk stale-while-revalidate, then the uniform fallback.
+
+        Degraded results are never cached and never raise — the caller
+        always gets a usable policy.  Returns ``(result, rung)`` with
+        rung ``"stale"`` or ``"uniform"``.
+        """
         with self._lock:
             stale = self._last_good.get(ck)
         if stale is not None:
             self.stats.bump("n_stale_served")
-            return stale
+            return stale, "stale"
         self.stats.bump("n_uniform_fallbacks")
         P = uniform_policy(d)
         rho = 0.25 / self.alpha / max(1.0, d.sum(axis=1).max())
         # T_convergence=inf => PolicyResult.ok is False: the degraded
         # marker callers and tests key off.
-        return PolicyResult(P, rho, 0.0, 1.0, float("inf"))
+        return PolicyResult(P, rho, 0.0, 1.0, float("inf")), "uniform"
 
     def _breaker_gate(self) -> str:
-        """'closed' = solve normally, 'probe' = one no-retry attempt,
-        'short' = short-circuit straight to the degraded ladder."""
+        """Decide how the breaker treats this request.
+
+        'closed' = solve normally, 'probe' = one no-retry attempt,
+        'short' = short-circuit straight to the degraded ladder.
+        """
         with self._lock:
             if not self._breaker_open:
                 return "closed"
@@ -407,7 +436,7 @@ class PolicyServer:
             self.stats.bump("n_breaker_recoveries")
 
     def _serve_miss(self, Tq, d, ck, t0, cache_key=None, epoch=None):
-        """One cache miss through breaker -> guarded solve -> ladder.
+        """Serve one cache miss: breaker -> guarded solve -> ladder.
 
         ``cache_key``/``epoch`` are set only for the in-flight owner: the
         fresh result is inserted unless the key's invalidation epoch moved
@@ -415,6 +444,8 @@ class PolicyServer:
         caller's edge set changed, so the just-solved layout is stale).
         Coalesced waiters falling through a degraded owner pass None and
         never populate the cache.  Degraded results are never cached.
+        Returns ``(result, rung)`` with rung ``"fresh"``, ``"stale"`` or
+        ``"uniform"``.
         """
         gate = self._breaker_gate()
         if gate == "short":
@@ -436,7 +467,7 @@ class PolicyServer:
                 while len(self._cache) > self.cache_size:
                     self._cache.popitem(last=False)
                     self.stats.bump("n_evictions")
-        return res
+        return res, "fresh"
 
     def request(self, T, d=None, tenant=None) -> PolicyResult:
         """Serve one policy request (blocking; thread-safe; total).
@@ -446,6 +477,18 @@ class PolicyServer:
         cache.  *Total*: solver failures (real or chaos-injected) never
         escape — the degradation ladder answers instead (module
         docstring), and ``ServeStats`` records which rung did.
+        """
+        return self.request_meta(T, d=d, tenant=tenant)[0]
+
+    def request_meta(self, T, d=None, tenant=None):
+        """Serve one request and report how it was answered.
+
+        Returns ``(result, meta)`` where ``meta`` is a dict with ``rung``
+        — one of ``"hit"``, ``"coalesced"``, ``"fresh"``, ``"stale"``,
+        ``"uniform"`` — and ``ms`` (wall latency).  Rungs hit/coalesced/
+        fresh are bit-equal to a direct solve of the same (quantized)
+        instance; stale/uniform are degraded answers.  The RPC front-end
+        (``repro.serve.rpc``) forwards ``meta`` to clients that ask.
         """
         t0 = time.perf_counter()
         T, d = self._normalize(T, d)
@@ -460,8 +503,9 @@ class PolicyServer:
             if hit is not None:
                 self._cache.move_to_end(key)
                 self.stats.bump("n_hits")
-                self.stats.note_latency((time.perf_counter() - t0) * 1e3)
-                return hit
+                ms = (time.perf_counter() - t0) * 1e3
+                self.stats.note_latency(ms)
+                return hit, {"rung": "hit", "ms": ms}
             wait_ev = self._inflight.get(key)
             if wait_ev is None:
                 self._inflight[key] = threading.Event()
@@ -472,21 +516,26 @@ class PolicyServer:
             self.stats.bump("n_coalesced")
             with self._lock:
                 res = self._cache.get(key)
+            rung = "coalesced"
             if res is None:
                 # The owner degraded (or an invalidation raced its insert):
                 # walk the guarded ladder ourselves — never the raw solver.
-                res = self._serve_miss(Tq, d, ck, time.perf_counter())
-            self.stats.note_latency((time.perf_counter() - t0) * 1e3)
-            return res
+                res, rung = self._serve_miss(Tq, d, ck, time.perf_counter())
+            ms = (time.perf_counter() - t0) * 1e3
+            self.stats.note_latency(ms)
+            return res, {"rung": rung, "ms": ms}
         try:
-            res = self._serve_miss(Tq, d, ck, t0, cache_key=key, epoch=epoch)
+            res, rung = self._serve_miss(
+                Tq, d, ck, t0, cache_key=key, epoch=epoch
+            )
         finally:
             with self._lock:
                 ev = self._inflight.pop(key, None)
             if ev is not None:
                 ev.set()
-        self.stats.note_latency((time.perf_counter() - t0) * 1e3)
-        return res
+        ms = (time.perf_counter() - t0) * 1e3
+        self.stats.note_latency(ms)
+        return res, {"rung": rung, "ms": ms}
 
     def request_many(self, requests) -> list[PolicyResult]:
         """Micro-batch a list of (T, d) or (T, d, tenant) requests.
@@ -519,5 +568,6 @@ class PolicyServer:
         return out
 
     def cache_len(self) -> int:
+        """Number of policy results currently cached."""
         with self._lock:
             return len(self._cache)

@@ -1,3 +1,5 @@
+"""LP solver layer: dense/revised simplex backends behind the solve_lp facade."""
+
 from repro.solver.lp import (
     BasisState,
     LPResult,

@@ -44,6 +44,7 @@ class _BatchSimplex:
     """One lockstep run over S same-layout instances."""
 
     def __init__(self, c, A, b, lb, ub, max_iter=20000, refactor_every=64):
+        """Stack the S instances into lockstep arrays and init bound statuses."""
         self.S, self.m = b.shape
         self.n = c.shape[0]
         S, m, n = self.S, self.m, self.n
@@ -253,6 +254,7 @@ class _BatchSimplex:
 
     # -- two-phase driver ---------------------------------------------------
     def solve(self):
+        """Run phase 1 then phase 2 to completion on every live instance."""
         S, m, n = self.S, self.m, self.n
         live = self.status == RUN
         idx = np.flatnonzero(live)

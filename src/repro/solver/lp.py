@@ -86,10 +86,12 @@ def lp_pricing(name: str):
 
 
 def default_method() -> str:
+    """Name of the backend ``solve_lp`` uses when ``method`` is not given."""
     return _DEFAULT_METHOD
 
 
 def default_pricing() -> str:
+    """Name of the pricing rule ``solve_lp`` uses when ``pricing`` is not given."""
     return _DEFAULT_PRICING
 
 

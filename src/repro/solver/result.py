@@ -14,6 +14,8 @@ import numpy as np
 
 @dataclass
 class LPResult:
+    """Outcome of one LP solve: point, objective, status, warm-start extras."""
+
     x: np.ndarray | None
     fun: float
     status: str  # "optimal" | "infeasible" | "unbounded"
@@ -28,6 +30,7 @@ class LPResult:
 
     @property
     def ok(self) -> bool:
+        """Whether the solve reached an optimal point."""
         return self.status == "optimal"
 
 

@@ -112,6 +112,7 @@ class _EtaLU:
     __slots__ = ("lu", "etas", "ill_conditioned")
 
     def __init__(self, B_csc):
+        """Factorize the basis matrix; raise RuntimeError when singular."""
         try:
             self.lu = _sla.splu(B_csc)
         except RuntimeError as e:  # exactly singular
@@ -124,9 +125,11 @@ class _EtaLU:
         self.etas: list = []
 
     def push(self, r: int, w: np.ndarray) -> None:
+        """Append one eta transform (pivot row r, ftran'd entering column w)."""
         self.etas.append((r, w, w[r]))
 
     def ftran(self, v: np.ndarray) -> np.ndarray:
+        """Apply B^-1 v through the LU factors plus the eta file."""
         x = self.lu.solve(v)
         for r, w, wr in self.etas:
             t = x[r] / wr
@@ -135,6 +138,7 @@ class _EtaLU:
         return x
 
     def btran(self, v: np.ndarray) -> np.ndarray:
+        """Apply v B^-1 (transpose solve) through the eta file then the LU."""
         y = np.array(v, dtype=np.float64, copy=True)
         for r, w, wr in reversed(self.etas):
             # (E^-T y)_r = y_r - ((w - e_r) . y) / w_r; other entries fixed.
@@ -147,6 +151,7 @@ class _Simplex:
 
     def __init__(self, c, A, b, lb, ub, max_iter=20000, refactor_every=64,
                  pricing="auto", engine="auto"):
+        """Set up bound-status arrays and pick the pricing rule + engine."""
         self.m, self.n = A.shape
         m, n = self.m, self.n
         sparse_in = _is_sparse(A)
@@ -235,7 +240,7 @@ class _Simplex:
         return self.A @ x
 
     def _ATy(self, y):
-        """y @ A over the structural columns (row vector times A)."""
+        """Compute y @ A over the structural columns (row vector times A)."""
         if self.A_sp is not None:
             return self.A_sp.T @ y
         return y @ self.A
@@ -281,7 +286,7 @@ class _Simplex:
         return self._lu.ftran(v)
 
     def _btran(self, v):
-        """v @ B^-1 through the active engine."""
+        """Compute v @ B^-1 through the active engine."""
         if self.engine == "dense":
             return v @ self.Binv
         return self._lu.btran(v)
@@ -301,9 +306,11 @@ class _Simplex:
         self.xN = x
 
     def _compute_xB(self):
-        """Recompute basic values from self.xN (start of a run / refactor);
-        between refactorizations xB is maintained incrementally by the
-        pivot/flip updates in primal()/dual()."""
+        """Recompute basic values from self.xN (start of a run / refactor).
+
+        Between refactorizations xB is maintained incrementally by the
+        pivot/flip updates in primal()/dual().
+        """
         rhs = self.b - self._Ax(self.xN[: self.n])
         art = self.xN[self.n:]
         if art.any():  # artificial nonbasic values are 0 outside phase 1
@@ -678,6 +685,7 @@ class _Simplex:
         return status
 
     def export_basis(self) -> BasisState | None:
+        """Package the optimal basis as a warm-start token (None if artificial)."""
         if np.any(self.basis >= self.n):  # degenerate artificial left over
             return None
         return BasisState(

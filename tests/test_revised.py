@@ -665,3 +665,73 @@ def test_solve_lp_batch_eq14_t_bar_stack():
         assert batch[s].status == ref.status
         if ref.ok:
             assert batch[s].fun == pytest.approx(ref.fun, rel=1e-6, abs=1e-7)
+
+
+# --------------------------------------------------------------------------
+# jax lockstep batched solver (PR 10)
+# --------------------------------------------------------------------------
+
+
+def test_solve_lp_batch_jax_lockstep_with_numpy():
+    """The jitted device sweep must walk the numpy lockstep path exactly:
+    same statuses, same pivot counts (the simplex trajectory is identical,
+    pivot for pivot), objectives equal to float64 round-off.  The S=12
+    stack also exercises the power-of-two padding (pads to 16)."""
+    pytest.importorskip("jax")
+    from repro.solver.batch import solve_lp_batch
+    from repro.solver.batch_jax import solve_lp_batch_jax
+
+    rng = np.random.default_rng(23)
+    n, m, S = 10, 4, 12
+    A = rng.normal(size=(m, n))
+    c = rng.normal(size=n)
+    b_stack = np.stack(
+        [A @ rng.uniform(0.1, 0.9, size=n) for _ in range(S - 2)]
+        + [rng.normal(size=m), rng.normal(size=m)]
+    )
+    lb = np.zeros((S, n))
+    lb[3] = 0.05
+    ub = np.ones((S, n))
+    ref = solve_lp_batch(c, A, b_stack, lb_stack=lb, ub_stack=ub)
+    dev = solve_lp_batch_jax(c, A, b_stack, lb_stack=lb, ub_stack=ub)
+    assert len(dev) == S
+    for s in range(S):
+        assert dev[s].status == ref[s].status, s
+        assert dev[s].pivots == ref[s].pivots, s
+        if ref[s].ok:
+            assert dev[s].fun == pytest.approx(ref[s].fun, rel=1e-9, abs=1e-9)
+            assert np.allclose(dev[s].x, ref[s].x, atol=1e-8)
+
+
+@pytest.mark.slow
+def test_batched_backend_jax_same_grid_point():
+    """Acceptance pin: ``generate_policy_matrix_batched(backend="jax")``
+    lands on the same (rho, t_bar) grid point as the numpy lockstep sweep
+    across a randomized Eq.-14 suite (dense and sparse connectivity)."""
+    pytest.importorskip("jax")
+
+    cases = [(8, 0, False), (10, 1, False), (12, 2, True), (9, 3, True)]
+    for M, seed, sparse in cases:
+        T = hetero_times(M, seed)
+        d = None
+        if sparse:
+            d = np.ones((M, M)) - np.eye(M)
+            rng = np.random.default_rng(100 + seed)
+            i, j = rng.integers(0, M, 2)
+            while i == j:
+                i, j = rng.integers(0, M, 2)
+            d[i, j] = d[j, i] = 0.0
+        pn = policy.generate_policy_matrix_batched(0.9, 6, 6, T, d=d)
+        pj = policy.generate_policy_matrix_batched(
+            0.9, 6, 6, T, d=d, backend="jax"
+        )
+        assert pj.rho == pn.rho, (M, seed)
+        assert pj.t_bar == pn.t_bar, (M, seed)
+        assert pj.ok == pn.ok
+        assert np.allclose(pj.P, pn.P, atol=1e-12)
+
+
+def test_batched_backend_rejects_unknown():
+    T = hetero_times(6, 0)
+    with pytest.raises(ValueError, match="backend"):
+        policy.generate_policy_matrix_batched(0.9, 4, 4, T, backend="torch")

@@ -479,3 +479,106 @@ def test_degraded_results_never_enter_last_good():
     second = srv.request(make_T(8, 47) + 6.0)  # stale <- still good
     assert first is good and second is good
     assert srv.stats.n_stale_served == 2
+
+
+# --------------------------------------------------------------------------
+# Rung metadata (PR 10: consumed by the RPC front-end and the E2E pin)
+# --------------------------------------------------------------------------
+
+
+def test_request_meta_rungs_clean_path():
+    srv = PolicyServer(alpha=0.05)
+    T = make_T(8, 60)
+    r1, m1 = srv.request_meta(T)
+    r2, m2 = srv.request_meta(T)
+    assert m1["rung"] == "fresh" and m2["rung"] == "hit"
+    assert r2 is r1
+    assert m1["ms"] >= 0.0 and m2["ms"] >= 0.0
+
+
+def test_request_meta_rungs_degraded_path():
+    from repro.scenarios import ChaosInjector
+
+    srv = PolicyServer(alpha=0.05, max_retries=0,
+                       chaos=ChaosInjector(seed=3))
+    good, m0 = srv.request_meta(make_T(8, 61))
+    assert m0["rung"] == "fresh"
+    srv.chaos.solver_fail_rate = 1.0
+    stale, m1 = srv.request_meta(make_T(8, 61) + 2.0)
+    assert m1["rung"] == "stale" and stale is good
+    fresh_d = np.ones((8, 8)) - np.eye(8)
+    fresh_d[0, 5] = fresh_d[5, 0] = 0.0  # new edge set: no stale to serve
+    uni, m2 = srv.request_meta(make_T(8, 62), d=fresh_d)
+    assert m2["rung"] == "uniform" and not uni.ok
+
+
+def test_request_meta_coalesced_rung():
+    srv = PolicyServer(alpha=0.05)
+    T = make_T(10, 63)
+    rungs = []
+    lock = threading.Lock()
+
+    def work():
+        _, meta = srv.request_meta(T)
+        with lock:
+            rungs.append(meta["rung"])
+
+    threads = [threading.Thread(target=work) for _ in range(6)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert rungs.count("fresh") == 1
+    assert set(rungs) <= {"fresh", "coalesced", "hit"}
+
+
+def test_normalize_instance_shared_helper():
+    """Module-level normalize_instance is what both the server's cache
+    key and the shard router's route hash see: inf links die, the
+    diagonal drops, and off-edge T entries zero out."""
+    from repro.serve.policy import normalize_instance
+
+    T = make_T(6, 64)
+    T[1, 4] = T[4, 1] = np.inf
+    Tn, dn = normalize_instance(T, None)
+    assert dn[1, 4] == 0.0 and dn[4, 1] == 0.0
+    assert Tn[1, 4] == 0.0 and np.all(np.diag(dn) == 0.0)
+
+
+# --------------------------------------------------------------------------
+# Chaos queue channel (PR 10: admission-control seam)
+# --------------------------------------------------------------------------
+
+
+def test_chaos_queue_channel_seeded_and_counted():
+    from repro.scenarios import ChaosInjector
+
+    a = ChaosInjector(seed=11, queue_delay_rate=0.5, queue_delay_ms=25.0)
+    b = ChaosInjector(seed=11, queue_delay_rate=0.5, queue_delay_ms=25.0)
+    seq_a = [a.injected_queue_delay_ms() for _ in range(50)]
+    seq_b = [b.injected_queue_delay_ms() for _ in range(50)]
+    assert seq_a == seq_b  # seeded: identical schedules
+    assert set(seq_a) == {0.0, 25.0}
+    assert a.n_queue_delays == sum(x > 0 for x in seq_a)
+    with pytest.raises(ValueError, match="queue_delay_rate"):
+        ChaosInjector(queue_delay_rate=1.5)
+
+
+def test_chaos_queue_stream_does_not_perturb_existing_channels():
+    """The queue stream is spawned child #4; children are deterministic
+    by index, so the solver channel's fault schedule is identical to what
+    a 4-stream (pre-PR-10) injector drew for the same seed."""
+    import numpy as _np
+    from repro.scenarios import ChaosInjector
+
+    inj = ChaosInjector(seed=9, solver_fail_rate=0.3)
+    legacy = _np.random.default_rng(_np.random.SeedSequence(9).spawn(4)[0])
+    faults = []
+    for _ in range(40):
+        try:
+            inj.maybe_fail_solver()
+            faults.append(False)
+        except Exception:
+            faults.append(True)
+    expect = [bool(legacy.uniform() < 0.3) for _ in range(40)]
+    assert faults == expect
